@@ -1,0 +1,58 @@
+"""Fig. 4 analogue: latency-energy trade-off scatter.  Each point is a
+(path, policy, qps) config; output is the Pareto-frontier data the
+paper plots (FastAPI points low-latency; batching better joules/req
+under load; the bio-controller shifts everything down-left)."""
+from __future__ import annotations
+
+from benchmarks.common import classifier_setup, latency_models_from_engine
+from repro.core import AdmissionController, DecayingThreshold
+from repro.serving import (ClosedLoopSimulator, DirectPath, DynamicBatcher,
+                           poisson_arrivals)
+
+N = 2000
+
+
+def run() -> list[dict]:
+    cfg, params, engine, oracle, *_ = classifier_setup(n=N)
+    lat_d, lat_b = latency_models_from_engine(engine, 32)
+    base_qps = 0.5 / lat_d.step_time(1)
+    rows = []
+    for qps_mult in (0.5, 1.5, 3.0):
+        for path in ("direct", "batched", "auto"):
+            for policy in ("open", "bio"):
+                ctrl = AdmissionController(
+                    threshold=DecayingThreshold(1.0, 0.45, 3.0),
+                    enabled=policy == "bio")
+                sim = ClosedLoopSimulator(
+                    oracle=oracle, controller=ctrl,
+                    direct=DirectPath(lat_d),
+                    batched=DynamicBatcher(lat_b, max_batch_size=32,
+                                           queue_window_s=0.006),
+                    path=path)
+                m = sim.run(poisson_arrivals(
+                    N, base_qps * qps_mult, seed=11))
+                rows.append({
+                    "path": path, "policy": policy,
+                    "load_x": qps_mult,
+                    "mean_latency_ms": round(m.mean_latency_s * 1e3, 3),
+                    "p95_ms": round(m.p95_latency_s * 1e3, 3),
+                    "joules_per_req": round(m.energy_j / m.n, 5),
+                    "admission": round(float(m.admission_rate), 3),
+                })
+    return rows
+
+
+def check(rows) -> dict:
+    open_pts = [r for r in rows if r["policy"] == "open"]
+    bio_pts = [r for r in rows if r["policy"] == "bio"]
+    j_open = sum(r["joules_per_req"] for r in open_pts) / len(open_pts)
+    j_bio = sum(r["joules_per_req"] for r in bio_pts) / len(bio_pts)
+    return {
+        "bio_shifts_pareto_down": j_bio < j_open,
+        "avg_joules_saving_pct": round(100 * (j_open - j_bio) / j_open, 1),
+    }
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

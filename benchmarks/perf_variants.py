@@ -1,0 +1,75 @@
+"""§Perf variant comparison: aggregates the hillclimb runs
+(results/dryrun/*__<suffix>.json) into before/after tables per pair."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+_PAIRS = {
+    "A dbrx-132b x train_4k": "dbrx-132b__train_4k__single",
+    "B recurrentgemma-2b x prefill_32k":
+        "recurrentgemma-2b__prefill_32k__single",
+    "C llama3-405b x decode_32k": "llama3-405b__decode_32k__single",
+    # pad-heads generalisation beyond the three pairs
+    "D granite-moe-3b x train_4k":
+        "granite-moe-3b-a800m__train_4k__single",
+    "E minicpm3-4b x prefill_32k": "minicpm3-4b__prefill_32k__single",
+}
+
+
+def _load(stem: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, stem + "*.json"))):
+        name = os.path.basename(path)[:-5]
+        suffix = name[len(stem):] or "(baseline)"
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        out.append({
+            "variant": suffix.lstrip("_") or "(baseline)",
+            "step_ms": round(r["step_time_s"] * 1e3, 1),
+            "compute_ms": round(r["compute_s"] * 1e3, 1),
+            "memory_ms": round(r["memory_s"] * 1e3, 1),
+            "collective_ms": round(r["collective_s"] * 1e3, 1),
+            "bottleneck": r["bottleneck"],
+            "args_gib": round((rec["memory"]["argument_bytes"] or 0)
+                              / 2 ** 30, 1),
+        })
+    return out
+
+
+def run() -> list[dict]:
+    rows = []
+    for pair, stem in _PAIRS.items():
+        for r in _load(stem):
+            rows.append({"pair": pair, **r})
+    return rows
+
+
+def check(rows) -> dict:
+    out = {}
+    for pair in _PAIRS:
+        rs = [r for r in rows if r["pair"] == pair]
+        if not rs:
+            continue
+        base = next((r for r in rs if r["variant"] == "(baseline)"), rs[0])
+        best = min(rs, key=lambda r: r["step_ms"])
+        out[pair.split()[0]] = {
+            "baseline_ms": base["step_ms"],
+            "best_ms": best["step_ms"],
+            "best_variant": best["variant"],
+            "speedup_x": round(base["step_ms"] / best["step_ms"], 2),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)
+    print(check(run()))

@@ -1,0 +1,100 @@
+"""§Roofline aggregation: reads results/dryrun/*.json (produced by
+launch/dryrun.py on the production meshes) and emits the per
+(arch x shape x mesh) roofline table — three terms, bottleneck,
+MODEL_FLOPS/HLO_FLOPS ratio, and a one-line 'what would move the
+dominant term' note per row."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+_ADVICE = {
+    ("compute",): "increase arithmetic intensity: larger per-chip batch "
+                  "or fewer redundant (remat) flops",
+    ("memory",): "cut HBM traffic: bf16 end-to-end operands, fused "
+                 "attention (Pallas flash/decode kernel), int8 cache",
+    ("collective",): "re-shard to cut collective volume: fewer "
+                     "all-gathers per layer (sequence-parallel norm), "
+                     "overlap collectives with compute",
+}
+
+
+def load() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append(rec)
+    return rows
+
+
+def run() -> list[dict]:
+    out = []
+    for rec in load():
+        if rec.get("status") == "skip":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "status": "skip",
+                        "note": rec["variant"]})
+            continue
+        if rec.get("status") != "ok":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "status": "FAIL",
+                        "note": rec.get("error", "?")[:120]})
+            continue
+        r = rec["roofline"]
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "mesh": rec["mesh"], "status": "ok",
+            "variant": rec.get("variant", "native"),
+            "compute_ms": round(r["compute_s"] * 1e3, 3),
+            "memory_ms": round(r["memory_s"] * 1e3, 3),
+            "collective_ms": round(r["collective_s"] * 1e3, 3),
+            "bottleneck": r["bottleneck"],
+            "step_ms": round(r["step_time_s"] * 1e3, 3),
+            "useful_flops_ratio": round(
+                rec.get("useful_flops_ratio") or 0.0, 3),
+            "energy_j_step": round(rec.get("energy_j_per_step", 0.0), 1),
+            "advice": _ADVICE[(r["bottleneck"],)],
+        })
+    return out
+
+
+def check(rows) -> dict:
+    ok = [r for r in rows if r["status"] == "ok"]
+    fail = [r for r in rows if r["status"] == "FAIL"]
+    return {
+        "n_ok": len(ok), "n_skip": len([r for r in rows
+                                        if r["status"] == "skip"]),
+        "n_fail": len(fail),
+        "bottleneck_histogram": {
+            b: len([r for r in ok if r["bottleneck"] == b])
+            for b in ("compute", "memory", "collective")},
+    }
+
+
+def markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | variant | compute ms | memory ms | "
+           "collective ms | bottleneck | useful FLOPs | E (J/step) |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r['status']}: {r.get('note','')} | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['variant']} | {r['compute_ms']} | {r['memory_ms']} | "
+            f"{r['collective_ms']} | **{r['bottleneck']}** | "
+            f"{r['useful_flops_ratio']} | {r['energy_j_step']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown(rows))
+    print()
+    print(check(rows))

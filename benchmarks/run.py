@@ -1,0 +1,71 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
+benchmark body; derived = its headline metric) and writes full row
+dumps under results/benchmarks/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks import (controller_dynamics, fig3_throughput,
+                        fig4_tradeoff, fig5_landscape, perf_variants,
+                        roofline, rule_ablation, table2_dual_path,
+                        table3_ablation)
+
+OUT = os.environ.get("BENCH_OUT", "results/benchmarks")
+
+_BENCHES = [
+    ("table2_dual_path", table2_dual_path,
+     lambda c: f"direct_speedup_x={c['speedup_distilbert']}"),
+    ("table3_ablation", table3_ablation,
+     lambda c: (f"time_saving={c['time_saving_pct']}%"
+                f";admission={c['admission_rate']}"
+                f";acc_drop={c['accuracy_drop_pp']}pp")),
+    ("fig3_throughput", fig3_throughput,
+     lambda c: f"batched_gain_x={c['batched_gain_x']}"),
+    ("fig4_tradeoff", fig4_tradeoff,
+     lambda c: f"joules_saving={c['avg_joules_saving_pct']}%"),
+    ("fig5_landscape", fig5_landscape,
+     lambda c: f"n_basins={c['n_basins']}"),
+    ("controller_dynamics", controller_dynamics,
+     lambda c: f"tau_monotone={c['tau_monotone_decreasing']}"),
+    ("roofline", roofline,
+     lambda c: (f"ok={c['n_ok']};fail={c['n_fail']};"
+                f"bottlenecks={c['bottleneck_histogram']}")),
+    ("perf_variants", perf_variants,
+     lambda c: ";".join(f"{k}:{v['speedup_x']}x({v['best_variant']})"
+                        for k, v in c.items())),
+    ("rule_ablation", rule_ablation,
+     lambda c: (f"le_saves={c['le_saves_energy']};"
+                f"ge_saves={c['ge_saves_energy']};"
+                f"ge_skips_easier={c['ge_skips_easier']}")),
+]
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod, derive in _BENCHES:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+            chk = mod.check(rows)
+            us = (time.perf_counter() - t0) * 1e6
+            with open(os.path.join(OUT, f"{name}.json"), "w") as f:
+                json.dump({"rows": rows, "check": chk}, f, indent=2,
+                          default=str)
+            print(f"{name},{us:.0f},{derive(chk)}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            us = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{us:.0f},ERROR:{type(e).__name__}:{e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

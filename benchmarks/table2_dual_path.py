@@ -1,0 +1,100 @@
+"""Table II analogue: direct (FastAPI+ORT) vs managed-batching
+(Triton) path — latency / std / throughput / energy / CO2 at batch=1,
+for both paper models (DistilBERT-style classifier, ResNet-18).
+
+The paper's numbers come from HTTP stacks on an RTX GPU; ours are
+measured walltimes of the jit'd engines on this host plus the Triton-
+like orchestration overhead (queue window + scheduler fixed cost), with
+energy from the v5e power model over busy time.  The reproduction
+target is the QUALITATIVE ordering: direct wins large at batch=1,
+batching amortises under concurrency (fig3 covers that side).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import (classifier_setup, resnet_setup, time_fn,
+                               latency_models_from_engine)
+from repro.core import EnergyModel
+from repro.models import resnet as resnet_mod
+from repro.telemetry import CarbonTracker
+
+ITERS = 100          # paper: "100 iterations per configuration"
+
+
+def _row(model, framework, timed, energy_j, iters=ITERS):
+    em = EnergyModel()
+    kwh = em.kwh(energy_j)
+    return {
+        "model": model, "framework": framework, "batch": 1,
+        "avg_latency_ms": round(timed.mean_ms, 3),
+        "std_ms": round(timed.std_ms, 3),
+        "throughput_qps": round(timed.qps, 1),
+        "energy_kwh": round(kwh, 9),
+        "co2_kg": round(em.co2_kg(energy_j), 9),
+    }
+
+
+def run() -> list[dict]:
+    em = EnergyModel()
+    rows = []
+
+    # --- DistilBERT-analogue classifier --------------------------------
+    cfg, params, engine, *_ = classifier_setup()
+    toks = np.zeros((1, 32), np.int32)
+    direct_lat, batched_lat = latency_models_from_engine(engine, 32)
+
+    t_direct = time_fn(lambda: engine.classify(toks)[0], iters=ITERS)
+    e_direct = em.p_active * (t_direct.mean_ms / 1e3) * ITERS
+    rows.append(_row("distilbert", "direct(FastAPI+ORT)", t_direct,
+                     e_direct))
+
+    # batched path at batch=1: same compute + orchestration overhead
+    over_ms = (batched_lat.t_fixed_s - direct_lat.t_fixed_s) * 1e3
+    t_b = time_fn(lambda: engine.classify(toks)[0], iters=ITERS)
+    t_b.mean_ms += over_ms
+    t_b.qps = 1000.0 / t_b.mean_ms
+    e_b = em.p_active * (t_b.mean_ms / 1e3) * ITERS
+    rows.append(_row("distilbert", "batched(Triton)", t_b, e_b))
+
+    # --- ResNet-18 -------------------------------------------------------
+    rparams, rfwd, hw = resnet_setup()
+    img = jax.numpy.zeros((1, hw, hw, 3))
+    t_r = time_fn(lambda: rfwd(rparams, img), iters=ITERS)
+    e_r = em.p_active * (t_r.mean_ms / 1e3) * ITERS
+    rows.append(_row("resnet18", "direct(FastAPI+ORT)", t_r, e_r))
+
+    t_rb = time_fn(lambda: rfwd(rparams, img), iters=ITERS)
+    t_rb.mean_ms += over_ms
+    t_rb.qps = 1000.0 / t_rb.mean_ms
+    e_rb = em.p_active * (t_rb.mean_ms / 1e3) * ITERS
+    rows.append(_row("resnet18", "batched(Triton)", t_rb, e_rb))
+    return rows
+
+
+def check(rows) -> dict:
+    """Paper Table II qualitative claims."""
+    by = {(r["model"], r["framework"].split("(")[0]): r for r in rows}
+    d_bert = by[("distilbert", "direct")]
+    t_bert = by[("distilbert", "batched")]
+    d_res = by[("resnet18", "direct")]
+    t_res = by[("resnet18", "batched")]
+    return {
+        "direct_faster_distilbert": d_bert["avg_latency_ms"]
+        < t_bert["avg_latency_ms"],
+        "direct_faster_resnet": d_res["avg_latency_ms"]
+        < t_res["avg_latency_ms"],
+        "direct_lower_energy": d_bert["energy_kwh"] <= t_bert["energy_kwh"],
+        "speedup_distilbert": round(t_bert["avg_latency_ms"]
+                                    / d_bert["avg_latency_ms"], 2),
+        "speedup_resnet": round(t_res["avg_latency_ms"]
+                                / d_res["avg_latency_ms"], 2),
+    }
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print(check(rows))

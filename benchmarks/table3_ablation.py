@@ -1,0 +1,102 @@
+"""Table III reproduction — the paper's headline ablation.
+
+Standard (open-loop) vs Bio-Controller on the same request stream:
+total time, latency/request, accuracy (synthetic SST-2 stand-in),
+admission rate.  Paper: -42% time/energy at -0.5pp accuracy with a 58%
+admission rate; we target the same SHAPE (the exact rejection share
+depends on tau_inf, which we also sweep — see derived output).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import classifier_setup, latency_models_from_engine
+from repro.core import (AdaptiveThreshold, AdmissionController,
+                        DecayingThreshold)
+from repro.serving import (ClosedLoopSimulator, DirectPath, DynamicBatcher,
+                           closed_loop_arrivals)
+
+N = 2000
+
+
+def _run_policy(oracle, direct_lat, batched_lat, *, enabled: bool,
+                tau_inf: float = 0.6, adaptive_target: float | None = None):
+    if adaptive_target is not None:
+        # closed-loop PI trim pinned to the paper's 58% admission rate
+        th = AdaptiveThreshold(base=DecayingThreshold(1.0, tau_inf, 3.0),
+                               target_rate=adaptive_target, kp=0.6,
+                               ki=0.08)
+    else:
+        th = DecayingThreshold(tau0=1.0, tau_inf=tau_inf, k=3.0)
+    ctrl = AdmissionController(threshold=th, enabled=enabled)
+    sim = ClosedLoopSimulator(
+        oracle=oracle, controller=ctrl,
+        direct=DirectPath(direct_lat),
+        batched=DynamicBatcher(batched_lat, max_batch_size=16,
+                               queue_window_s=0.004),
+        path="auto")
+    reqs = closed_loop_arrivals(N, think_s=direct_lat.t_fixed_s * 0.8)
+    return sim.run(reqs)
+
+
+def run() -> list[dict]:
+    cfg, params, engine, oracle, toks, labels, data = classifier_setup(
+        n=N)
+    direct_lat, batched_lat = latency_models_from_engine(engine, 32)
+
+    m_std = _run_policy(oracle, direct_lat, batched_lat, enabled=False)
+    m_bio = _run_policy(oracle, direct_lat, batched_lat, enabled=True)
+
+    def row(name, m):
+        return {
+            "policy": name,
+            "total_time_s": round(m.total_time_s, 4),
+            "busy_s": round(m.busy_s, 4),
+            "latency_per_req_ms": round(m.mean_latency_s * 1e3, 3),
+            "accuracy": round(m.accuracy, 4),
+            "admission_rate": round(float(m.admission_rate), 4),
+            "energy_kwh": round(m.energy_kwh, 9),
+        }
+
+    m_adapt = _run_policy(oracle, direct_lat, batched_lat, enabled=True,
+                          adaptive_target=0.58)
+    rows = [row("standard(open-loop)", m_std),
+            row("bio-controller", m_bio),
+            row("bio-adaptive(target=0.58)", m_adapt)]
+
+    # tau_inf sweep: admission rate is the policy dial (paper: 58%)
+    for tau in (0.4, 0.5, 0.6, 0.7):
+        m = _run_policy(oracle, direct_lat, batched_lat, enabled=True,
+                        tau_inf=tau)
+        rows.append(row(f"bio(tau_inf={tau})", m))
+    return rows
+
+
+def check(rows) -> dict:
+    """Headline = the adaptive row: the PI loop pins the paper's 58%
+    admission rate, so the deltas are compared at the paper's own
+    operating point.  (The paper's -42% equals its rejection share
+    because it prices skips at zero; we charge the proxy pass, so our
+    saving at 58% admission is smaller but honest.)"""
+    std = rows[0]
+    bio = rows[2]                             # bio-adaptive(target=.58)
+    dt = (std["busy_s"] - bio["busy_s"]) / std["busy_s"]
+    de = (std["energy_kwh"] - bio["energy_kwh"]) / std["energy_kwh"]
+    return {
+        "time_saving_pct": round(100 * dt, 1),       # paper: 42%
+        "energy_saving_pct": round(100 * de, 1),     # paper: ~42%
+        "admission_rate": bio["admission_rate"],     # paper: 0.58
+        "decay_admission_rate": rows[1]["admission_rate"],
+        "accuracy_drop_pp": round(100 * (std["accuracy"]
+                                         - bio["accuracy"]), 2),
+        "paper_shape_ok": bool(dt > 0.15 and bio["admission_rate"] < 0.9
+                               and (std["accuracy"] - bio["accuracy"])
+                               < 0.10),
+    }
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print(check(rows))

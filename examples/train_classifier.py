@@ -1,0 +1,50 @@
+"""Train the DistilBERT-style classifier (full + early-exit head) for a
+few hundred steps and report both heads' accuracy — the model substrate
+of the ablation.
+
+    PYTHONPATH=src python examples/train_classifier.py --steps 300
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.models import distilbert
+from repro.serving import ClassifierEngine
+from repro.telemetry import CarbonTracker, Tracker
+from repro.training import ClassificationData, train_classifier
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=32)
+args = ap.parse_args()
+
+cfg = distilbert.config(n_layers=3, d_model=96, n_heads=4, d_ff=192,
+                        vocab=800, max_pos=48)
+params = distilbert.init(cfg, jax.random.PRNGKey(0))
+data = ClassificationData(vocab=800, seq_len=32, seed=3)
+
+tracker = Tracker()
+run = tracker.start_run("train-classifier")
+run.log_params(steps=args.steps, batch=args.batch, **cfg)
+carbon = CarbonTracker()
+carbon.start()
+params, log = train_classifier(cfg, params, data.train_batches(args.batch),
+                               steps=args.steps, log_every=50)
+rep = carbon.stop(args.steps)
+for rec in log:
+    run.log_metrics(rec["step"], ce=rec["ce"], ce_exit=rec["ce_exit"])
+
+engine = ClassifierEngine(cfg, params, exit_layer=1)
+toks, labels, _ = data.sample(1500)
+full_pred, _ = engine.classify(toks)
+proxy_pred, entropy, _, _ = engine.proxy_scores(toks)
+acc_full = float(np.mean(full_pred == labels))
+acc_proxy = float(np.mean(proxy_pred == labels))
+run.log_metrics(args.steps, acc_full=acc_full, acc_proxy=acc_proxy)
+run.log_artifact("carbon.json", rep)
+print(f"\nfull-model accuracy : {acc_full:.3f}")
+print(f"early-exit accuracy : {acc_proxy:.3f}")
+print(f"training energy     : {rep['energy_kwh']:.2e} kWh "
+      f"({rep['co2_kg']:.2e} kg CO2, {rep['region']})")
+print("run dir:", run.finish())

@@ -1,0 +1,27 @@
+"""The paper's primary contribution: closed-loop, energy-aware
+admission control with bio-inspired (decaying-threshold) dynamics.
+
+Public surface:
+  - CostModel / CostWeights        (Eq. 1: J = aL + bE + cC)
+  - DecayingThreshold / AdaptiveThreshold   (Eq. 3: tau(t) decay)
+  - AdmissionController / gate_batch        (Appendix A algorithm)
+  - EnergyModel / EnergyMeter / RooflineTerms
+  - CostLandscape / OperatingState          (Fig. 1/5 basin selection)
+"""
+from repro.core.controller import (AdmissionController, CongestionState,
+                                   Decision, gate_batch)
+from repro.core.cost import CostModel, CostWeights, Normalizer
+from repro.core.energy import (EnergyMeter, EnergyModel, RooflineTerms,
+                               HBM_BW, ICI_BW, PEAK_FLOPS_BF16)
+from repro.core.landscape import (CostLandscape, LatencyModel,
+                                  OperatingState)
+from repro.core.threshold import AdaptiveThreshold, DecayingThreshold
+
+__all__ = [
+    "AdmissionController", "CongestionState", "Decision", "gate_batch",
+    "CostModel", "CostWeights", "Normalizer",
+    "EnergyMeter", "EnergyModel", "RooflineTerms",
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16",
+    "CostLandscape", "LatencyModel", "OperatingState",
+    "AdaptiveThreshold", "DecayingThreshold",
+]

@@ -1,0 +1,133 @@
+"""Energy accounting — the CodeCarbon + NVML analogue, TPU-native.
+
+Two signal sources feed the controller's E(x):
+
+1. **Analytic model** (``EnergyModel``): joules derived from compiled
+   FLOP/byte counts via the roofline time estimate
+       t = max(FLOPs/peak, bytes/hbm_bw, coll_bytes/ici_bw)
+       E = P_active * t + P_idle * wall
+   using TPU v5e constants.  This is what the dry-run/benchmarks report
+   (no wall-plug meter exists for a compiled-only artifact).
+2. **Measured EWMA** (``EnergyMeter``): rolling joules/request from
+   observed walltimes — the live closed-loop signal, exactly the role
+   CodeCarbon+NVML play in the paper.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+# --- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+P_ACTIVE_W = 200.0              # active power draw
+P_IDLE_W = 60.0                 # idle power draw
+GRID_KG_CO2_PER_KWH = 0.4       # default grid carbon intensity
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    """The three §Roofline terms, in seconds (per step, per chip)."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+
+@dataclass(frozen=True)
+class EnergyModel:
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    p_active: float = P_ACTIVE_W
+    p_idle: float = P_IDLE_W
+
+    def roofline(self, flops: float, bytes_: float, coll_bytes: float,
+                 n_chips: int = 1) -> RooflineTerms:
+        return RooflineTerms(
+            compute_s=flops / (n_chips * self.peak_flops),
+            memory_s=bytes_ / (n_chips * self.hbm_bw),
+            collective_s=coll_bytes / (n_chips * self.ici_bw))
+
+    def joules(self, terms: RooflineTerms, n_chips: int = 1) -> float:
+        """Modelled energy for one step across the slice."""
+        t = terms.step_time_s
+        return n_chips * (self.p_active * t)
+
+    def joules_idle(self, wall_s: float, n_chips: int = 1) -> float:
+        return n_chips * self.p_idle * wall_s
+
+    @staticmethod
+    def kwh(joules: float) -> float:
+        return joules / 3.6e6
+
+    @staticmethod
+    def co2_kg(joules: float,
+               grid=GRID_KG_CO2_PER_KWH) -> float:
+        return EnergyModel.kwh(joules) * grid
+
+
+@dataclass
+class EnergyMeter:
+    """Rolling joules/request EWMA — the controller's live E(x) signal.
+
+    On real hardware the sample source is NVML/CodeCarbon; here each
+    sample is (walltime x modelled power), or an explicit joules value
+    from the analytic model during simulation.
+    """
+    model: EnergyModel = field(default_factory=EnergyModel)
+    ewma: float = 0.2
+    n_chips: int = 1
+
+    _j_per_req: float = field(default=0.0, init=False)
+    _total_j: float = field(default=0.0, init=False)
+    _n: int = field(default=0, init=False)
+    _t0: float | None = field(default=None, init=False)
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, n_requests: int = 1) -> float:
+        """Close a measurement window; returns joules for the window."""
+        assert self._t0 is not None, "start() not called"
+        wall = time.perf_counter() - self._t0
+        self._t0 = None
+        j = self.model.p_active * wall * self.n_chips
+        self.record(j, n_requests)
+        return j
+
+    def record(self, joules: float, n_requests: int = 1) -> None:
+        self._total_j += joules
+        self._n += n_requests
+        per = joules / max(n_requests, 1)
+        if self._j_per_req == 0.0:
+            self._j_per_req = per
+        else:
+            self._j_per_req = ((1 - self.ewma) * self._j_per_req
+                               + self.ewma * per)
+
+    @property
+    def joules_per_request(self) -> float:
+        return self._j_per_req
+
+    @property
+    def total_joules(self) -> float:
+        return self._total_j
+
+    @property
+    def total_kwh(self) -> float:
+        return EnergyModel.kwh(self._total_j)
+
+    @property
+    def total_co2_kg(self) -> float:
+        return EnergyModel.co2_kg(self._total_j)

@@ -1,0 +1,101 @@
+"""Flash-decode Pallas kernel — one new token vs a long KV cache.
+
+The dominant op of the decode_32k / long_500k shapes: q [B, H, hd]
+against k/v [B, K, S, hd] with per-slot absolute positions (supports
+ring-buffered sliding-window caches).  Grid (B, H, kv_blocks), KV
+innermost, online softmax in VMEM scratch.  The cache never leaves HBM
+except for the [k_blk, hd] tile streamed through VMEM — this kernel is
+purely HBM-bandwidth bound, which is exactly what the roofline says.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                   k_blk: int, skv: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[:] = jnp.full(m_ref.shape, _NEG, jnp.float32)
+        l_ref[:] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[:, :] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # [1, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                   # [k_blk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    kv_pos = pos_ref[0]                                   # [k_blk]
+    cur = cur_ref[0]                                      # scalar int32
+
+    s = (q @ k.T)[0]                                      # [k_blk]
+    col = ki * k_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    ok = (col < skv) & (kv_pos >= 0) & (kv_pos <= cur)
+    if window:
+        ok = ok & (cur - kv_pos < window)
+    s = jnp.where(ok, s, _NEG)
+
+    m_old = m_ref[0]
+    m_new = jnp.maximum(m_old, jnp.max(s))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[0] = l_ref[0] * corr + jnp.sum(p)
+    acc_ref[0, :] = acc_ref[0, :] * corr + p @ v
+    m_ref[0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, 0] = (acc_ref[0, :] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "k_blk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_pos: jax.Array, cur_pos: jax.Array, *,
+                     window: int = 0, k_blk: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q [B,H,hd]; k/v [B,K,S,hd]; kv_pos [B,S]; cur_pos [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    K, S = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    k_blk = min(k_blk, max(S, 8))
+    nk = -(-S // k_blk)
+    pad = nk * k_blk - S
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    pp = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               k_blk=k_blk, skv=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, k_blk, hd),
+                         lambda b, h, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, k_blk, hd),
+                         lambda b, h, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, k_blk), lambda b, h, ki: (b, ki)),
+            pl.BlockSpec((1,), lambda b, h, ki: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((1, hd), jnp.float32)],
+        interpret=interpret,
+    )(q[:, :, None, :], kp, vp, pp, cur_pos.astype(jnp.int32))
+    return out[:, :, 0, :]

@@ -1,0 +1,56 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Dispatch policy:
+  - on TPU backends the compiled Pallas kernel runs natively;
+  - on CPU (this container) ``interpret=True`` executes the kernel body
+    in Python for correctness, or callers can pick the pure-jnp oracle
+    (``impl='ref'``) which is what the production model code uses for
+    XLA-lowered rooflines.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import entropy as _ent
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def entropy_stats(logits, *, impl: str = "auto"):
+    """logits [B,V] -> (entropy, max_prob, argmax).  The controller's
+    L(x) hot-spot (vocab streaming, one HBM pass)."""
+    if impl == "ref":
+        return _ref.entropy_stats(logits)
+    return _ent.entropy_stats(logits, interpret=not _on_tpu())
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    impl: str = "auto"):
+    if impl == "ref":
+        return _ref.flash_attention(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, interpret=not _on_tpu())
+
+
+def decode_attention(q, k, v, kv_pos, cur_pos, *, window=0,
+                     impl: str = "auto"):
+    if impl == "ref":
+        return _ref.decode_attention(q, k, v, kv_pos, cur_pos,
+                                     window=window)
+    return _da.decode_attention(q, k, v, kv_pos, cur_pos, window=window,
+                                interpret=not _on_tpu())
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, impl: str = "auto"):
+    """Mamba-2 SSD chunked scan (attention-free archs' hot-spot)."""
+    from repro.kernels import ssd_scan as _ssd
+    if impl == "ref":
+        return _ref.ssd_scan(x, dt, A, Bm, Cm)
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         interpret=not _on_tpu())

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated
+against (tests sweep shapes/dtypes and assert_allclose kernel vs ref).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def entropy_stats(logits: jax.Array):
+    """logits [B, V] -> (entropy [B], max_prob [B], argmax [B] int32).
+
+    entropy is the softmax entropy in nats; max_prob the top-1
+    probability (the controller's confidence proxy).
+    """
+    x = logits.astype(jnp.float32)
+    p = jax.nn.softmax(x, axis=-1)
+    logp = jax.nn.log_softmax(x, axis=-1)
+    ent = -jnp.sum(p * logp, axis=-1)
+    return ent, jnp.max(p, axis=-1), jnp.argmax(x, axis=-1).astype(jnp.int32)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: int = 0) -> jax.Array:
+    """q [B,H,Sq,hd], k/v [B,K,Skv,hd] (GQA: H = K*G) -> [B,H,Sq,hd]."""
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, Sq, hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[2])
+    ok = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_pos: jax.Array, cur_pos: jax.Array, *,
+                     window: int = 0) -> jax.Array:
+    """Single-token attention against a (possibly ring) cache.
+
+    q [B,H,hd]; k/v [B,K,S,hd]; kv_pos [B,S] absolute position per slot
+    (-1 = empty); cur_pos [B] the query's absolute position.
+    -> [B,H,hd]
+    """
+    B, H, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, K, G, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qf, k.astype(jnp.float32))
+    valid = (kv_pos >= 0) & (kv_pos <= cur_pos[:, None])
+    if window:
+        valid = valid & (cur_pos[:, None] - kv_pos < window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array) -> jax.Array:
+    """Naive per-token SSD recurrence (zero initial state).
+
+    x [B,S,H,hd]; dt [B,S,H]; A [H]; Bm/Cm [B,S,N] -> y [B,S,H,hd]."""
+    B, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((B, H, hd, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        a = jnp.exp(A[None] * dt[:, t])                       # [B,H]
+        h = (a[:, :, None, None] * h
+             + jnp.einsum("bh,bhd,bn->bhdn", dt[:, t].astype(jnp.float32),
+                          x[:, t].astype(jnp.float32),
+                          Bm[:, t].astype(jnp.float32)))
+        ys.append(jnp.einsum("bn,bhdn->bhd", Cm[:, t].astype(jnp.float32),
+                             h))
+    return jnp.stack(ys, 1).astype(x.dtype)

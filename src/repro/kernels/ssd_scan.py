@@ -1,0 +1,107 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+The attention-free archs' hot-spot (mamba2-780m): per (batch, head) the
+sequence is processed in chunks of Q tokens; the within-chunk quadratic
+term and the cross-chunk recurrence both live in VMEM, with the carried
+state h [hd, N] in scratch — one HBM pass over x/B/C/dt, no [B,S,H,hd,N]
+intermediate ever materialised.
+
+Grid (B, H, n_chunks), chunks innermost so the scratch state threads the
+recurrence; block specs tile x [Q, hd], dt [Q], B/C [Q, N] per chunk.
+
+    la_t = A_h * dt_t                  (log decay, A_h < 0)
+    l    = cumsum(la)
+    att[t,s] = exp(l_t - l_s) * (C_t . B_s) * dt_s   for s <= t
+    y_intra  = att @ x
+    y_inter  = exp(l)_t * (C_t . h)
+    h'       = exp(l_Q) h + sum_s exp(l_Q - l_s) dt_s x_s (x) B_s
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int, seq: int):
+    ci = pl.program_id(2)
+    hi = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[:, :] = jnp.zeros(h_ref.shape, jnp.float32)
+
+    A = a_ref[0]                                       # scalar (per head)
+    x = x_ref[0, :, 0].astype(jnp.float32)             # [Q, hd]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # [Q]
+    B = b_ref[0].astype(jnp.float32)                   # [Q, N]
+    C = c_ref[0].astype(jnp.float32)                   # [Q, N]
+
+    # mask padded tail positions (dt=0 => identity in the recurrence)
+    row = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, dt.shape, 0)
+    dt = jnp.where(row < seq, dt, 0.0)
+
+    la = A * dt                                        # [Q] (<= 0)
+    l = jnp.cumsum(la)
+
+    # intra-chunk quadratic term
+    cb = C @ B.T                                       # [Q, Q]
+    decay = jnp.exp(l[:, None] - l[None, :])
+    q_iota = jax.lax.broadcasted_iota(jnp.int32, cb.shape, 0)
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, cb.shape, 1)
+    att = jnp.where(s_iota <= q_iota, decay * cb * dt[None, :], 0.0)
+    y = att @ x                                        # [Q, hd]
+
+    # inter-chunk term from the carried state
+    h = h_ref[:, :]                                    # [hd, N]
+    y = y + jnp.exp(l)[:, None] * (C @ h.T)
+
+    # state update
+    w = jnp.exp(l[-1] - l) * dt                        # [Q]
+    h_ref[:, :] = jnp.exp(l[-1]) * h + (x * w[:, None]).T @ B
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """x [B,S,H,hd], dt [B,S,H], A [H], Bm/Cm [B,S,N] -> y [B,S,H,hd].
+
+    Zero initial state (prefill); the single-step decode path stays in
+    plain jnp (it is O(1) and memory-trivial).
+    """
+    B_, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q, seq=S)
+    y = pl.pallas_call(
+        kernel,
+        grid=(B_, H, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ci: (h,)),
+            pl.BlockSpec((1, Q, 1, hd), lambda b, h, ci: (b, ci, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, ci: (b, ci, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, hd),
+                               lambda b, h, ci: (b, ci, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B_, nc * Q, H, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), x, dt, Bm, Cm)
+    return y[:, :S]

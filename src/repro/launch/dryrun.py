@@ -1,0 +1,546 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, record memory/cost/collective analysis for §Roofline.
+
+MUST be run as its own process (the first two lines above pin 512
+placeholder host devices before jax initialises).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k --mesh single --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, applicable, get_config,
+                           get_shape, shape_variant)
+from repro.core.energy import EnergyModel
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import moe as moe_mod
+from repro.models import quant
+from repro.models import transformer as tfm
+from repro.training import AdamW, make_train_step
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(ty: str) -> int:
+    """'bf16[8,128,16384]' -> byte size (scalar if no dims)."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", ty)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str, *, scan_trips: int = 1) -> dict:
+    """Wire-byte estimate for every collective in the optimised HLO.
+
+    Post-SPMD HLO prints only the *result* type inline, so per-op wire
+    bytes use the standard ring-collective factors on the result size S
+    with group size g (parsed from replica_groups):
+
+        all-reduce       2 (g-1)/g S      (reduce-scatter + all-gather)
+        all-gather         (g-1)/g S      (S = gathered result)
+        reduce-scatter     (g-1)   S      (S = scattered shard)
+        all-to-all         (g-1)/g S
+        collective-permute          S
+
+    Ops inside a scan-over-layers while body appear once in the HLO but
+    execute ``scan_trips`` times — detected via the op metadata and
+    multiplied accordingly.
+    """
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+ = \(?([a-z0-9]+\[[0-9,]*\])[^=]*? "
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        ty, op = m.group(1), m.group(2)
+        size = _shape_bytes(ty)
+        g = 1
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", s)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm = re.search(r"replica_groups=\{\{([0-9, ]+)\}", s)
+            if gm:
+                g = len(gm.group(1).split(","))
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * (g - 1) / g * size
+            # XLA-CPU promotes bf16 reductions to f32 ("..._promoted"
+            # reducers); a TPU backend all-reduces bf16 natively, so
+            # the wire estimate halves back (verified by probing a
+            # bf16 row-parallel matmul — §Perf pair B, iteration 3).
+            if "promoted" in s and ty.startswith("f32"):
+                wire *= 0.5
+        elif op == "all-gather":
+            wire = (g - 1) / g * size
+        elif op == "reduce-scatter":
+            wire = float(g - 1) * size
+        elif op == "all-to-all":
+            wire = (g - 1) / g * size
+        else:
+            wire = float(size)
+        trips = scan_trips if "/while/body" in s else 1
+        out[op] += wire * trips
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg):
+    return jax.eval_shape(lambda: tfm.init_lm(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg, shape, *, mode: str):
+    """ShapeDtypeStruct stand-ins for every model input (no
+    allocation), matching what the lowered step function consumes."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if mode == "train":
+        out["tokens"] = sds((B, S + 1), jnp.int32)
+        if cfg.family == "encdec":
+            out["enc_embeds"] = sds((B, cfg.enc_seq,
+                                     cfg.enc_d_model or cfg.d_model), dt)
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = sds((B, cfg.n_patches, cfg.d_model), dt)
+    elif mode == "prefill":
+        out["tokens"] = sds((B, S), jnp.int32)
+        if cfg.family == "encdec":
+            out["enc_embeds"] = sds((B, cfg.enc_seq,
+                                     cfg.enc_d_model or cfg.d_model), dt)
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = sds((B, cfg.n_patches, cfg.d_model), dt)
+    else:  # decode: ONE new token against a seq_len cache
+        out["token"] = sds((B, 1), jnp.int32)
+        out["pos"] = sds((), jnp.int32)
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·tokens (the §Roofline 'useful' figure)."""
+    n_act = cfg.n_active_params()
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.mode != "decode" else 1)
+    return 6.0 * n_act * tokens if shape.mode == "train" \
+        else 2.0 * n_act * tokens
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def _moe_activation_sharding(mesh):
+    """Constraint fn for the MoE expert intermediates: token-group dim
+    over the batch axes, expert dim over "model" — both guarded by
+    divisibility (granite's 40 experts stay unsharded).  Without this
+    XLA may replicate the [G,E,C,*] tensors (§Perf pair A it. 3)."""
+    from jax.sharding import NamedSharding
+    from repro.launch.mesh import batch_axes
+
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+
+    def constrain(x, roles):
+        spec = []
+        for dim, role in enumerate(roles):
+            if role == "tokens" and x.shape[dim] % max(bsize, 1) == 0 \
+                    and bsize > 1:
+                spec.append(baxes if len(baxes) > 1 else baxes[0])
+            elif role == "experts" and tp > 1 \
+                    and x.shape[dim] % tp == 0:
+                spec.append("model")
+            else:
+                spec.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return constrain
+
+
+def build_lowered(cfg, shape, mesh, *, fsdp: bool = False,
+                  seq_shard_kv: bool = False, quant_int8: bool = False):
+    """Returns the lowered computation.  Shardings: params via path
+    rules (optional 2D/FSDP), batch over (pod,data), cache per
+    cache_specs (optional sequence-sharded KV)."""
+    B, S = shape.global_batch, shape.seq_len
+    moe_mod.ACTIVATION_SHARDING = _moe_activation_sharding(mesh)
+    p_abs = abstract_params(cfg)
+    p_spec = shd.param_specs(p_abs, mesh, cfg=cfg, fsdp=fsdp)
+    p_shard = shd.to_named(p_spec, mesh)
+    ins = input_specs(cfg, shape, mode=shape.mode)
+    tok_shard = NamedSharding(mesh, shd.tokens_spec(mesh, B))
+    fe_shard = NamedSharding(mesh, shd.frontend_spec(mesh, B))
+    repl = NamedSharding(mesh, P())
+
+    if shape.mode == "train":
+        opt = AdamW()
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        o_shard = shd.to_named(
+            shd.param_specs(o_abs, mesh, cfg=cfg, fsdp=fsdp), mesh)
+        step = make_train_step(cfg, opt)
+
+        batch_abs = {"tokens": ins["tokens"]}
+        batch_shard = {"tokens": tok_shard}
+        if "enc_embeds" in ins:
+            batch_abs["enc_embeds"] = ins["enc_embeds"]
+            batch_shard["enc_embeds"] = fe_shard
+        if "prefix_embeds" in ins:
+            batch_abs["prefix_embeds"] = ins["prefix_embeds"]
+            batch_shard["prefix_embeds"] = fe_shard
+
+        fn = jax.jit(step, in_shardings=(p_shard, o_shard, batch_shard))
+        lowered = fn.lower(p_abs, o_abs, batch_abs)
+        return lowered
+
+    cache_abs = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, S, dtype=jnp.bfloat16))
+    c_shard = shd.to_named(
+        shd.cache_specs(cfg, cache_abs, mesh, B,
+                        seq_shard_kv=seq_shard_kv), mesh)
+
+    if shape.mode == "prefill":
+        def prefill_fn(params, tokens, cache, prefix_embeds=None,
+                       enc_embeds=None):
+            return tfm.prefill(cfg, params, tokens, cache,
+                               prefix_embeds=prefix_embeds,
+                               enc_embeds=enc_embeds)
+
+        args = [p_abs, ins["tokens"], cache_abs]
+        shards = [p_shard, tok_shard, c_shard]
+        kwargs = {}
+        if "prefix_embeds" in ins:
+            kwargs = {"prefix_embeds": ins["prefix_embeds"]}
+            fn = jax.jit(lambda p, t, c, pe: prefill_fn(p, t, c,
+                                                        prefix_embeds=pe),
+                         in_shardings=(*shards, fe_shard))
+            return fn.lower(*args, ins["prefix_embeds"])
+        if "enc_embeds" in ins:
+            fn = jax.jit(lambda p, t, c, ee: prefill_fn(p, t, c,
+                                                        enc_embeds=ee),
+                         in_shardings=(*shards, fe_shard))
+            return fn.lower(*args, ins["enc_embeds"])
+        fn = jax.jit(prefill_fn, in_shardings=tuple(shards))
+        return fn.lower(*args)
+
+    # decode
+    if quant_int8:
+        qp_abs = jax.eval_shape(quant.quantize_tree, p_abs)
+        q_spec = quant.quantize_specs(p_spec, p_abs)
+        q_shard = shd.to_named(q_spec, mesh)
+        # gather target: tensor-parallel-only specs, so the FSDP
+        # all-gather happens on INT8 storage (half the wire bytes),
+        # then dequantises locally (§Perf pair C, iteration 5)
+        tp_spec = shd.param_specs(p_abs, mesh, cfg=cfg, fsdp=False)
+        gather_shard = shd.to_named(quant.quantize_specs(tp_spec, p_abs),
+                                    mesh)
+
+        def decode_fn_q(qparams, token, cache, pos):
+            if fsdp:
+                qparams = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, qparams,
+                    gather_shard)
+            params = quant.dequantize_tree(qparams)
+            return tfm.decode_step(cfg, params, token, cache, pos)
+
+        fn = jax.jit(decode_fn_q,
+                     in_shardings=(q_shard, tok_shard, c_shard, repl))
+        return fn.lower(qp_abs, ins["token"], cache_abs, ins["pos"])
+
+    def decode_fn(params, token, cache, pos):
+        return tfm.decode_step(cfg, params, token, cache, pos)
+
+    fn = jax.jit(decode_fn,
+                 in_shardings=(p_shard, tok_shard, c_shard, repl))
+    return fn.lower(p_abs, ins["token"], cache_abs, ins["pos"])
+
+
+def _cost_pair(cfg, shape, mesh, **kw):
+    """(flops, bytes) per device from cost_analysis of one compile."""
+    comp = build_lowered(cfg, shape, mesh, **kw).compile()
+    ca = comp.cost_analysis()
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)))
+
+
+def exact_costs(cfg, shape, mesh, scanned_cost, **kw) -> tuple[float, float]:
+    """Per-device (flops, bytes) with the scan-over-layers undercount
+    fixed: XLA cost_analysis counts a while body ONCE, so homogeneous
+    stacks are extrapolated from unrolled 1- and 2-layer variants:
+        body = c(2) - c(1);  total = (c(1) - body) + L * body.
+    Heterogeneous stacks (python-loop layers) are exact as-compiled.
+    """
+    if not cfg.homogeneous:
+        return scanned_cost
+    L = cfg.n_layers
+    if cfg.family == "encdec":
+        # separate decoder/encoder bodies: 3 probe compiles
+        c11 = _cost_pair(cfg.replace(n_layers=1, n_enc_layers=1,
+                                     scan_unroll=True), shape, mesh, **kw)
+        c21 = _cost_pair(cfg.replace(n_layers=2, n_enc_layers=1,
+                                     scan_unroll=True), shape, mesh, **kw)
+        c12 = _cost_pair(cfg.replace(n_layers=1, n_enc_layers=2,
+                                     scan_unroll=True), shape, mesh, **kw)
+        Le = cfg.n_enc_layers
+        out = []
+        for i in range(2):
+            dec = c21[i] - c11[i]
+            enc = c12[i] - c11[i]
+            outside = c11[i] - dec - enc
+            out.append(max(outside + L * dec + Le * enc, 0.0))
+        return tuple(out)
+    c1 = _cost_pair(cfg.replace(n_layers=1, scan_unroll=True), shape,
+                    mesh, **kw)
+    c2 = _cost_pair(cfg.replace(n_layers=2, scan_unroll=True), shape,
+                    mesh, **kw)
+    out = []
+    for i in range(2):
+        body = c2[i] - c1[i]
+        outside = c1[i] - body
+        out.append(max(outside + L * body, 0.0))
+    return tuple(out)
+
+
+def analytic_bytes_floor(cfg, shape, n_chips: int) -> float:
+    """Lower-bound HBM bytes/device: params once + decode cache once
+    (+ token activations).  The XLA-CPU 'bytes accessed' overstates TPU
+    traffic (explicit f32 converts of bf16 operands that a TPU dot or
+    the Pallas flash kernel never materialises); reporting the analytic
+    floor alongside bounds the truth from below.  See EXPERIMENTS.md
+    §Roofline methodology.
+    """
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    params = cfg.n_params() * (dt if shape.mode != "train" else dt * 4)
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.mode != "decode" else 1)
+    acts = tokens * cfg.d_model * dt * max(cfg.n_layers // 4, 1)
+    cache = 0.0
+    if shape.mode == "decode":
+        for kind in cfg.block_kinds:
+            if kind == "attn":
+                cache += (shape.global_batch * shape.seq_len
+                          * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+            elif kind == "local_attn":
+                cache += (shape.global_batch * min(shape.seq_len,
+                                                   cfg.window or 10 ** 9)
+                          * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+            elif kind == "mla":
+                cache += (shape.global_batch * shape.seq_len
+                          * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2)
+            elif kind == "ssd":
+                din = cfg.ssm_expand * cfg.d_model
+                nh = din // cfg.ssm_headdim
+                cache += (shape.global_batch * nh * cfg.ssm_headdim
+                          * cfg.ssm_state * 4)
+            elif kind == "rglru":
+                cache += shape.global_batch * (cfg.lru_width
+                                               or cfg.d_model) * 4
+    if shape.mode == "train":
+        acts *= 2  # fwd + remat re-read
+    return (params + cache + acts) / n_chips
+
+
+def pad_heads(cfg, tp: int):
+    """Pad attention heads up to a multiple of the model axis (MaxText-
+    style deployment trick): the padded model has ceil(H/tp)*tp heads
+    (extra heads zero-initialised, masked by zero out-proj rows), so
+    attention shards instead of replicating.  +H_pad/H extra attention
+    FLOPs, -(tp-1)/tp replicated compute."""
+    H = cfg.n_heads
+    if H == 0 or H % tp == 0:
+        return cfg
+    Hp = -(-H // tp) * tp
+    K = cfg.n_kv_heads
+    Kp = K if K <= 1 or Hp % K == 0 else Hp
+    return cfg.replace(n_heads=Hp, n_kv_heads=Kp)
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            fsdp: bool = False, seq_shard_kv: bool = False,
+            do_pad_heads: bool = False, quant_int8: bool = False,
+            remat: str = "full", tag: str = "") -> dict:
+    shape = get_shape(shape_name)
+    base = get_config(arch)
+    ok, note = applicable(base, shape)
+    if fsdp:
+        note += "+fsdp"
+    if seq_shard_kv:
+        note += "+seqkv"
+    if do_pad_heads:
+        note += "+padheads"
+    if quant_int8:
+        note += "+int8"
+    if remat != "full":
+        note += f"+remat-{remat}"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "variant": note, "status": "skip" if not ok else "pending"}
+    if not ok:
+        return rec
+    cfg = shape_variant(base, shape)
+    if remat != "full":
+        cfg = cfg.replace(remat=remat != "none", remat_policy=remat)
+    multi = mesh_kind == "multipod"
+    if do_pad_heads:
+        cfg = pad_heads(cfg, 16)
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = 512 if multi else 256
+
+    kw = {"fsdp": fsdp, "seq_shard_kv": seq_shard_kv,
+          "quant_int8": quant_int8 and shape.mode == "decode"}
+    t0 = time.time()
+    lowered = build_lowered(cfg, shape, mesh, **kw)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, scan_trips=cfg.n_layers
+                            if cfg.homogeneous else 1)
+
+    em = EnergyModel()
+    scanned = (float(cost.get("flops", 0.0)),
+               float(cost.get("bytes accessed", 0.0)))
+    flops_dev, bytes_dev = exact_costs(cfg, shape, mesh, scanned, **kw)
+    bytes_floor = analytic_bytes_floor(cfg, shape, n_chips)
+    terms = em.roofline(flops_dev, bytes_dev, float(coll["total"]),
+                        n_chips=1)  # cost_analysis is per-device already
+    mf = model_flops(cfg, shape)
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "bytes_floor_per_device": bytes_floor,
+        "collectives": coll,
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "bottleneck": terms.bottleneck,
+            "step_time_s": terms.step_time_s,
+        },
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (flops_dev * n_chips)
+                               if flops_dev else None),
+        "energy_j_per_step": em.joules(terms, n_chips=n_chips),
+    })
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multipod", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--print-hlo", action="store_true")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="2D (data x model) weight sharding")
+    ap.add_argument("--seq-shard-kv", action="store_true",
+                    help="shard KV sequence over model when heads don't "
+                         "divide")
+    ap.add_argument("--pad-heads", action="store_true",
+                    help="pad attention heads to the model-axis size")
+    ap.add_argument("--quant-int8", action="store_true",
+                    help="int8 weights for decode shapes")
+    ap.add_argument("--remat", choices=["full", "dots", "none"],
+                    default="full", help="train-step remat policy")
+    ap.add_argument("--suffix", default="",
+                    help="output filename suffix for variant runs")
+    args = ap.parse_args()
+
+    combos = []
+    archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
+    shapes = (list(INPUT_SHAPES) if args.all or not args.shape
+              else [args.shape])
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mesh_kind in combos:
+        tag = f"{arch}__{shape}__{mesh_kind}" + args.suffix
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            rec = run_one(arch, shape, mesh_kind, fsdp=args.fsdp,
+                          seq_shard_kv=args.seq_shard_kv,
+                          do_pad_heads=args.pad_heads,
+                          quant_int8=args.quant_int8,
+                          remat=args.remat)
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "status": "fail", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skip"
+        n_fail += st == "fail"
+        msg = f"[{st:4s}] {tag}"
+        if st == "ok":
+            r = rec["roofline"]
+            msg += (f"  compile {rec['compile_s']:.1f}s  "
+                    f"bottleneck={r['bottleneck']}  "
+                    f"step={r['step_time_s']*1e3:.2f}ms")
+        elif st == "fail":
+            msg += "  " + rec["error"][:160]
+        print(msg, flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_fail} fail", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,160 @@
+"""End-to-end serving driver (the paper is a serving paper, so this is
+the primary launcher): train-or-load a classifier, stand up the
+dual-path stack with the closed-loop controller, replay a workload,
+and log latency/throughput/energy/CO2 to the tracker.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve \
+        --requests 2000 --qps 150 --controller bio --path auto
+    PYTHONPATH=src python -m repro.launch.serve --controller open ...
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
+        --mode generate --requests 4   # LM generation path (smoke cfg)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core import (AdaptiveThreshold, AdmissionController,
+                        CostWeights, DecayingThreshold, LatencyModel)
+from repro.models import distilbert
+from repro.models import transformer as tfm
+from repro.serving import (ClassifierEngine, ClosedLoopSimulator,
+                           DirectPath, DynamicBatcher, GenerationEngine,
+                           Oracle, bursty_arrivals, poisson_arrivals)
+from repro.telemetry import CarbonTracker, Tracker
+from repro.training import ClassificationData, train_classifier
+
+
+def build_classifier(seed: int = 0, steps: int = 150):
+    cfg = distilbert.config(n_layers=3, d_model=64, n_heads=4, d_ff=128,
+                            vocab=600, max_pos=48)
+    params = distilbert.init(cfg, jax.random.PRNGKey(seed))
+    data = ClassificationData(vocab=600, seq_len=32, seed=seed + 1)
+    params, _ = train_classifier(cfg, params, data.train_batches(32),
+                                 steps=steps, verbose=False)
+    return cfg, params, data
+
+
+def make_controller(kind: str, *, weights: str, target_rate: float):
+    w = {"balanced": CostWeights(),
+         "performance": CostWeights.performance_priority(),
+         "ecology": CostWeights.ecology_priority()}[weights]
+    if kind == "open":
+        return AdmissionController(enabled=False)
+    if kind == "adaptive":
+        th = AdaptiveThreshold(base=DecayingThreshold(0.9, 0.4, 0.5),
+                               target_rate=target_rate)
+    else:
+        th = DecayingThreshold(tau0=1.0, tau_inf=0.45, k=0.8)
+    ctrl = AdmissionController(threshold=th)
+    ctrl.cost.weights = w
+    return ctrl
+
+
+def serve_classifier(args) -> dict:
+    tracker = Tracker(root=args.runs)
+    run = tracker.start_run(f"serve-{args.controller}-{args.path}")
+    carbon = CarbonTracker(region=args.region)
+
+    cfg, params, data = build_classifier()
+    engine = ClassifierEngine(cfg, params, exit_layer=1)
+    toks, labels, _ = data.sample(args.requests)
+    carbon.start()
+    proxy_pred, entropy, _, t_proxy = engine.proxy_scores(toks)
+    full_pred, t_full = engine.classify(toks)
+    carbon.stop(args.requests)
+
+    # calibrate the latency models from measured walltimes
+    times = engine.calibrate(seq_len=toks.shape[1], buckets=(1, 4, 16))
+    t1, t16 = times[1], times[16]
+    t_tok = max((t16 - t1) / 15, 1e-5)
+    direct_lat = LatencyModel(t_fixed_s=max(t1 - t_tok, 1e-4),
+                              t_tok_s=t_tok)
+    batched_lat = LatencyModel(t_fixed_s=max(t1 - t_tok, 1e-4) * 6,
+                               t_tok_s=t_tok)
+
+    oracle = Oracle(full_pred=full_pred, proxy_pred=proxy_pred,
+                    entropy=entropy, labels=labels,
+                    proxy_latency=LatencyModel(
+                        t_proxy / len(toks), 0.0))
+    if args.traffic == "bursty":
+        reqs = bursty_arrivals(args.requests, args.qps, args.qps * 8,
+                               seed=args.seed)
+    else:
+        reqs = poisson_arrivals(args.requests, args.qps, seed=args.seed)
+
+    ctrl = make_controller(args.controller, weights=args.weights,
+                           target_rate=args.target_rate)
+    sim = ClosedLoopSimulator(
+        oracle=oracle, controller=ctrl,
+        direct=DirectPath(direct_lat),
+        batched=DynamicBatcher(batched_lat,
+                               max_batch_size=args.max_batch,
+                               queue_window_s=args.window),
+        path=args.path)
+    metrics = sim.run(reqs)
+    summary = metrics.summary()
+    summary["controller"] = args.controller
+
+    run.log_params(**vars(args))
+    run.log_metrics(0, **{k: v for k, v in summary.items()
+                          if isinstance(v, (int, float))})
+    run.log_artifact("summary.json", summary)
+    run.log_artifact("carbon.json", carbon.report())
+    run.finish()
+    return summary
+
+
+def serve_generate(args) -> dict:
+    cfg = get_smoke_config(args.arch)
+    params = tfm.init_lm(cfg, jax.random.PRNGKey(args.seed))
+    engine = GenerationEngine(cfg, params, max_seq=128)
+    prompts = np.random.default_rng(args.seed).integers(
+        0, cfg.vocab, size=(args.requests, 16)).astype(np.int32)
+    out = engine.generate(prompts, n_new=args.new_tokens)
+    summary = {"arch": args.arch, "batch": int(prompts.shape[0]),
+               "generated": out.shape, "sample": out[0][:8].tolist()}
+    print(json.dumps(summary, default=str, indent=2))
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["classify", "generate"],
+                    default="classify")
+    ap.add_argument("--arch", choices=list(ARCH_IDS),
+                    default="stablelm-3b")
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--qps", type=float, default=150.0)
+    ap.add_argument("--traffic", choices=["poisson", "bursty"],
+                    default="poisson")
+    ap.add_argument("--controller",
+                    choices=["open", "bio", "adaptive"], default="bio")
+    ap.add_argument("--weights",
+                    choices=["balanced", "performance", "ecology"],
+                    default="balanced")
+    ap.add_argument("--target-rate", type=float, default=0.6)
+    ap.add_argument("--path", choices=["direct", "batched", "auto"],
+                    default="auto")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--window", type=float, default=0.01)
+    ap.add_argument("--region", default="world_avg")
+    ap.add_argument("--runs", default="runs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mode == "generate":
+        serve_generate(args)
+        return
+    summary = serve_classifier(args)
+    print(json.dumps(summary, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,274 @@
+"""Logical-axis sharding policy (MaxText-style path rules).
+
+``param_specs`` walks a param pytree and assigns a PartitionSpec per
+leaf from path-pattern rules (Megatron row/column alternation for
+attention+MLP, expert sharding for MoE, vocab sharding for embeddings).
+Every rule is guarded by divisibility: a dimension that does not divide
+the mesh's "model" axis falls back to replication for that dim (e.g.
+recurrentgemma's 10 Q heads on a 16-way model axis, granite's 40
+experts).  This is what makes all 10 assigned archs lower on one mesh.
+
+``input_specs``/``cache_specs`` shard activations: batch over
+("pod","data"), model-parallel tensors over "model"; for decode shapes
+whose batch cannot use the data axis (long_500k, batch=1) the KV cache
+SEQUENCE dim is sharded over "data" instead — flash-decode against a
+sequence-sharded cache lowers to partial softmax + all-reduce, keeping
+all 256 chips busy on a single stream.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import batch_axes, model_axis_size
+
+# (path regex, spec builder).  "M" marks the model axis; trailing dims
+# match from the right so stacked-layer leading dims are untouched.
+_RULES: list[tuple[str, tuple]] = [
+    (r"/emb$",                  ("M", None)),
+    (r"/unemb$",                (None, "M")),
+    (r"/(wq|wk|wv)$",           (None, "M")),
+    (r"/(bq|bk|bv)$",           ("M",)),
+    (r"/wo$",                   ("M", None)),
+    (r"/bo$",                   (None,)),
+    (r"moe/router$",            (None, None)),
+    (r"moe/w_(gate|up)$",       ("E", None, "M")),
+    (r"moe/w_down$",            ("E", "M", None)),
+    (r"/(mlp|encoder.*)/w_(gate|up)$", (None, "M")),
+    (r"/w_(gate|up)$",          (None, "M")),
+    (r"/w_up$",                 (None, "M")),
+    (r"/b_up$",                 ("M",)),
+    (r"/w_down$",               ("M", None)),
+    (r"/b_down$",               (None,)),
+    # MLA
+    (r"/w_dq$",                 (None, None)),
+    (r"/w_uq$",                 (None, "M")),
+    (r"/w_dkv$",                (None, None)),
+    (r"/w_uk$",                 (None, "M", None)),
+    (r"/w_uv$",                 (None, "M", None)),
+    # RG-LRU (width dim sharded)
+    (r"/w_in$",                 (None, "M")),
+    (r"/conv_w$",               (None, "M")),
+    (r"/conv_b$",               ("M",)),
+    (r"/(w_a|w_x)$",            (None, "M")),
+    (r"/(b_a|b_x|lam)$",        ("M",)),
+    (r"/w_out$",                ("M", None)),
+    # SSD
+    (r"/in_proj$",              (None, "M")),
+    (r"/out_proj$",             ("M", None)),
+    (r"/(A_log|D|dt_bias)$",    (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/" + "/".join(parts)
+
+
+def _resolve(rule: tuple, shape: tuple, tp: int) -> P:
+    """Apply a right-aligned rule with divisibility fallbacks."""
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    k = len(rule)
+    if k > ndim:
+        rule = rule[k - ndim:]
+        k = ndim
+    for i, r in enumerate(rule):
+        dim = ndim - k + i
+        if r in ("M", "E"):
+            if tp > 1 and shape[dim] % tp == 0 and shape[dim] >= tp:
+                spec[dim] = "model"
+        # "E" (expert) falls back to the *next* M rule dim if it fails,
+        # handled by the rule author listing M on the alternative dim.
+    # ensure no two dims share the axis
+    seen = False
+    for i, s in enumerate(spec):
+        if s == "model":
+            if seen:
+                spec[i] = None
+            seen = True
+    return P(*spec)
+
+
+# attention projections whose sharded output dim is a flattened
+# (heads x head_dim) axis: sharding must align with head boundaries or
+# the in-layer reshape to [B,S,H,hd] forces an activation all-gather
+# (observed: +14 GiB/step on recurrentgemma prefill, §Perf pair B).
+_HEAD_ALIGNED = {
+    "wq": "n_heads", "bq": "n_heads", "w_uq": "n_heads",
+    "wk": "n_kv_heads", "bk": "n_kv_heads",
+    "wv": "n_kv_heads", "bv": "n_kv_heads",
+    "wo": "n_heads", "w_uk": "n_heads", "w_uv": "n_heads",
+}
+
+
+def param_specs(params: Any, mesh, *, cfg=None, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on
+    jax.eval_shape results — only .shape is consulted).
+
+    ``cfg`` (a ModelConfig) enables head-aligned guards: attention
+    projections only shard when the HEAD COUNT divides the model axis,
+    not merely the flattened dim (see _HEAD_ALIGNED).
+
+    ``fsdp=True`` additionally shards the largest not-yet-sharded dim
+    of every big (>=1 MiB) leaf over the "data" axis (2D weight
+    sharding / FSDP).  Required for models whose per-chip weight shard
+    exceeds HBM under pure tensor parallelism (llama3-405b: 50 GB/chip
+    16-way -> 3.2 GB/chip 256-way); costs an all-gather per layer.
+    """
+    tp = model_axis_size(mesh)
+    dp = mesh.shape.get("data", 1)
+
+    def head_ok(ps: str) -> bool:
+        if cfg is None:
+            return True
+        name = ps.rsplit("/", 1)[-1]
+        attr = _HEAD_ALIGNED.get(name)
+        if attr is None:
+            return True
+        heads = getattr(cfg, attr, 0)
+        return heads > 0 and heads % tp == 0
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        spec = P()
+        for pat, rule in _RULES:
+            if re.search(pat, ps):
+                if head_ok(ps):
+                    spec = _resolve(rule, shape, tp)
+                break
+        if fsdp and dp > 1 and leaf.size >= (1 << 20):
+            spec = _add_fsdp(spec, shape, dp)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def _add_fsdp(spec: P, shape: tuple, dp: int) -> P:
+    lst = list(spec) + [None] * (len(shape) - len(spec))
+    # largest unsharded dim that divides the data axis; skip a leading
+    # stacked-layers dim (scan carries it — sharding it breaks scan)
+    cands = [(shape[i], i) for i in range(len(shape))
+             if lst[i] is None and shape[i] % dp == 0 and shape[i] >= dp]
+    if not cands:
+        return P(*lst)
+    _, dim = max(cands)
+    lst[dim] = "data"
+    return P(*lst)
+
+
+def to_named(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+def batch_spec_axis(mesh, global_batch: int):
+    """The mesh axes usable for the batch dim (None if not divisible)."""
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if axes and global_batch % n == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def tokens_spec(mesh, global_batch: int) -> P:
+    return P(batch_spec_axis(mesh, global_batch), None)
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, mesh,
+                global_batch: int, *, seq_shard_kv: bool = False) -> Any:
+    """Specs for the decode cache pytree (stacked or per-layer).
+
+    KV tensors are [("L",) B, S, K|r, hd]; batch shards over
+    ("pod","data") when divisible, otherwise the SEQUENCE dim takes the
+    "data" axis (sequence-sharded decode).  Head dims shard over
+    "model" when divisible; when they are NOT divisible (llama's 8 KV
+    heads on a 16-way model axis) and ``seq_shard_kv`` is set, the
+    SEQUENCE dim takes the "model" axis instead — flash-decode against
+    a sequence-sharded cache lowers to partial softmax + all-reduce.
+    MLA latent / recurrent states shard their channel dims.
+    """
+    tp = model_axis_size(mesh)
+    baxis = batch_spec_axis(mesh, global_batch)
+    data = "data" if "data" in mesh.axis_names else None
+    seq_axis = None if baxis is not None else data
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(leaf.shape)
+        if re.search(r"/(k|v)$", ps) and nd >= 4:
+            # [L?, B, S, K, hd]
+            spec = [None] * nd
+            spec[nd - 4] = baxis
+            spec[nd - 3] = seq_axis
+            if shape[nd - 2] % tp == 0:
+                spec[nd - 2] = "model"
+            elif seq_shard_kv and spec[nd - 3] is None:
+                spec[nd - 3] = "model"        # seq-sharded decode
+            return P(*spec)
+        if re.search(r"/c_kv$", ps) and nd >= 3:     # [L?, B, S, r]
+            spec = [None] * nd
+            spec[nd - 3] = baxis
+            spec[nd - 2] = seq_axis
+            return P(*spec)
+        if re.search(r"/k_rope$", ps) and nd >= 3:
+            spec = [None] * nd
+            spec[nd - 3] = baxis
+            spec[nd - 2] = seq_axis
+            return P(*spec)
+        if re.search(r"/pos$", ps) and nd >= 2:      # [L?, B, S]
+            spec = [None] * nd
+            spec[nd - 2] = baxis
+            spec[nd - 1] = seq_axis
+            return P(*spec)
+        if re.search(r"/rec/h$", ps):
+            spec = [None] * nd
+            if nd <= 3:                               # rglru [L?, B, R]
+                spec[nd - 2] = baxis
+                if shape[-1] % tp == 0:
+                    spec[-1] = "model"                # RG-LRU width
+            else:                                     # ssd [L?, B,H,hd,N]
+                spec[nd - 4] = baxis
+                if shape[nd - 3] % tp == 0:
+                    spec[nd - 3] = "model"            # SSD heads
+            return P(*spec)
+        if re.search(r"/conv$", ps):                  # [L?,B,W-1,C]
+            spec = [None] * nd
+            spec[nd - 3] = baxis
+            if shape[-1] % tp == 0:
+                spec[-1] = "model"
+            return P(*spec)
+        if re.search(r"/cross", ps) and nd >= 4:      # [L,B,Senc,K,hd]
+            spec = [None] * nd
+            spec[1] = baxis
+            if shape[nd - 2] % tp == 0:
+                spec[nd - 2] = "model"
+            return P(*spec)
+        return P()                                    # lengths etc.
+
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def frontend_spec(mesh, global_batch: int) -> P:
+    """[B, Senc/patches, D] stub embeddings."""
+    return P(batch_spec_axis(mesh, global_batch), None, None)

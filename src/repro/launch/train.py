@@ -1,0 +1,89 @@
+"""Training launcher: any assigned arch (smoke scale on CPU; the full
+configs are exercised via dryrun.py on the production mesh).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
+        --steps 50 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import transformer as tfm
+from repro.telemetry import CarbonTracker, Tracker
+from repro.training import AdamW, lm_batches, make_train_step
+from repro.training import checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS),
+                    default="stablelm-3b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the published config (mesh hardware only)")
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--runs", default="runs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (get_config(args.arch) if args.full_config
+           else get_smoke_config(args.arch))
+    tracker = Tracker(root=args.runs)
+    run = tracker.start_run(f"train-{args.arch}")
+    run.log_params(arch=args.arch, steps=args.steps, batch=args.batch,
+                   seq=args.seq, lr=args.lr,
+                   n_params=cfg.n_params())
+    carbon = CarbonTracker()
+
+    params = tfm.init_lm(cfg, jax.random.PRNGKey(args.seed))
+    opt = AdamW(lr=args.lr)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt, total_steps=args.steps,
+                                   warmup=max(args.steps // 10, 1)))
+    gen = lm_batches(vocab=cfg.vocab, batch=args.batch, seq_len=args.seq,
+                     seed=args.seed)
+
+    def frontends(batch):
+        out = {"tokens": jnp.asarray(batch)}
+        if cfg.family == "encdec":
+            out["enc_embeds"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(1),
+                (args.batch, cfg.enc_seq, cfg.enc_d_model or cfg.d_model))
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(2),
+                (args.batch, cfg.n_patches, cfg.d_model))
+        return out
+
+    carbon.start()
+    first = last = None
+    for i in range(args.steps):
+        params, state, m = step(params, state, frontends(next(gen)))
+        loss = float(m["loss"])
+        first = loss if first is None else first
+        last = loss
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            run.log_metrics(i, loss=loss, grad_norm=float(m["grad_norm"]))
+            print(f"step {i:5d}  loss {loss:.4f}")
+    rep = carbon.stop(args.steps)
+
+    if args.checkpoint:
+        checkpoint.save(args.checkpoint, {"params": params, "opt": state},
+                        metadata={"arch": args.arch, "steps": args.steps})
+    run.log_artifact("carbon.json", rep)
+    out_dir = run.finish()
+    print(json.dumps({"first_loss": first, "last_loss": last,
+                      "run_dir": out_dir, **rep}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

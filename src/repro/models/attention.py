@@ -1,0 +1,293 @@
+"""Attention variants: GQA/MQA/MHA, sliding-window (local), cross, decode.
+
+Layout convention: activations are [B, S, D]; per-head tensors are
+[B, S, H, hd] ("BSHD").  KV caches are [B, S_cache, K, hd] plus an int32
+position vector for ring-buffered (windowed) caches.
+
+Full-sequence attention is *chunked over query blocks* so the scores
+tensor never exceeds [B, H, q_block, S_kv] — this is the pure-jnp
+production path (the Pallas flash kernel in ``repro.kernels`` is the TPU
+hot-spot version and is validated against ``repro.kernels.ref``).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+NEG_INF = -2.0 ** 30  # large-but-finite; avoids NaN from (-inf) - (-inf)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_params(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                *, bias: bool = False, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = nn.split(key, 4)
+    p = {"wq": nn.dense_init(k1, d_model, n_heads * head_dim, dtype=dtype),
+         "wk": nn.dense_init(k2, d_model, n_kv * head_dim, dtype=dtype),
+         "wv": nn.dense_init(k3, d_model, n_kv * head_dim, dtype=dtype),
+         "wo": nn.dense_init(k4, n_heads * head_dim, d_model, dtype=dtype)}
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def project_qkv(p: dict, x: jax.Array, n_heads: int, n_kv: int,
+                head_dim: int, x_kv: jax.Array | None = None):
+    """Project to q [B,S,H,hd], k/v [B,Skv,K,hd].  ``x_kv`` for cross-attn."""
+    B, S, _ = x.shape
+    xk = x if x_kv is None else x_kv
+    Skv = xk.shape[1]
+    q = x @ p["wq"]
+    k = xk @ p["wk"]
+    v = xk @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, Skv, n_kv, head_dim),
+            v.reshape(B, Skv, n_kv, head_dim))
+
+
+def out_proj(p: dict, o: jax.Array) -> jax.Array:
+    B, S, H, hd = o.shape
+    y = o.reshape(B, S, H * hd) @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """q [B,Sq,H,hd] x k [B,Skv,K,hd] -> scores [B,K,G,Sq,Skv] (H = K*G)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_combine(w: jax.Array, v: jax.Array) -> jax.Array:
+    """w [B,K,G,Sq,Skv] x v [B,Skv,K,hd] -> out [B,Sq,H,hd].
+
+    The softmax weights are cast DOWN to v's dtype (bf16) rather than
+    upcasting the (much larger, cache-resident) v to f32 — the flash-
+    attention convention (P in bf16, f32 accumulation).  Avoiding the
+    f32 cache copy cuts decode HBM traffic ~3x (§Perf iteration 1).
+    """
+    B, K, G, Sq, Skv = w.shape
+    hd = v.shape[-1]
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, K * G, hd)
+
+
+def mask_bias(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+              window: int = 0, prefix_len: jax.Array | int = 0,
+              k_valid: jax.Array | None = None) -> jax.Array:
+    """Additive mask [..., Sq, Skv] built from absolute positions.
+
+    - causal:   admit k_pos <= q_pos
+    - window>0: additionally require q_pos - k_pos < window
+    - prefix:   positions < prefix_len are mutually visible (PaliGemma
+                prefix-LM image+prompt block)
+    - k_valid:  optional bool [Skv] / [B,Skv] validity (ring buffers).
+    """
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        cau = kp <= qp
+        if not isinstance(prefix_len, int) or prefix_len != 0:
+            pl = jnp.asarray(prefix_len)
+            while pl.ndim < 2:
+                pl = pl[..., None]
+            # prefix tokens are mutually (bidirectionally) visible
+            cau = cau | (kp < pl)
+        ok = ok & cau
+    if window:
+        ok = ok & (qp - kp < window)
+    if k_valid is not None:
+        kv = k_valid[..., None, :]
+        ok = ok & kv
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
+           scale: float | None = None) -> jax.Array:
+    """Masked GQA attention. bias broadcasts against [B,K,G,Sq,Skv]."""
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = _gqa_scores(q, k, scale)
+    while bias.ndim < s.ndim:
+        bias = bias[None]
+    s = s + bias
+    w = jax.nn.softmax(s, axis=-1)
+    return _gqa_combine(w, v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full (chunked) causal attention — prefill / training
+# ---------------------------------------------------------------------------
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     q_offset: int | jax.Array = 0, window: int = 0,
+                     prefix_len: jax.Array | int = 0,
+                     q_chunk: int = 1024,
+                     scale: float | None = None) -> jax.Array:
+    """Chunked full attention; memory O(B·H·q_chunk·Skv).
+
+    Supports sliding-window masking (FLOPs are NOT reduced here — use
+    ``local_attention`` for the sub-quadratic path) and prefix-LM.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Skv)
+    if Sq <= q_chunk:
+        bias = mask_bias(q_pos, k_pos, causal=True, window=window,
+                         prefix_len=prefix_len)
+        return attend(q, k, v, bias, scale)
+
+    # static python loop over query chunks: bounds the scores tensor to
+    # [B,H,q_chunk,Skv] AND keeps every FLOP visible to cost_analysis
+    # (a lax.map would hide all but one trip inside a while loop).
+    n = -(-Sq // q_chunk)
+    pad = n * q_chunk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, pad))
+    outs = []
+    for i in range(n):
+        qc = qp[:, i * q_chunk:(i + 1) * q_chunk]
+        pc = qpos[i * q_chunk:(i + 1) * q_chunk]
+        bias = mask_bias(pc, k_pos, causal=True, window=window,
+                         prefix_len=prefix_len)
+        outs.append(attend(qc, k, v, bias, scale))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# sub-quadratic local (sliding-window) attention — prefill / training
+# ---------------------------------------------------------------------------
+
+def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: int, q_offset: int = 0,
+                    scale: float | None = None) -> jax.Array:
+    """Blocked sliding-window attention, FLOPs O(S · 2·window).
+
+    Queries in block i attend to keys in blocks i-1 and i with a causal
+    + window mask, giving an effective receptive field in
+    [window, 2·window).  Sequence is padded to a block multiple.
+    """
+    B, S, H, hd = q.shape
+    w = window
+    n = -(-S // w)
+    pad = n * w - S
+
+    def blockify(x):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.reshape(B, n, w, x.shape[2], hd)
+
+    qb, kb, vb = blockify(q), blockify(k), blockify(v)
+    # keys for block i: [block i-1 ; block i]
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :n]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :n]
+    k2 = jnp.concatenate([kprev, kb], axis=2)          # [B,n,2w,K,hd]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+
+    pos = jnp.arange(n * w).reshape(n, w) + q_offset
+    kpos = jnp.concatenate([pos - w, pos], axis=1)         # [n, 2w]
+
+    # static unroll over blocks (see causal_attention for rationale)
+    outs = []
+    for i in range(n):
+        valid = jnp.concatenate(
+            [jnp.full((w,), i > 0, bool), jnp.ones((w,), bool)])
+        bias = mask_bias(pos[i], kpos[i], causal=True, window=w,
+                         k_valid=valid)
+        outs.append(attend(qb[:, i], k2[:, i], v2[:, i], bias, scale))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# KV cache (full or ring-buffered) + decode step
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, C, K, hd]   C = min(max_seq, window or inf)
+    v: jax.Array          # [B, C, K, hd]
+    pos: jax.Array        # [B, C] int32 absolute position held in each slot
+    length: jax.Array     # [] int32 — number of tokens processed so far
+
+
+def init_kv_cache(batch: int, max_seq: int, n_kv: int, head_dim: int,
+                  *, window: int = 0, dtype=jnp.bfloat16) -> KVCache:
+    C = min(max_seq, window) if window else max_seq
+    return KVCache(
+        k=jnp.zeros((batch, C, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, C, n_kv, head_dim), dtype),
+        pos=jnp.full((batch, C), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def cache_write(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                start: jax.Array | int) -> KVCache:
+    """Write S_new tokens starting at absolute position ``start``.
+
+    ``start`` may be a scalar (lockstep decode / prefill) or a [B]
+    vector (continuous batching: every slot at its own position).
+    Full caches write at [start, start+S); ring caches (C < needed)
+    write modulo C.  For prefill into a ring we only keep the last C
+    tokens (earlier writes are overwritten anyway once S_new >= C).
+    """
+    B, C, K, hd = cache.k.shape
+    S_new = k_new.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    steps = jnp.arange(S_new, dtype=jnp.int32)
+    if start.ndim == 0:
+        idx = (start + steps) % C                                # [S_new]
+        k = cache.k.at[:, idx].set(k_new.astype(cache.k.dtype))
+        v = cache.v.at[:, idx].set(v_new.astype(cache.v.dtype))
+        pos = cache.pos.at[:, idx].set(start + steps)
+        return KVCache(k=k, v=v, pos=pos, length=start + S_new)
+    # per-row start positions
+    idx = (start[:, None] + steps[None, :]) % C                  # [B,S]
+    b = jnp.arange(B, dtype=jnp.int32)[:, None]
+    k = cache.k.at[b, idx].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[b, idx].set(v_new.astype(cache.v.dtype))
+    pos = cache.pos.at[b, idx].set(start[:, None] + steps[None, :])
+    return KVCache(k=k, v=v, pos=pos,
+                   length=jnp.max(start) + S_new)
+
+
+def decode_attend(q: jax.Array, cache: KVCache, *, pos: jax.Array,
+                  window: int = 0, scale: float | None = None) -> jax.Array:
+    """One-token attention against the cache.
+
+    q: [B, 1, H, hd]; ``pos`` is the new token's absolute position —
+    scalar (lockstep) or [B] (continuous batching).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        pos = pos[:, None]                  # [B,1] vs k_pos [B,C]
+    k_pos = cache.pos                       # [B, C]
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if window:
+        valid = valid & (pos - k_pos < window)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias[:, None, None, None, :]     # [B,1,1,1,C] vs [B,K,G,1,C]
+    return attend(q, cache.k, cache.v, bias, scale)

@@ -1,0 +1,88 @@
+"""DistilBERT-style encoder classifier (paper model #1, arXiv:1910.01108).
+
+Used by the Table-III ablation reproduction: a sentence classifier whose
+softmax entropy feeds the controller's L(x).  Post-LN transformer
+encoder with learned positions, [CLS] pooling and a 2-way head (SST-2).
+Also provides ``early_exit_logits`` — the k-layer proxy head the
+closed-loop controller uses to triage requests cheaply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import nn
+
+
+def config(n_layers=6, d_model=768, n_heads=12, d_ff=3072, vocab=30522,
+           max_pos=512, n_classes=2):
+    return dict(n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+                d_ff=d_ff, vocab=vocab, max_pos=max_pos,
+                n_classes=n_classes, head_dim=d_model // n_heads)
+
+
+def init(cfg: dict, key) -> dict:
+    ks = nn.split(key, cfg["n_layers"] + 5)
+    params = {
+        "emb": nn.embed_init(ks[0], cfg["vocab"], cfg["d_model"]),
+        "pos": 0.02 * jax.random.normal(ks[1], (cfg["max_pos"],
+                                                cfg["d_model"])),
+        "emb_norm": nn.layernorm_params(cfg["d_model"]),
+        "cls": nn.dense_init(ks[2], cfg["d_model"], cfg["n_classes"]),
+        "cls_b": jnp.zeros((cfg["n_classes"],)),
+        # early-exit proxy head (controller's cheap L(x) source)
+        "exit_cls": nn.dense_init(ks[3], cfg["d_model"], cfg["n_classes"]),
+        "exit_b": jnp.zeros((cfg["n_classes"],)),
+        "layers": [],
+    }
+    for i in range(cfg["n_layers"]):
+        k1, k2 = nn.split(ks[4 + i], 2)
+        params["layers"].append({
+            "mix": attn.attn_params(k1, cfg["d_model"], cfg["n_heads"],
+                                    cfg["n_heads"], cfg["head_dim"],
+                                    bias=True),
+            "norm1": nn.layernorm_params(cfg["d_model"]),
+            "mlp": nn.mlp_params(k2, cfg["d_model"], cfg["d_ff"]),
+            "norm2": nn.layernorm_params(cfg["d_model"]),
+        })
+    return params
+
+
+def _encoder_layer(cfg: dict, p: dict, h: jax.Array,
+                   pad_mask: jax.Array) -> jax.Array:
+    q, k, v = attn.project_qkv(p["mix"], h, cfg["n_heads"], cfg["n_heads"],
+                               cfg["head_dim"])
+    bias = jnp.where(pad_mask[:, None, None, None, :], 0.0, attn.NEG_INF)
+    o = attn.attend(q, k, v, bias.astype(jnp.float32))
+    h = nn.layernorm(p["norm1"], h + attn.out_proj(p["mix"], o))
+    h = nn.layernorm(p["norm2"], h + nn.mlp(p["mlp"], h))
+    return h
+
+
+def encode(cfg: dict, params: dict, tokens: jax.Array,
+           pad_mask: jax.Array | None = None, *,
+           n_layers: int | None = None) -> jax.Array:
+    """tokens [B,S] -> hidden [B,S,D]; ``n_layers`` truncates (early exit)."""
+    B, S = tokens.shape
+    if pad_mask is None:
+        pad_mask = jnp.ones((B, S), bool)
+    h = params["emb"][tokens] + params["pos"][:S]
+    h = nn.layernorm(params["emb_norm"], h)
+    for p in params["layers"][:n_layers]:
+        h = _encoder_layer(cfg, p, h, pad_mask)
+    return h
+
+
+def logits(cfg: dict, params: dict, tokens: jax.Array,
+           pad_mask: jax.Array | None = None) -> jax.Array:
+    h = encode(cfg, params, tokens, pad_mask)
+    return h[:, 0] @ params["cls"] + params["cls_b"]
+
+
+def early_exit_logits(cfg: dict, params: dict, tokens: jax.Array,
+                      pad_mask: jax.Array | None = None,
+                      exit_layer: int = 2) -> jax.Array:
+    """Proxy-head logits after ``exit_layer`` encoder layers."""
+    h = encode(cfg, params, tokens, pad_mask, n_layers=exit_layer)
+    return h[:, 0] @ params["exit_cls"] + params["exit_b"]

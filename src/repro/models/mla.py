@@ -1,0 +1,168 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank)
+plus the shared rotary key ``k_rope`` — the decode path uses the
+"absorbed" formulation so per-step attention runs in latent space and
+never materialises full K/V.  Prefill/training use the expanded form.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.attention import NEG_INF, attend
+
+
+class MLAConfig(NamedTuple):
+    n_heads: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+    rope_theta: float = 10_000.0
+
+
+def mla_params(key, d_model: int, m: MLAConfig, dtype=jnp.float32) -> dict:
+    ks = nn.split(key, 8)
+    H = m.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    p = {}
+    if m.q_lora_rank:
+        p["w_dq"] = nn.dense_init(ks[0], d_model, m.q_lora_rank, dtype=dtype)
+        p["q_norm"] = nn.rmsnorm_params(m.q_lora_rank)
+        p["w_uq"] = nn.dense_init(ks[1], m.q_lora_rank, H * qk, dtype=dtype)
+    else:
+        p["w_uq"] = nn.dense_init(ks[1], d_model, H * qk, dtype=dtype)
+    p["w_dkv"] = nn.dense_init(ks[2], d_model,
+                               m.kv_lora_rank + m.qk_rope_dim, dtype=dtype)
+    p["kv_norm"] = nn.rmsnorm_params(m.kv_lora_rank)
+    p["w_uk"] = (nn.dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_dim,
+                               dtype=dtype)
+                 .reshape(m.kv_lora_rank, H, m.qk_nope_dim))
+    p["w_uv"] = (nn.dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim,
+                               dtype=dtype)
+                 .reshape(m.kv_lora_rank, H, m.v_head_dim))
+    p["wo"] = nn.dense_init(ks[5], H * m.v_head_dim, d_model, dtype=dtype)
+    return p
+
+
+def _project_q(p: dict, m: MLAConfig, x: jax.Array, positions: jax.Array):
+    """-> q_nope [B,S,H,nope], q_rope [B,S,H,rope] (rope applied)."""
+    B, S, _ = x.shape
+    if m.q_lora_rank:
+        cq = nn.rmsnorm(p["q_norm"], x @ p["w_dq"])
+        q = cq @ p["w_uq"]
+    else:
+        q = x @ p["w_uq"]
+    q = q.reshape(B, S, m.n_heads, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = nn.apply_rope(q_rope, positions, m.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p: dict, m: MLAConfig, x: jax.Array,
+                       positions: jax.Array):
+    """-> c_kv [B,S,r] (normed), k_rope [B,S,rope] (rope applied, shared)."""
+    ckr = x @ p["w_dkv"]
+    c_kv = nn.rmsnorm(p["kv_norm"], ckr[..., :m.kv_lora_rank])
+    k_rope = nn.apply_rope(ckr[..., m.kv_lora_rank:], positions, m.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attention(p: dict, m: MLAConfig, x: jax.Array, *,
+                  q_offset: int | jax.Array = 0) -> jax.Array:
+    """Full-sequence (prefill/training) MLA with expanded K/V."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S) + q_offset
+    q_nope, q_rope = _project_q(p, m, x, pos)
+    c_kv, k_rope = _project_kv_latent(p, m, x, pos)
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, p["w_uv"])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, m.n_heads, m.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    from repro.models.attention import causal_attention
+    o = causal_attention(q, k, v, q_offset=q_offset, scale=scale)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # [B, C, r]
+    k_rope: jax.Array     # [B, C, rope]
+    pos: jax.Array        # [B, C]
+    length: jax.Array
+
+
+def init_mla_cache(batch: int, max_seq: int, m: MLAConfig,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_seq, m.qk_rope_dim), dtype),
+        pos=jnp.full((batch, max_seq), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mla_cache_write(p: dict, m: MLAConfig, cache: MLACache, x: jax.Array,
+                    start) -> MLACache:
+    """Project x's tokens to latents and append at [start, start+S).
+
+    ``start`` scalar (lockstep) or [B] (continuous batching)."""
+    B, S = x.shape[:2]
+    C = cache.c_kv.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    steps = jnp.arange(S, dtype=jnp.int32)
+    if start.ndim == 0:
+        pos = start + steps
+        c_kv, k_rope = _project_kv_latent(p, m, x, pos)
+        idx = pos % C
+        return MLACache(
+            c_kv=cache.c_kv.at[:, idx].set(c_kv.astype(cache.c_kv.dtype)),
+            k_rope=cache.k_rope.at[:, idx].set(
+                k_rope.astype(cache.k_rope.dtype)),
+            pos=cache.pos.at[:, idx].set(pos),
+            length=start + S)
+    pos = start[:, None] + steps[None, :]                   # [B,S]
+    c_kv, k_rope = _project_kv_latent(p, m, x, pos)
+    idx = pos % C
+    b = jnp.arange(B, dtype=jnp.int32)[:, None]
+    return MLACache(
+        c_kv=cache.c_kv.at[b, idx].set(c_kv.astype(cache.c_kv.dtype)),
+        k_rope=cache.k_rope.at[b, idx].set(
+            k_rope.astype(cache.k_rope.dtype)),
+        pos=cache.pos.at[b, idx].set(pos),
+        length=jnp.max(start) + S)
+
+
+def mla_decode(p: dict, m: MLAConfig, x: jax.Array, cache: MLACache, *,
+               pos) -> tuple[jax.Array, MLACache]:
+    """Absorbed single-token decode.  x [B,1,D] -> (y [B,1,D], cache).
+
+    ``pos`` scalar (lockstep) or [B] (continuous batching)."""
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    cache = mla_cache_write(p, m, cache, x, pos)
+    q_pos = pos[None] if pos.ndim == 0 else pos[:, None]
+    q_nope, q_rope = _project_q(p, m, x, q_pos)
+    # absorb W_uk into q: q_lat [B,1,H,r]
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, p["w_uk"])
+    c = cache.c_kv.astype(jnp.float32)                    # [B,C,r]
+    kr = cache.k_rope.astype(jnp.float32)                 # [B,C,rope]
+    scores = (jnp.einsum("bthr,bsr->bhts", q_lat.astype(jnp.float32), c)
+              + jnp.einsum("bthe,bse->bhts", q_rope.astype(jnp.float32), kr))
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    scores = scores * scale
+    cur = pos if pos.ndim == 0 else pos[:, None]
+    valid = (cache.pos >= 0) & (cache.pos <= cur)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhts,bsr->bthr", w, c)            # [B,1,H,r]
+    o = jnp.einsum("bthr,rhv->bthv", o_lat, p["w_uv"].astype(jnp.float32))
+    y = o.astype(x.dtype).reshape(B, 1, -1) @ p["wo"]
+    return y, cache

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN — grouped one-hot dispatch (GShard/Switch).
+
+Tokens are reshaped into fixed-size groups [G, g, D] (g = 1024); within
+each group, token-choice top-k routing builds dispatch/combine one-hot
+tensors [G, g, E, C] with per-group capacity C = g*k*cf/E, and experts
+run as ONE batched einsum over [G, E, C, D].  Everything is a dense
+einsum over static shapes:
+
+  - the group axis G inherits the data sharding of the batch, the
+    expert axis E shards over "model" (when divisible) — the dispatch
+    einsum between them lowers to the canonical MoE all-to-all;
+  - no python loop slices the sharded expert axis (a sliced shard
+    forces XLA to replicate that expert's matmul on every device —
+    the failure mode of our first gather-based formulation, see
+    EXPERIMENTS.md §Perf iteration "moe-dispatch");
+  - no while loops hide FLOPs from cost_analysis.
+
+Drop rule: position-priority within group per k-slot (GShard).  The
+dispatch/combine tensors cost ~N*E*C_g memory and ~2*N*E*C_g*D dispatch
+FLOPs — the classic, accepted overhead of capacity-based MoE on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+GROUP_SIZE = 1024
+
+# Optional activation-sharding hints, set by the launcher before
+# lowering (None on single-device tests).  Without an explicit
+# constraint XLA's propagation pass may leave the big [G,E,C,*] expert
+# intermediates replicated (observed: 40x HBM-traffic blowup on
+# dbrx train_4k — §Perf pair A, iteration 3).  Value: a function
+# spec(dims) -> sharding for ("tokens"|"experts") axis roles, usually
+# built from PartitionSpec("data", "model", None, None).
+ACTIVATION_SHARDING = None
+
+
+def _constrain(x, roles: tuple):
+    """roles: per-dim axis role, one of 'tokens'|'experts'|None."""
+    if ACTIVATION_SHARDING is None:
+        return x
+    return ACTIVATION_SHARDING(x, roles)
+
+
+def moe_params(key, d_model: int, n_experts: int, d_ff_e: int,
+               dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = nn.split(key, 4)
+
+    def stack(key_, d_in, d_out):
+        return jnp.stack([nn.dense_init(k, d_in, d_out, dtype=dtype)
+                          for k in nn.split(key_, n_experts)])
+
+    return {
+        "router": nn.dense_init(k1, d_model, n_experts, dtype=jnp.float32),
+        "w_gate": stack(k2, d_model, d_ff_e),
+        "w_up": stack(k3, d_model, d_ff_e),
+        "w_down": stack(k4, d_ff_e, d_model),
+    }
+
+
+def moe_forward(p: dict, x: jax.Array, *, top_k: int,
+                capacity_factor: float = 1.25,
+                group_size: int = GROUP_SIZE
+                ) -> tuple[jax.Array, jax.Array]:
+    """MoE FFN. x [B,S,D] -> (y [B,S,D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    N = B * S
+    g = min(group_size, N)
+    G = -(-N // g)
+    pad = G * g - N
+    xt = x.reshape(N, D)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(G, g, D)
+
+    logits = xg.astype(jnp.float32) @ p["router"]          # [G, g, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    w_topk, idx = jax.lax.top_k(gates, top_k)              # [G, g, k]
+    w_topk = w_topk / (jnp.sum(w_topk, -1, keepdims=True) + 1e-9)
+
+    capacity = min(g, max(top_k, int(capacity_factor * g * top_k / E)))
+
+    # --- dispatch/combine one-hots, k-slot position priority ----------
+    # one-hots live in bf16: they carry 0/1 (+ routing weights whose
+    # precision is set by the f32 w_topk factor applied per-slot), and
+    # the [G,g,E,C] tensors dominate MoE HBM traffic (§Perf pair A,
+    # iteration 2: bf16 halves that term).
+    oh_dtype = jnp.bfloat16 if x.dtype == jnp.bfloat16 else jnp.float32
+    combine = jnp.zeros((G, g, E, capacity), oh_dtype)
+    counts = jnp.zeros((G, E), jnp.int32)
+    for j in range(top_k):
+        m = jax.nn.one_hot(idx[..., j], E, dtype=jnp.int32)  # [G,g,E]
+        pos = jnp.cumsum(m, axis=1) - 1 + counts[:, None, :]
+        keep = (pos < capacity) & (m > 0)
+        pos_oh = (jax.nn.one_hot(jnp.where(keep, pos, 0), capacity,
+                                 dtype=oh_dtype)
+                  * keep[..., None].astype(oh_dtype))       # [G,g,E,C]
+        combine = combine + (w_topk[..., j, None, None]
+                             .astype(oh_dtype) * pos_oh)
+        counts = counts + jnp.sum(m * keep, axis=1)
+    dispatch = (combine > 0).astype(x.dtype)                # [G,g,E,C]
+
+    # --- expert computation (one batched einsum per matmul) -----------
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)         # [G,E,C,D]
+    xe = _constrain(xe, ("tokens", "experts", None, None))
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+         * jnp.einsum("gecd,edf->gecf", xe, p["w_up"]))
+    h = _constrain(h, ("tokens", "experts", None, None))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    ye = _constrain(ye, ("tokens", "experts", None, None))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # load-balance aux loss (Switch eq. 4): E * <f_e * P_e>
+    f_e = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32),
+                   axis=(0, 1))
+    P_e = jnp.mean(gates, axis=(0, 1))
+    aux = E * jnp.sum(f_e * P_e)
+
+    y = y.reshape(G * g, D)[:N].reshape(B, S, D)
+    return y, aux

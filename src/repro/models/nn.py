@@ -1,0 +1,152 @@
+"""Low-level neural-net building blocks (pure functions over param pytrees).
+
+We deliberately avoid flax/haiku: params are plain nested dicts of
+jnp arrays, models are pure functions, and every leaf has a stable name
+so ``launch/sharding.py`` can assign PartitionSpecs by path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init for a [d_in, d_out] matrix."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, (d_in, d_out), dtype=jnp.float32).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+            * (1.0 / math.sqrt(d))).astype(dtype)
+
+
+def split(key, n: int) -> Sequence[jax.Array]:
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) so zero-init is identity
+    return (x * (1.0 + p["scale"])).astype(dt)
+
+
+def layernorm_params(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"] + p["bias"]).astype(dt)
+
+
+def apply_norm(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def norm_params(kind: str, d: int) -> dict:
+    return rmsnorm_params(d) if kind == "rmsnorm" else layernorm_params(d)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """Inverse frequencies for the rotated half of a head."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               rotary_dim: int | None = None) -> jax.Array:
+    """Rotate ``x`` ([B, S, H, D] or [B, S, D]) by position.
+
+    ``positions`` has shape [S] or [B, S].
+    ``rotary_dim`` < D applies partial rotary (stablelm-style).
+    """
+    d = x.shape[-1]
+    rd = rotary_dim or d
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    inv = rope_frequencies(rd, theta)                      # [rd/2]
+    positions = jnp.asarray(positions)
+    if positions.ndim == 1:
+        positions = positions[None, :]                     # [1, S]
+    ang = positions[:, :, None].astype(jnp.float32) * inv  # [b, S, rd/2]
+    if x_rot.ndim == 4:
+        ang = ang[:, :, None, :]                           # head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rot = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rot.astype(x.dtype), x_pass], axis=-1)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position table [seq, d]."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# activations / MLPs
+# ---------------------------------------------------------------------------
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu_params(key, d: int, f: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = split(key, 3)
+    return {"w_gate": dense_init(k1, d, f, dtype=dtype),
+            "w_up": dense_init(k2, d, f, dtype=dtype),
+            "w_down": dense_init(k3, f, d, dtype=dtype)}
+
+
+def swiglu(p: dict, x: jax.Array, act=jax.nn.silu) -> jax.Array:
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def mlp_params(key, d: int, f: int, dtype=jnp.float32) -> dict:
+    k1, k2 = split(key, 2)
+    return {"w_up": dense_init(k1, d, f, dtype=dtype),
+            "b_up": jnp.zeros((f,), dtype),
+            "w_down": dense_init(k2, f, d, dtype=dtype),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    return gelu(x @ p["w_up"] + p["b_up"]) @ p["w_down"] + p["b_down"]
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,89 @@
+"""Int8 weight quantisation for the serving path (beyond-paper).
+
+Per-output-channel symmetric int8: w ~ q * scale, q in [-127, 127].
+On TPU the dequant fuses into the consuming matmul so weights are read
+from HBM at 1 byte/param — halving the weight term of memory-bound
+decode (§Perf pair C, iteration 3).  Training keeps full precision;
+``quantize_tree`` converts a trained/initialised param pytree, and the
+launcher wraps the step function with ``dequantize_tree``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+MIN_QUANT_SIZE = 1 << 20        # only quantise leaves >= 1 MiB
+
+
+def _is_qdict(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def quantize(w: jax.Array) -> dict:
+    """[..., d_out] -> {'q': int8, 'scale': f32 per-output-channel}."""
+    a = jnp.max(jnp.abs(w.astype(jnp.float32)),
+                axis=tuple(range(w.ndim - 1)), keepdims=True)
+    scale = jnp.maximum(a, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize(d: dict, dtype=jnp.bfloat16) -> jax.Array:
+    return (d["q"].astype(dtype) * d["scale"].astype(dtype))
+
+
+def _eligible(leaf) -> bool:
+    return (hasattr(leaf, "size") and leaf.size >= MIN_QUANT_SIZE
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and leaf.ndim >= 2)
+
+
+def quantize_tree(params: Any) -> Any:
+    """Quantise every large float matrix leaf; others pass through."""
+    def visit(leaf):
+        return quantize(leaf) if _eligible(leaf) else leaf
+    return jax.tree_util.tree_map(visit, params)
+
+
+def dequantize_tree(qparams: Any, dtype=jnp.bfloat16) -> Any:
+    def visit(node):
+        return dequantize(node, dtype) if _is_qdict(node) else node
+    return jax.tree_util.tree_map(visit, qparams,
+                                  is_leaf=_is_qdict)
+
+
+def quantize_specs(spec_tree: Any, params_abs: Any) -> Any:
+    """Mirror a PartitionSpec tree onto the quantised structure:
+    'q' keeps the original spec, 'scale' keeps only the last-dim
+    component (it broadcasts along the reduced axes)."""
+    def visit(spec, leaf):
+        if not _eligible(leaf):
+            return spec
+        lst = list(spec) + [None] * (leaf.ndim - len(spec))
+        scale_spec = P(*([None] * (leaf.ndim - 1) + [lst[-1]]))
+        return {"q": spec, "scale": scale_spec}
+    return jax.tree_util.tree_map(
+        visit, spec_tree, params_abs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def quantization_error(params: Any) -> dict:
+    """Max relative error per quantised leaf (diagnostics/tests)."""
+    out = {}
+
+    def visit(path, leaf):
+        if _eligible(leaf):
+            d = quantize(leaf)
+            back = dequantize(d, jnp.float32)
+            err = jnp.max(jnp.abs(back - leaf.astype(jnp.float32)))
+            denom = jnp.max(jnp.abs(leaf.astype(jnp.float32))) + 1e-9
+            out["/".join(str(getattr(p, "key", getattr(p, "idx", "?")))
+                         for p in path)] = float(err / denom)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params)
+    return out

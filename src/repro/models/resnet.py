@@ -1,0 +1,80 @@
+"""ResNet-18 (paper model #2, He et al. 2016) in pure JAX.
+
+Inference-mode batch-norm (folded scale/bias), NHWC layout,
+``lax.conv_general_dilated``.  Serves as the image-classification model
+in the dual-path (Table II) benchmark — its softmax entropy feeds the
+controller exactly like the text model's.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+_STAGES = ((64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2))
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return (jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+            * (2.0 / fan_in) ** 0.5)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_params(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn(p, x):
+    # inference-mode: running stats folded into scale/bias
+    return x * p["scale"] + p["bias"]
+
+
+def init(key, n_classes: int = 1000) -> dict:
+    ks = iter(nn.split(key, 64))
+    params = {"stem": {"conv": _conv_init(next(ks), 7, 7, 3, 64),
+                       "bn": _bn_params(64)},
+              "stages": [],
+              "fc": nn.dense_init(next(ks), 512, n_classes),
+              "fc_b": jnp.zeros((n_classes,))}
+    cin = 64
+    for cout, blocks, stride in _STAGES:
+        stage = []
+        for b in range(blocks):
+            s = stride if b == 0 else 1
+            blk = {"conv1": _conv_init(next(ks), 3, 3, cin, cout),
+                   "bn1": _bn_params(cout),
+                   "conv2": _conv_init(next(ks), 3, 3, cout, cout),
+                   "bn2": _bn_params(cout)}
+            if s != 1 or cin != cout:
+                blk["proj"] = _conv_init(next(ks), 1, 1, cin, cout)
+                blk["proj_bn"] = _bn_params(cout)
+            stage.append(blk)
+            cin = cout
+        params["stages"].append(stage)
+    return params
+
+
+def forward(params: dict, images: jax.Array) -> jax.Array:
+    """images [B, H, W, 3] -> logits [B, n_classes]."""
+    x = _conv(images, params["stem"]["conv"], stride=2)
+    x = jax.nn.relu(_bn(params["stem"]["bn"], x))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, (cout, blocks, stride) in enumerate(_STAGES):
+        for b, blk in enumerate(params["stages"][si]):
+            s = stride if b == 0 else 1
+            y = jax.nn.relu(_bn(blk["bn1"], _conv(x, blk["conv1"], s)))
+            y = _bn(blk["bn2"], _conv(y, blk["conv2"]))
+            sc = x
+            if "proj" in blk:
+                sc = _bn(blk["proj_bn"], _conv(x, blk["proj"], s))
+            x = jax.nn.relu(y + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc"] + params["fc_b"]

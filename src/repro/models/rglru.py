@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal-mixing block:  x -> [linear branch, gate branch];
+linear branch -> causal depthwise conv1d -> RG-LRU -> (* gelu(gate)) ->
+out projection.  The RG-LRU recurrence
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is a diagonal linear recurrence — prefill runs it as a
+``jax.lax.associative_scan`` (TPU-friendly log-depth scan), decode as a
+single fused step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+_C = 8.0
+
+
+def rglru_params(key, d_model: int, width: int, conv_width: int,
+                 dtype=jnp.float32) -> dict:
+    ks = nn.split(key, 6)
+    return {
+        "w_in": nn.dense_init(ks[0], d_model, width, dtype=dtype),
+        "w_gate": nn.dense_init(ks[1], d_model, width, dtype=dtype),
+        "conv_w": 0.01 * jax.random.normal(ks[2], (conv_width, width),
+                                           dtype=jnp.float32).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": nn.dense_init(ks[3], width, width, scale=0.01, dtype=dtype),
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_x": nn.dense_init(ks[4], width, width, scale=0.01, dtype=dtype),
+        "b_x": jnp.zeros((width,), jnp.float32),
+        # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999]
+        "lam": jnp.linspace(3.0, 7.0, width, dtype=jnp.float32),
+        "w_out": nn.dense_init(ks[5], width, d_model, dtype=dtype),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array           # [B, R] float32 recurrent state
+    conv: jax.Array        # [B, W-1, R] conv tail
+
+
+def init_rglru_state(batch: int, width: int, conv_width: int) -> RGLRUState:
+    return RGLRUState(h=jnp.zeros((batch, width), jnp.float32),
+                      conv=jnp.zeros((batch, conv_width - 1, width),
+                                     jnp.float32))
+
+
+def _conv1d(p: dict, x: jax.Array, tail: jax.Array):
+    """Causal depthwise conv. x [B,S,R], tail [B,W-1,R] -> (y, new_tail)."""
+    W = p["conv_w"].shape[0]
+    xt = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xt[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(W))
+    y = y + p["conv_b"]
+    new_tail = xt[:, xt.shape[1] - (W - 1):].astype(jnp.float32)
+    return y, new_tail
+
+
+def _gates(p: dict, x: jax.Array):
+    """x [.., R] -> (a_t, gated input) in float32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(p: dict, x: jax.Array, h0: jax.Array) -> tuple[jax.Array,
+                                                              jax.Array]:
+    """Full-sequence RG-LRU. x [B,S,R], h0 [B,R] -> (y [B,S,R], h_last)."""
+    a, b = _gates(p, x)                                    # [B,S,R]
+    # fold h0 into the first step: h_1 = a_1 h_0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p: dict, x: jax.Array, h: jax.Array) -> tuple[jax.Array,
+                                                             jax.Array]:
+    """One-token step. x [B,1,R], h [B,R] -> (y [B,1,R], h_new)."""
+    a, b = _gates(p, x[:, 0])
+    h_new = a * h + b
+    return h_new[:, None].astype(x.dtype), h_new
+
+
+def rglru_block(p: dict, x: jax.Array, state: RGLRUState,
+                *, single_step: bool = False):
+    """Full temporal-mixing block. x [B,S,D] -> (y [B,S,D], new state)."""
+    gate = nn.gelu(x @ p["w_gate"])
+    u = x @ p["w_in"]
+    u, conv_tail = _conv1d(p, u, state.conv)
+    if single_step:
+        y, h = rglru_step(p, u, state.h)
+    else:
+        y, h = rglru_scan(p, u, state.h)
+    out = (y * gate) @ p["w_out"]
+    return out, RGLRUState(h=h, conv=conv_tail)

@@ -1,0 +1,167 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q;
+within-chunk outputs use the quadratic (attention-like) form, chunk
+boundary states are propagated with a cheap sequential scan over
+chunks.  Per-head scalar decay a_t = exp(-exp(A_log) * dt_t).
+
+Decode carries an O(1) state: conv tail + SSD state [B, H, hd, N].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+def ssd_params(key, d_model: int, *, expand: int, headdim: int, d_state: int,
+               conv_width: int, dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state
+    ks = nn.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * d_state + n_heads
+    return {
+        "in_proj": nn.dense_init(ks[0], d_model, d_in_proj, dtype=dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (conv_width, conv_ch),
+                                          jnp.float32).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": nn.rmsnorm_params(d_inner),
+        "out_proj": nn.dense_init(ks[3], d_inner, d_model, dtype=dtype),
+    }
+
+
+class SSDState(NamedTuple):
+    conv: jax.Array      # [B, W-1, conv_ch] float32
+    h: jax.Array         # [B, H, hd, N] float32
+
+
+def init_ssd_state(batch: int, d_model: int, *, expand: int, headdim: int,
+                   d_state: int, conv_width: int) -> SSDState:
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state
+    return SSDState(
+        conv=jnp.zeros((batch, conv_width - 1, conv_ch), jnp.float32),
+        h=jnp.zeros((batch, n_heads, headdim, d_state), jnp.float32))
+
+
+def _split_proj(zxbcdt: jax.Array, d_inner: int, d_state: int, n_heads: int):
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + d_inner + 2 * d_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xBC, dt
+
+
+def _conv1d(p: dict, x: jax.Array, tail: jax.Array):
+    W = p["conv_w"].shape[0]
+    xt = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xt[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(W))
+    y = jax.nn.silu(y + p["conv_b"])
+    new_tail = xt[:, xt.shape[1] - (W - 1):].astype(jnp.float32)
+    return y, new_tail
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, h0: jax.Array, chunk: int):
+    """Chunked SSD scan.
+
+    x  [B,S,H,hd]   inputs per head
+    dt [B,S,H]      softplus'd step sizes
+    A  [H]          negative decay rates (a_t = exp(A*dt))
+    Bm [B,S,N], Cm [B,S,N]  shared (single-group) B/C projections
+    h0 [B,H,hd,N]   initial state
+    -> y [B,S,H,hd], h_last
+    """
+    B_, S, H, hd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(B_, nc, Q, H, hd)
+    dtc = dt.reshape(B_, nc, Q, H)
+    Bc = Bm.reshape(B_, nc, Q, N)
+    Cc = Cm.reshape(B_, nc, Q, N)
+
+    log_a = A[None, None, None, :] * dtc                  # [B,nc,Q,H] (<=0)
+    l = jnp.cumsum(log_a, axis=2)                         # within-chunk csum
+
+    # --- intra-chunk (quadratic) term -----------------------------------
+    # att[b,c,h,t,s] = exp(l_t - l_s) * (C_t . B_s) * dt_s   for s <= t
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)            # [B,nc,Q,Q]
+    decay = l[:, :, :, None, :] - l[:, :, None, :, :]     # [B,nc,Q,Q,H]? big
+    decay = jnp.transpose(decay, (0, 1, 4, 2, 3))         # [B,nc,H,Q,Q]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    att = jnp.where(mask, jnp.exp(decay) * cb[:, :, None], 0.0)
+    att = att * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchts,bcshd->bcthd", att, xc)
+
+    # --- chunk states -----------------------------------------------------
+    # S_c = sum_s exp(l_last - l_s) * dt_s * B_s (x) x_s
+    w = jnp.exp(l[:, :, -1:, :] - l) * dtc                # [B,nc,Q,H]
+    states = jnp.einsum("bcqh,bcqn,bcqhd->bchdn", w, Bc, xc)
+
+    # --- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(l[:, :, -1, :])                 # [B,nc,H]
+
+    def step(h_prev, inp):
+        s_c, dec = inp                                    # [B,H,hd,N],[B,H]
+        h_new = dec[:, :, None, None] * h_prev + s_c
+        return h_new, h_prev                              # emit state BEFORE
+
+    states_t = jnp.moveaxis(states, 1, 0)                 # [nc,B,H,hd,N]
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)             # [nc,B,H]
+    h_last, h_prevs = jax.lax.scan(step, h0, (states_t, decay_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # [B,nc,H,hd,N]
+
+    # y_inter[t] = C_t . (exp(l_t) * h_prev_chunk)
+    y_inter = jnp.einsum("bcqn,bchdn,bcqh->bcqhd",
+                         Cc, h_prevs, jnp.exp(l))
+    y = (y_intra + y_inter).reshape(B_, nc * Q, H, hd)
+    return y[:, :S], h_last
+
+
+def ssd_block(p: dict, x: jax.Array, state: SSDState, *, expand: int,
+              headdim: int, d_state: int, chunk: int,
+              single_step: bool = False):
+    """Full mamba-2 block. x [B,S,D] -> (y [B,S,D], new_state)."""
+    B_, S, D = x.shape
+    d_inner = expand * D
+    n_heads = d_inner // headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, d_inner, d_state, n_heads)
+    xBC, conv_tail = _conv1d(p, xBC, state.conv)
+    xs = xBC[..., :d_inner].reshape(B_, S, n_heads, headdim)
+    Bm = xBC[..., d_inner:d_inner + d_state]
+    Cm = xBC[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xf = xs.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    if single_step:
+        a = jnp.exp(A[None, :] * dt[:, 0])                # [B,H]
+        dx = dt[:, 0, :, None] * xf[:, 0]                 # [B,H,hd]
+        h = (a[:, :, None, None] * state.h
+             + jnp.einsum("bhd,bn->bhdn", dx, Bf[:, 0]))
+        y = jnp.einsum("bn,bhdn->bhd", Cf[:, 0], h)[:, None]
+    else:
+        y, h = ssd_chunked(xf, dt, A, Bf, Cf, state.h, chunk)
+    y = y + p["D"][None, None, :, None] * xf
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = nn.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    return out, SSDState(conv=conv_tail, h=h)

@@ -1,0 +1,21 @@
+from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
+from repro.serving.continuous import (ContinuousBatchingEngine,
+                                      GenRequest)
+from repro.serving.engine import (ClassifierEngine, GenerationEngine,
+                                  bucket_size)
+from repro.serving.gated import (GateParams, make_gated_classify_step,
+                                 serve_gated)
+from repro.serving.simulator import (ClosedLoopSimulator, Oracle,
+                                     ServedRecord, SimMetrics)
+from repro.serving.workload import (Request, bursty_arrivals,
+                                    closed_loop_arrivals, poisson_arrivals)
+
+__all__ = [
+    "Batch", "DirectPath", "DynamicBatcher",
+    "ContinuousBatchingEngine", "GenRequest",
+    "ClassifierEngine", "GenerationEngine", "bucket_size",
+    "GateParams", "make_gated_classify_step", "serve_gated",
+    "ClosedLoopSimulator", "Oracle", "ServedRecord", "SimMetrics",
+    "Request", "bursty_arrivals", "closed_loop_arrivals",
+    "poisson_arrivals",
+]

@@ -1,0 +1,106 @@
+"""Dual-path scheduling primitives.
+
+``DirectPath`` — FastAPI+ORT analogue: serial, per-request execution,
+minimal fixed overhead.
+
+``DynamicBatcher`` — Triton analogue: requests queue until either
+``max_batch_size`` is reached or ``queue_window_s`` has elapsed since
+the oldest queued request; the fused batch is served in one step.
+``preferred_sizes`` mirrors Triton's preferred_batch_size hint (batches
+round down to the largest preferred size when flushing on timeout).
+
+Both are *virtual-time* schedulers: they operate on an explicit clock
+so the discrete-event simulator and the live engine share one code
+path (the live engine advances the clock with measured walltimes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.landscape import LatencyModel
+from repro.serving.workload import Request
+
+
+@dataclass
+class Batch:
+    requests: list[Request]
+    t_formed: float                  # when the batch was closed
+    t_start: float = 0.0             # service start (>= t_formed)
+    t_finish: float = 0.0
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+
+@dataclass
+class DirectPath:
+    latency: LatencyModel
+    server_free_at: float = 0.0
+
+    def serve(self, req: Request, now: float) -> Batch:
+        start = max(now, self.server_free_at)
+        step = self.latency.step_time(1)
+        finish = start + step
+        self.server_free_at = finish
+        return Batch([req], t_formed=now, t_start=start, t_finish=finish)
+
+    def busy_time(self) -> float:
+        return 0.0                   # accounted per-batch by the caller
+
+
+@dataclass
+class DynamicBatcher:
+    latency: LatencyModel
+    max_batch_size: int = 32
+    queue_window_s: float = 0.01
+    preferred_sizes: tuple = (4, 8, 16, 32)
+    queue: list[Request] = field(default_factory=list)
+    server_free_at: float = 0.0
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    @property
+    def fill(self) -> float:
+        return len(self.queue) / max(self.max_batch_size, 1)
+
+    def submit(self, req: Request, now: float) -> list[Batch]:
+        """Enqueue; returns any batches flushed by this arrival."""
+        flushed = self.poll(now)
+        self.queue.append(req)
+        if len(self.queue) >= self.max_batch_size:
+            flushed.extend(self._flush(now, full=True))
+        return flushed
+
+    def poll(self, now: float) -> list[Batch]:
+        """Flush batches whose queue window expired before ``now``."""
+        out = []
+        while self.queue:
+            deadline = self.queue[0].arrival_s + self.queue_window_s
+            if deadline <= now:
+                out.extend(self._flush(deadline, full=False))
+            else:
+                break
+        return out
+
+    def drain(self, now: float) -> list[Batch]:
+        out = []
+        while self.queue:
+            out.extend(self._flush(max(now, self.queue[0].arrival_s
+                                       + self.queue_window_s), full=False))
+        return out
+
+    def _flush(self, t: float, *, full: bool) -> list[Batch]:
+        n = min(len(self.queue), self.max_batch_size)
+        if not full and self.preferred_sizes:
+            # round down to a preferred size when flushing on timeout
+            pref = [p for p in self.preferred_sizes if p <= n]
+            if pref and n < self.max_batch_size:
+                n = pref[-1] if pref else n
+        reqs, self.queue = self.queue[:n], self.queue[n:]
+        start = max(t, self.server_free_at)
+        finish = start + self.latency.step_time(n)
+        self.server_free_at = finish
+        return [Batch(reqs, t_formed=t, t_start=start, t_finish=finish)]

@@ -1,0 +1,156 @@
+"""Model execution engines for serving.
+
+``ClassifierEngine`` — the ablation/dual-path workhorse: a classifier
+(DistilBERT-style) with a cheap early-exit proxy head.  Calls are
+bucketed to power-of-two batch sizes so each bucket jit-compiles once
+(TPU-style static shapes).
+
+``GenerationEngine`` — LM serving: prefill + lockstep decode against
+the unified transformer cache (used by the LM serving example and the
+decode benchmarks).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import distilbert
+from repro.models import transformer as tfm
+
+
+def bucket_size(n: int, buckets=(1, 2, 4, 8, 16, 32, 64, 128)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclass
+class ClassifierEngine:
+    cfg: dict
+    params: dict
+    exit_layer: int = 2
+    use_pallas_entropy: bool = False
+
+    _full: Callable = field(init=False)
+    _proxy: Callable = field(init=False)
+    step_times: dict = field(default_factory=dict, init=False)
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def full(params, tokens):
+            return distilbert.logits(cfg, params, tokens)
+
+        exit_layer = self.exit_layer
+
+        @jax.jit
+        def proxy(params, tokens):
+            lg = distilbert.early_exit_logits(cfg, params, tokens,
+                                              exit_layer=exit_layer)
+            ent, maxp, amax = kops.entropy_stats(lg, impl="ref")
+            return lg, ent, maxp, amax
+
+        self._full = full
+        self._proxy = proxy
+
+    def _pad(self, tokens: np.ndarray):
+        n = tokens.shape[0]
+        b = bucket_size(n)
+        if b != n:
+            tokens = np.concatenate(
+                [tokens, np.zeros((b - n,) + tokens.shape[1:],
+                                  tokens.dtype)], 0)
+        return jnp.asarray(tokens), n
+
+    def _chunks(self, tokens: np.ndarray, max_bucket: int = 128):
+        for i in range(0, len(tokens), max_bucket):
+            yield tokens[i:i + max_bucket]
+
+    def proxy_scores(self, tokens: np.ndarray):
+        """-> (proxy_pred [n], entropy [n], max_prob [n]) + walltime."""
+        preds, ents, maxps, dt = [], [], [], 0.0
+        for chunk in self._chunks(np.asarray(tokens)):
+            x, n = self._pad(chunk)
+            t0 = time.perf_counter()
+            lg, ent, maxp, amax = jax.block_until_ready(
+                self._proxy(self.params, x))
+            dt += time.perf_counter() - t0
+            preds.append(np.asarray(amax[:n]))
+            ents.append(np.asarray(ent[:n]))
+            maxps.append(np.asarray(maxp[:n]))
+        return (np.concatenate(preds), np.concatenate(ents),
+                np.concatenate(maxps), dt)
+
+    def classify(self, tokens: np.ndarray):
+        """-> (pred [n], walltime_s) through the full model."""
+        preds, dt = [], 0.0
+        for chunk in self._chunks(np.asarray(tokens)):
+            x, n = self._pad(chunk)
+            t0 = time.perf_counter()
+            lg = jax.block_until_ready(self._full(self.params, x))
+            dt += time.perf_counter() - t0
+            preds.append(np.asarray(jnp.argmax(lg[:n], -1)))
+        return np.concatenate(preds), dt
+
+    def calibrate(self, seq_len: int, buckets=(1, 4, 16, 64),
+                  iters: int = 3) -> dict:
+        """Measure per-bucket step times (fills the latency model)."""
+        for b in buckets:
+            toks = np.zeros((b, seq_len), np.int32)
+            self.classify(toks)                      # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                self.classify(toks)
+            self.step_times[b] = (time.perf_counter() - t0) / iters
+        return dict(self.step_times)
+
+
+@dataclass
+class GenerationEngine:
+    cfg: ModelConfig
+    params: dict
+    max_seq: int = 512
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def _prefill(params, tokens, cache):
+            return tfm.prefill(cfg, params, tokens, cache)
+
+        @jax.jit
+        def _decode(params, token, cache, pos):
+            return tfm.decode_step(cfg, params, token, cache, pos)
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 *, greedy: bool = True, seed: int = 0) -> np.ndarray:
+        """prompts [B, S] int32 -> [B, n_new] generated ids (lockstep)."""
+        B, S = prompts.shape
+        cache = tfm.init_cache(self.cfg, B, self.max_seq)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        for i in range(n_new):
+            out.append(np.asarray(tok[:, 0]))
+            logits, cache = self._decode(self.params, tok, cache, S + i)
+            if greedy:
+                tok = jnp.argmax(logits[:, -1], -1)[:, None]
+            else:
+                key, sk = jax.random.split(key)
+                tok = jax.random.categorical(sk, logits[:, -1])[:, None]
+            tok = tok.astype(jnp.int32)
+        return np.stack(out, 1)

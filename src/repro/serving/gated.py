@@ -1,0 +1,114 @@
+"""In-graph gated serving step — the controller fused into one jit.
+
+On TPU a host round-trip per request would dominate; this step keeps
+the whole Appendix-A loop on device with static shapes:
+
+  1. proxy pass (early-exit head) over the full batch;
+  2. fused entropy kernel -> L(x);
+  3. vectorised J(x) vs tau -> admission mask;
+  4. the ``capacity`` lowest-J admitted requests are GATHERED into a
+     fixed-size bucket, the full model runs ONLY on that bucket
+     (capacity/B of the FLOPs), results scatter back;
+  5. everything else is answered by the proxy head
+     ("skip or respond from cache").
+
+This is admission control as bucketed gather/scatter — the same
+static-shape trick the MoE dispatch uses, applied to the paper's
+controller.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import distilbert
+
+
+@dataclass(frozen=True)
+class GateParams:
+    alpha: float = 1.0
+    beta: float = 1.0
+    gamma: float = 1.0
+    rule: str = "le"
+
+
+def make_gated_classify_step(cfg: dict, *, exit_layer: int = 2,
+                             capacity: int | None = None,
+                             gate: GateParams = GateParams()
+                             ) -> Callable:
+    """Returns jit'd step(params, tokens, tau, e_norm, c_norm) ->
+    (pred [B], admitted [B] bool, entropy [B]).
+
+    ``e_norm``/``c_norm`` are the normalised meter/congestion scalars
+    snapshotted on the host (the slow loop); ``tau`` the current
+    threshold.  ``capacity`` bounds how many requests may take the
+    full model per step (default B//2)."""
+
+    def step(params, tokens, tau, e_norm, c_norm):
+        B = tokens.shape[0]
+        cap = capacity or max(B // 2, 1)
+
+        # 1-2: proxy + fused entropy (the L(x) hot-spot kernel)
+        proxy_lg = distilbert.early_exit_logits(cfg, params, tokens,
+                                                exit_layer=exit_layer)
+        ent, maxp, proxy_pred = kops.entropy_stats(proxy_lg, impl="ref")
+        n_classes = proxy_lg.shape[-1]
+        L = ent / jnp.log(n_classes)          # normalised to [0,1]
+
+        # 3: vectorised J(x) vs tau
+        den = gate.alpha + gate.beta + gate.gamma
+        J = (gate.alpha * L + gate.beta * e_norm
+             + gate.gamma * c_norm) / den
+        admit = (J <= tau) if gate.rule == "le" else (J >= tau)
+
+        # 4: bucket the `cap` best (lowest-J) admitted requests
+        score = jnp.where(admit, -J, -jnp.inf)
+        _, idx = jax.lax.top_k(score, cap)
+        in_bucket = jnp.zeros((B,), bool).at[idx].set(True) & admit
+        sub = jnp.take(tokens, idx, axis=0)
+        full_lg = distilbert.logits(cfg, params, sub)
+        full_pred = jnp.argmax(full_lg, -1).astype(jnp.int32)
+
+        # 5: scatter back; everyone else gets the proxy answer
+        pred = proxy_pred
+        pred = pred.at[idx].set(
+            jnp.where(jnp.take(in_bucket, idx), full_pred,
+                      jnp.take(proxy_pred, idx)))
+        return pred, in_bucket, ent
+
+    return jax.jit(step)
+
+
+def serve_gated(cfg: dict, params, tokens, *, tau_schedule,
+                exit_layer: int = 2, batch: int = 64,
+                gate: GateParams = GateParams()):
+    """Batched offline serving through the gated step.  Returns
+    (preds [N], admitted [N], entropies [N]); tau_schedule(t) is
+    evaluated once per batch (the slow closed loop)."""
+    import numpy as np
+
+    step = make_gated_classify_step({**cfg}, exit_layer=exit_layer,
+                                    gate=gate)
+    N = len(tokens)
+    preds = np.zeros(N, np.int32)
+    admits = np.zeros(N, bool)
+    ents = np.zeros(N, np.float32)
+    e_norm = 0.5
+    for start in range(0, N, batch):
+        chunk = tokens[start:start + batch]
+        n = len(chunk)
+        if n < batch:
+            chunk = np.concatenate(
+                [chunk, np.zeros((batch - n,) + chunk.shape[1:],
+                                 chunk.dtype)])
+        tau = float(tau_schedule(start))
+        c_norm = 0.0                      # offline: no queue pressure
+        p, a, e = step(params, jnp.asarray(chunk), tau, e_norm, c_norm)
+        preds[start:start + n] = np.asarray(p[:n])
+        admits[start:start + n] = np.asarray(a[:n])
+        ents[start:start + n] = np.asarray(e[:n])
+    return preds, admits, ents

@@ -1,0 +1,223 @@
+"""Closed-loop discrete-event simulator — the paper's testbed, virtual.
+
+Wires together: arrival stream -> admission controller (J vs tau) ->
+dual-path scheduler (DirectPath / DynamicBatcher) -> energy accounting
+(EnergyModel) -> feedback (EnergyMeter EWMA + congestion -> next J).
+
+Model behaviour enters through an ``Oracle``: precomputed per-request
+full-model predictions, proxy predictions and proxy entropies (the
+engines produce these in one vectorised pass), plus calibrated latency
+models.  The DES itself is pure bookkeeping, so 10k-request sweeps run
+in milliseconds and every run is exactly reproducible — the paper's
+"auditable basis" requirement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Literal
+
+import numpy as np
+
+from repro.core.controller import AdmissionController
+from repro.core.energy import EnergyModel
+from repro.core.landscape import LatencyModel
+from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
+from repro.serving.workload import Request
+
+
+@dataclass
+class Oracle:
+    """Per-request model behaviour, precomputed (index = request rid)."""
+    full_pred: np.ndarray            # [N]
+    proxy_pred: np.ndarray           # [N]
+    entropy: np.ndarray              # [N] proxy softmax entropy (L(x))
+    labels: np.ndarray | None = None
+    proxy_latency: LatencyModel | None = None   # triage cost
+
+
+@dataclass
+class ServedRecord:
+    rid: int
+    arrival: float
+    finish: float
+    admitted: bool
+    path: str
+    pred: int
+    correct: bool | None
+    batch_size: int = 1
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+
+@dataclass
+class SimMetrics:
+    records: list[ServedRecord]
+    busy_s: float
+    span_s: float
+    energy_model: EnergyModel
+    n_chips: int = 1
+
+    def _lat(self):
+        return np.array([r.latency for r in self.records])
+
+    @property
+    def n(self):
+        return len(self.records)
+
+    @property
+    def admission_rate(self):
+        return np.mean([r.admitted for r in self.records])
+
+    @property
+    def mean_latency_s(self):
+        return float(self._lat().mean())
+
+    @property
+    def std_latency_s(self):
+        return float(self._lat().std())
+
+    @property
+    def p95_latency_s(self):
+        return float(np.percentile(self._lat(), 95))
+
+    @property
+    def throughput_qps(self):
+        return self.n / max(self.span_s, 1e-9)
+
+    @property
+    def total_time_s(self):
+        return self.span_s
+
+    @property
+    def energy_j(self):
+        busy = self.energy_model.p_active * self.busy_s * self.n_chips
+        idle = self.energy_model.p_idle * max(
+            self.span_s - self.busy_s, 0.0) * self.n_chips
+        return busy + idle
+
+    @property
+    def energy_kwh(self):
+        return self.energy_j / 3.6e6
+
+    @property
+    def co2_kg(self):
+        return EnergyModel.co2_kg(self.energy_j)
+
+    @property
+    def accuracy(self):
+        cs = [r.correct for r in self.records if r.correct is not None]
+        return float(np.mean(cs)) if cs else float("nan")
+
+    def summary(self) -> dict:
+        return {
+            "n": self.n,
+            "admission_rate": round(float(self.admission_rate), 4),
+            "mean_latency_ms": round(self.mean_latency_s * 1e3, 3),
+            "std_latency_ms": round(self.std_latency_s * 1e3, 3),
+            "p95_latency_ms": round(self.p95_latency_s * 1e3, 3),
+            "throughput_qps": round(self.throughput_qps, 2),
+            "total_time_s": round(self.span_s, 4),
+            "busy_s": round(self.busy_s, 4),
+            "energy_kwh": round(self.energy_kwh, 6),
+            "co2_kg": round(self.co2_kg, 6),
+            "accuracy": round(self.accuracy, 4),
+        }
+
+
+@dataclass
+class ClosedLoopSimulator:
+    oracle: Oracle
+    controller: AdmissionController
+    direct: DirectPath
+    batched: DynamicBatcher
+    energy_model: EnergyModel = field(default_factory=EnergyModel)
+    path: Literal["direct", "batched", "auto"] = "auto"
+    auto_queue_threshold: int = 4     # route to batcher when loaded
+    n_chips: int = 1
+
+    def _pick_path(self) -> str:
+        if self.path != "auto":
+            return self.path
+        return ("batched" if self.batched.queue_depth
+                >= self.auto_queue_threshold else "direct")
+
+    def run(self, requests: list[Request]) -> SimMetrics:
+        ctrl = self.controller
+        recs: list[ServedRecord] = []
+        busy = 0.0
+        lat_window: list[float] = []
+
+        def label_of(r: Request):
+            if r.label is not None:
+                return r.label
+            if self.oracle.labels is not None:
+                return int(self.oracle.labels[r.rid])
+            return None
+
+        def finish_batch(b: Batch, path: str):
+            nonlocal busy
+            busy += b.t_finish - b.t_start
+            # energy feedback: modelled joules amortised over the batch
+            j = self.energy_model.p_active * (b.t_finish - b.t_start)
+            ctrl.meter.record(j, n_requests=b.size)
+            for r in b.requests:
+                lat = b.t_finish - r.arrival_s
+                lat_window.append(lat)
+                pred = int(self.oracle.full_pred[r.rid])
+                lbl = label_of(r)
+                correct = None if lbl is None else pred == lbl
+                recs.append(ServedRecord(
+                    rid=r.rid, arrival=r.arrival_s, finish=b.t_finish,
+                    admitted=True, path=path, pred=pred, correct=correct,
+                    batch_size=b.size))
+
+        proxy_lat = (self.oracle.proxy_latency
+                     or LatencyModel(t_fixed_s=0.0, t_tok_s=0.0))
+
+        for req in requests:
+            now = req.arrival_s
+            for b in self.batched.poll(now):
+                finish_batch(b, "batched")
+
+            # ---- triage (Appendix A) --------------------------------
+            t_triage = proxy_lat.step_time(1)
+            busy += t_triage
+            L = float(self.oracle.entropy[req.rid])
+            ctrl.congestion.queue_depth = self.batched.queue_depth
+            ctrl.congestion.batch_fill = self.batched.fill
+            if lat_window:
+                ctrl.congestion.p95_latency_s = float(
+                    np.percentile(lat_window[-256:], 95))
+            decision = ctrl.decide(L, now)
+
+            if not decision.admit:
+                # "skip or respond from cache": the proxy answers
+                pred = int(self.oracle.proxy_pred[req.rid])
+                lbl = label_of(req)
+                correct = None if lbl is None else pred == lbl
+                finish = now + t_triage
+                lat_window.append(t_triage)
+                recs.append(ServedRecord(
+                    rid=req.rid, arrival=now, finish=finish,
+                    admitted=False, path="skip", pred=pred,
+                    correct=correct))
+                continue
+
+            if self._pick_path() == "direct":
+                finish_batch(self.direct.serve(req, now), "direct")
+            else:
+                for b in self.batched.submit(req, now):
+                    finish_batch(b, "batched")
+
+        last = requests[-1].arrival_s if requests else 0.0
+        for b in self.batched.drain(last):
+            finish_batch(b, "batched")
+
+        first = requests[0].arrival_s if requests else 0.0
+        span = max((max(r.finish for r in recs) - first) if recs else 0.0,
+                   1e-9)
+        return SimMetrics(records=recs, busy_s=busy, span_s=span,
+                          energy_model=self.energy_model,
+                          n_chips=self.n_chips)

@@ -1,0 +1,60 @@
+"""Request model + synthetic arrival processes.
+
+The paper's HTTP front-ends (FastAPI endpoints, Triton gRPC) become
+in-process request streams: Poisson for steady traffic, on/off bursts
+for the "bursty QPS" regime where Triton-style dynamic batching wins.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival_s: float
+    payload: Any = None            # token ids / image / feature index
+    label: int | None = None       # for accuracy accounting
+
+
+def poisson_arrivals(n: int, rate_qps: float, *, seed: int = 0,
+                     payloads=None, labels=None) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_qps, size=n)
+    times = np.cumsum(gaps)
+    return _mk(times, payloads, labels)
+
+
+def bursty_arrivals(n: int, base_qps: float, burst_qps: float, *,
+                    burst_every_s: float = 2.0, burst_len_s: float = 0.5,
+                    seed: int = 0, payloads=None, labels=None
+                    ) -> list[Request]:
+    """On/off modulated Poisson: base rate with periodic bursts."""
+    rng = np.random.default_rng(seed)
+    times, t = [], 0.0
+    while len(times) < n:
+        phase = t % burst_every_s
+        rate = burst_qps if phase < burst_len_s else base_qps
+        t += rng.exponential(1.0 / rate)
+        times.append(t)
+    return _mk(np.asarray(times), payloads, labels)
+
+
+def closed_loop_arrivals(n: int, *, think_s: float = 0.0,
+                         payloads=None, labels=None) -> list[Request]:
+    """Back-to-back (offline/batch) arrivals — the ablation's regime."""
+    times = np.arange(n) * think_s
+    return _mk(times, payloads, labels)
+
+
+def _mk(times, payloads, labels) -> list[Request]:
+    out = []
+    for i, t in enumerate(times):
+        out.append(Request(
+            rid=i, arrival_s=float(t),
+            payload=None if payloads is None else payloads[i],
+            label=None if labels is None else int(labels[i])))
+    return out

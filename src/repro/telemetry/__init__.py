@@ -1,0 +1,5 @@
+from repro.telemetry.carbon import (CarbonTracker,
+                                    GRID_INTENSITY_KG_PER_KWH)
+from repro.telemetry.tracker import Run, Tracker
+
+__all__ = ["CarbonTracker", "GRID_INTENSITY_KG_PER_KWH", "Run", "Tracker"]

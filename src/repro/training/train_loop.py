@@ -1,0 +1,107 @@
+"""Training step + loop for the unified LM and the classifier.
+
+``make_train_step`` returns the pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function that the launcher jits/pjits —
+the same function object is what ``launch/dryrun.py`` lowers on the
+production mesh for the ``train_4k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import distilbert
+from repro.models import transformer as tfm
+from repro.training.optimizer import AdamW, AdamWState, cosine_schedule
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, *, prefix_embeds=None,
+            enc_embeds=None):
+    """Next-token cross-entropy (tokens [B, S+1]) + MoE aux."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = tfm.forward(cfg, params, inp, prefix_embeds=prefix_embeds,
+                              enc_embeds=enc_embeds)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, *,
+                    total_steps: int = 10_000,
+                    warmup: int = 100,
+                    with_frontend: bool = False) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (p, s, metrics).
+
+    ``batch`` is a dict: {"tokens": [B, S+1]} plus optional
+    "prefix_embeds"/"enc_embeds" when ``with_frontend`` (vlm/audio)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        def loss_fn(p):
+            return lm_loss(cfg, p, batch["tokens"],
+                           prefix_embeds=batch.get("prefix_embeds"),
+                           enc_embeds=batch.get("enc_embeds"))
+
+        (total, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr_scale = cosine_schedule(opt_state.count, warmup=warmup,
+                                   total=total_steps)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params,
+                                              lr_scale=lr_scale)
+        metrics = dict(metrics, total=total, grad_norm=gnorm,
+                       lr_scale=lr_scale)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_classifier_train_step(cfg: dict, opt: AdamW) -> Callable:
+    """Train step for the DistilBERT classifier: joint loss over the
+    full head and the early-exit proxy head (so the proxy is a
+    *calibrated* triage signal, not an afterthought)."""
+
+    def train_step(params, opt_state: AdamWState, tokens, labels):
+        def loss_fn(p):
+            lg = distilbert.logits(cfg, p, tokens)
+            lg_exit = distilbert.early_exit_logits(cfg, p, tokens)
+            onehot = jax.nn.one_hot(labels, lg.shape[-1])
+            ce = -jnp.mean(jnp.sum(
+                onehot * jax.nn.log_softmax(lg), axis=-1))
+            ce_exit = -jnp.mean(jnp.sum(
+                onehot * jax.nn.log_softmax(lg_exit), axis=-1))
+            return ce + 0.5 * ce_exit, {"ce": ce, "ce_exit": ce_exit}
+
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, dict(metrics, grad_norm=gnorm)
+
+    return train_step
+
+
+def train_classifier(cfg: dict, params, batches, *, steps: int,
+                     opt: AdamW | None = None, log_every: int = 50,
+                     verbose: bool = True):
+    """Simple host loop used by examples/tests; returns (params, log)."""
+    opt = opt or AdamW(lr=1e-3, weight_decay=0.0)
+    step_fn = jax.jit(make_classifier_train_step(cfg, opt))
+    opt_state = opt.init(params)
+    log = []
+    for i in range(steps):
+        toks, labels = next(batches)
+        params, opt_state, m = step_fn(params, opt_state,
+                                       jnp.asarray(toks),
+                                       jnp.asarray(labels))
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"] = i
+            log.append(rec)
+            if verbose:
+                print(f"step {i:5d}  ce {rec['ce']:.4f}  "
+                      f"exit {rec['ce_exit']:.4f}")
+    return params, log

@@ -1,0 +1,213 @@
+"""The paper's controller: tau(t) decay (Eq. 3), J(x) cost (Eq. 1),
+admission rule, closed-loop adaptation, landscape basins."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdaptiveThreshold, AdmissionController,
+                        CostModel, CostWeights, CostLandscape,
+                        DecayingThreshold, EnergyMeter, EnergyModel,
+                        LatencyModel, Normalizer, OperatingState)
+
+
+# ---------------------------------------------------------------------------
+# tau(t) — Eq. (3)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(tau0=st.floats(0.1, 10), tau_inf=st.floats(0.0, 5),
+       k=st.floats(1e-3, 2.0), t=st.floats(0, 100))
+def test_threshold_decay_properties(tau0, tau_inf, k, t):
+    th = DecayingThreshold(tau0=tau0, tau_inf=tau_inf, k=k)
+    # boundary values
+    assert math.isclose(th(0.0), tau0, rel_tol=1e-9, abs_tol=1e-9)
+    assert math.isclose(th(1e9), tau_inf, rel_tol=1e-6, abs_tol=1e-6)
+    # monotone toward tau_inf
+    a, b = th(t), th(t + 1.0)
+    if tau0 >= tau_inf:
+        assert a >= b - 1e-12
+    else:
+        assert a <= b + 1e-12
+    # bounded by [min, max]
+    lo, hi = min(tau0, tau_inf), max(tau0, tau_inf)
+    assert lo - 1e-9 <= a <= hi + 1e-9
+
+
+def test_threshold_settled():
+    th = DecayingThreshold(tau0=1.0, tau_inf=0.4, k=0.5)
+    assert not th.settled(0.0)
+    assert th.settled(20.0)
+
+
+def test_adaptive_threshold_tracks_target_rate():
+    """PI-closed loop pulls the admission rate toward the target."""
+    rng = np.random.default_rng(0)
+    th = AdaptiveThreshold(base=DecayingThreshold(0.9, 0.5, 1.0),
+                           target_rate=0.5, kp=0.8, ki=0.1)
+    ctrl = AdmissionController(threshold=th)
+    for i in range(3000):
+        L = float(rng.uniform(0, 1))
+        ctrl.meter.record(5.0)
+        ctrl.decide(L, t=i * 0.01)
+    tail = [d.admit for d in ctrl.history[-1000:]]
+    assert abs(np.mean(tail) - 0.5) < 0.15
+
+
+# ---------------------------------------------------------------------------
+# J(x) — Eq. (1)
+# ---------------------------------------------------------------------------
+
+def test_cost_monotone_in_components():
+    cm = CostModel()
+    for v in np.linspace(0, 1, 20):
+        cm.observe(v, v * 10, v * 3)
+    j_low = cm.J(0.1, 1.0, 0.3)
+    j_high_l = cm.J(0.9, 1.0, 0.3)
+    j_high_e = cm.J(0.1, 9.0, 0.3)
+    j_high_c = cm.J(0.1, 1.0, 2.7)
+    assert j_high_l > j_low
+    assert j_high_e > j_low
+    assert j_high_c > j_low
+
+
+def test_cost_weights_policy_knobs():
+    cm_perf = CostModel(weights=CostWeights.performance_priority())
+    cm_eco = CostModel(weights=CostWeights.ecology_priority())
+    for cm in (cm_perf, cm_eco):
+        for v in np.linspace(0, 1, 10):
+            cm.observe(v, v, v)
+    # ecology priority punishes energy harder (relative)
+    base = (0.2, 0.5, 0.2)
+    spike = (0.2, 0.9, 0.2)
+    d_perf = cm_perf.J(*spike) - cm_perf.J(*base)
+    d_eco = cm_eco.J(*spike) - cm_eco.J(*base)
+    assert d_eco > d_perf
+
+
+def test_normalizer_bounds():
+    n = Normalizer()
+    for v in [3.0, 7.0, 5.0, 4.0]:
+        n.update(v)
+    assert 0.0 <= n(2.0) <= 1.0
+    assert 0.0 <= n(10.0) <= 1.0
+    assert n(10.0) == 1.0 and n(0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# admission rules
+# ---------------------------------------------------------------------------
+
+def test_rule_le_rejects_high_cost():
+    """Coherent rule: high-J (uncertain/congested) requests skipped.
+
+    J is the weighted MEAN of normalised components, so with only L
+    varying J spans [0, 1/3] — tau sits inside that band."""
+    ctrl = AdmissionController(threshold=DecayingThreshold(0.15, 0.15, 1.0),
+                               rule="le")
+    for v in np.linspace(0, 1, 50):
+        ctrl.cost.observe(v, 1.0, 0.0)
+    ctrl.meter.record(1.0)
+    low = ctrl.decide(0.05, t=100.0)
+    high = ctrl.decide(0.95, t=100.0)
+    assert low.admit and not high.admit
+
+
+def test_rule_ge_literal_eq2():
+    ctrl = AdmissionController(threshold=DecayingThreshold(0.15, 0.15, 1.0),
+                               rule="ge")
+    for v in np.linspace(0, 1, 50):
+        ctrl.cost.observe(v, 1.0, 0.0)
+    ctrl.meter.record(1.0)
+    low = ctrl.decide(0.05, t=100.0)
+    high = ctrl.decide(0.95, t=100.0)
+    assert high.admit and not low.admit
+
+
+def test_open_loop_admits_everything():
+    ctrl = AdmissionController(enabled=False)
+    for i in range(100):
+        assert ctrl.decide(float(i % 7) / 7, t=i).admit
+    assert ctrl.admission_rate == 1.0
+
+
+def test_startup_permissive_then_strict():
+    """At t=0 (tau=tau0 high) nearly everything admits; at t->inf only
+    the low-J basin — the paper's folding dynamic."""
+    ctrl = AdmissionController(
+        threshold=DecayingThreshold(tau0=1.0, tau_inf=0.3, k=2.0))
+    for v in np.linspace(0, 1, 64):
+        ctrl.cost.observe(v, 1.0, 0.0)
+    ctrl.meter.record(1.0)
+    early = [ctrl.decide(L, t=0.0).admit
+             for L in np.linspace(0.05, 0.95, 19)]
+    late = [ctrl.decide(L, t=50.0).admit
+            for L in np.linspace(0.05, 0.95, 19)]
+    assert sum(early) > sum(late)
+    assert sum(late) >= 1                     # low basin stays open
+
+
+# ---------------------------------------------------------------------------
+# energy model / meter
+# ---------------------------------------------------------------------------
+
+def test_energy_meter_ewma():
+    m = EnergyMeter(ewma=0.5)
+    m.record(10.0)
+    m.record(20.0)
+    assert 10.0 < m.joules_per_request < 20.0
+    assert m.total_joules == 30.0
+    assert m.total_kwh == pytest.approx(30.0 / 3.6e6)
+
+
+def test_roofline_terms_and_bottleneck():
+    em = EnergyModel()
+    t = em.roofline(flops=1e15, bytes_=1e9, coll_bytes=0.0)
+    assert t.bottleneck == "compute"
+    t = em.roofline(flops=1e9, bytes_=1e12, coll_bytes=0.0)
+    assert t.bottleneck == "memory"
+    t = em.roofline(flops=1e9, bytes_=1e9, coll_bytes=1e12)
+    assert t.bottleneck == "collective"
+    assert t.step_time_s == t.collective_s
+
+
+# ---------------------------------------------------------------------------
+# landscape / basins
+# ---------------------------------------------------------------------------
+
+def _landscape():
+    return CostLandscape(
+        direct=LatencyModel(t_fixed_s=0.002, t_tok_s=0.004),
+        batched=LatencyModel(t_fixed_s=0.030, t_tok_s=0.0012),
+        arrival_rate=200.0)
+
+
+def test_basins_are_local_minima():
+    ls = _landscape()
+    states, costs = ls.evaluate()
+    for i in ls.basins():
+        if i > 0:
+            assert costs[i] <= costs[i - 1]
+        if i + 1 < len(costs):
+            assert costs[i] <= costs[i + 1]
+
+
+def test_first_acceptable_basin_not_global():
+    """Folding semantics: settles for the first acceptable basin even
+    when a deeper one exists further out."""
+    ls = _landscape()
+    states, costs = ls.evaluate()
+    first = ls.first_acceptable_basin(tau=1.0)
+    glob = ls.global_minimum()
+    assert first is not None
+    assert ls.cost(first) >= ls.cost(glob)    # may be shallower
+    # with a strict tau only deep basins qualify
+    tight = ls.first_acceptable_basin(tau=ls.cost(glob) + 1e-9)
+    assert tight is not None
+    assert abs(ls.cost(tight) - ls.cost(glob)) < 0.05
+
+
+def test_landscape_none_when_tau_too_strict():
+    ls = _landscape()
+    assert ls.first_acceptable_basin(tau=-1.0) is None

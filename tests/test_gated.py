@@ -1,0 +1,77 @@
+"""In-graph gated serving step: static-shape admission + bucketed
+full-model execution inside one jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DecayingThreshold
+from repro.models import distilbert
+from repro.serving.gated import (GateParams, make_gated_classify_step,
+                                 serve_gated)
+from repro.training import ClassificationData, train_classifier
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = distilbert.config(n_layers=3, d_model=64, n_heads=4, d_ff=128,
+                            vocab=600, max_pos=48)
+    params = distilbert.init(cfg, jax.random.PRNGKey(0))
+    data = ClassificationData(vocab=600, seq_len=32, seed=11)
+    params, _ = train_classifier(cfg, params, data.train_batches(32),
+                                 steps=100, verbose=False)
+    return cfg, params, data
+
+
+def test_gated_step_shapes_and_capacity(model):
+    cfg, params, data = model
+    toks, labels, _ = data.sample(64)
+    step = make_gated_classify_step(cfg, capacity=16)
+    pred, admitted, ent = step(params, jnp.asarray(toks), 0.5, 0.3, 0.0)
+    assert pred.shape == (64,) and admitted.shape == (64,)
+    assert int(jnp.sum(admitted)) <= 16          # capacity respected
+    assert bool(jnp.isfinite(ent).all())
+
+
+def test_gate_tau_monotone(model):
+    """Stricter tau admits fewer requests (rule='le')."""
+    cfg, params, data = model
+    toks, _, _ = data.sample(64)
+    step = make_gated_classify_step(cfg, capacity=64)
+    admits = []
+    for tau in (0.05, 0.3, 0.9):
+        _, a, _ = step(params, jnp.asarray(toks), tau, 0.0, 0.0)
+        admits.append(int(jnp.sum(a)))
+    assert admits[0] <= admits[1] <= admits[2]
+
+
+def test_gated_pred_sources(model):
+    """Admitted rows carry full-model predictions, skipped rows carry
+    proxy predictions."""
+    cfg, params, data = model
+    toks, _, _ = data.sample(32)
+    x = jnp.asarray(toks)
+    step = make_gated_classify_step(cfg, capacity=32)
+    pred, admitted, _ = step(params, x, 0.9, 0.0, 0.0)
+
+    full = jnp.argmax(distilbert.logits(cfg, params, x), -1)
+    proxy = jnp.argmax(
+        distilbert.early_exit_logits(cfg, params, x, exit_layer=2), -1)
+    adm = np.asarray(admitted)
+    np.testing.assert_array_equal(np.asarray(pred)[adm],
+                                  np.asarray(full)[adm])
+    np.testing.assert_array_equal(np.asarray(pred)[~adm],
+                                  np.asarray(proxy)[~adm])
+
+
+def test_serve_gated_closed_loop(model):
+    cfg, params, data = model
+    toks, labels, _ = data.sample(300)
+    th = DecayingThreshold(tau0=0.9, tau_inf=0.25, k=0.02)
+    preds, admits, ents = serve_gated(cfg, params, toks,
+                                      tau_schedule=th, batch=64)
+    acc = float(np.mean(preds == labels))
+    assert 0.0 < admits.mean() < 1.0
+    assert acc > 0.7
+    # later batches are stricter (tau decayed)
+    assert admits[:64].mean() >= admits[-64:].mean() - 0.25

@@ -1,0 +1,207 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties,
+each Pallas kernel (interpret mode) vs its pure-jnp ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import decode_attention as dak
+from repro.kernels import entropy as entk
+from repro.kernels import flash_attention as fak
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# entropy kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,V,dtype", [
+    (4, 1000, jnp.float32),
+    (16, 4096, jnp.float32),
+    (3, 257, jnp.float32),
+    (8, 2048, jnp.bfloat16),
+    (1, 50_304, jnp.float32),
+])
+def test_entropy_kernel_matches_ref(B, V, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), (B, V)) * 4).astype(dtype)
+    h, p, a = entk.entropy_stats(x, b_blk=8, v_blk=512)
+    hr, pr, ar = ref.entropy_stats(x)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.array(h), np.array(hr), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.array(p), np.array(pr), rtol=tol, atol=tol)
+    np.testing.assert_array_equal(np.array(a), np.array(ar))
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 9), v=st.integers(2, 700),
+       scale=st.floats(0.1, 20.0), seed=st.integers(0, 2 ** 16))
+def test_entropy_kernel_property(b, v, scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, v)) * scale
+    h, p, a = entk.entropy_stats(x, b_blk=4, v_blk=128)
+    hr, pr, _ = ref.entropy_stats(x)
+    np.testing.assert_allclose(np.array(h), np.array(hr),
+                               rtol=1e-4, atol=1e-4)
+    # invariants: 0 <= H <= log(V); 1/V <= p_max <= 1
+    assert (np.array(h) >= -1e-5).all()
+    assert (np.array(h) <= np.log(v) + 1e-4).all()
+    assert (np.array(p) <= 1.0 + 1e-6).all()
+    assert (np.array(p) >= 1.0 / v - 1e-6).all()
+
+
+def test_entropy_extremes():
+    # one-hot logits -> H ~ 0, p ~ 1; uniform -> H = log V
+    V = 512
+    x = jnp.zeros((2, V)).at[0, 7].set(100.0)
+    h, p, a = entk.entropy_stats(x, v_blk=128)
+    assert float(h[0]) < 1e-3 and abs(float(p[0]) - 1.0) < 1e-5
+    assert int(a[0]) == 7
+    np.testing.assert_allclose(float(h[1]), np.log(V), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,Sq,Skv,hd,win,dtype", [
+    (2, 4, 2, 64, 64, 32, 0, jnp.float32),
+    (1, 8, 8, 100, 100, 16, 0, jnp.float32),
+    (2, 4, 1, 128, 128, 64, 32, jnp.float32),   # MQA + window
+    (1, 2, 2, 70, 70, 8, 16, jnp.float32),      # ragged
+    (2, 4, 2, 64, 64, 32, 0, jnp.bfloat16),
+])
+def test_flash_attention_matches_ref(B, H, K, Sq, Skv, hd, win, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, K, Skv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, K, Skv, hd)).astype(dtype)
+    o = fak.flash_attention(q, k, v, window=win, q_blk=32, k_blk=32)
+    orf = ref.flash_attention(q, k, v, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.array(o, np.float32),
+                               np.array(orf, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), g=st.integers(1, 4), k=st.integers(1, 3),
+       sq=st.integers(1, 80), hd=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 999))
+def test_flash_attention_property(b, g, k, sq, hd, seed):
+    H = g * k
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, H, sq, hd))
+    kk = jax.random.normal(ks[1], (b, k, sq, hd))
+    v = jax.random.normal(ks[2], (b, k, sq, hd))
+    o = fak.flash_attention(q, kk, v, q_blk=16, k_blk=16)
+    orf = ref.flash_attention(q, kk, v)
+    np.testing.assert_allclose(np.array(o), np.array(orf),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_q_offset():
+    """Continuation chunks (q_offset > 0) see the right causal mask."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 16, 8))
+    k = jax.random.normal(ks[1], (1, 2, 48, 8))
+    v = jax.random.normal(ks[2], (1, 2, 48, 8))
+    o = fak.flash_attention(q, k, v, q_offset=32, q_blk=16, k_blk=16)
+    orf = ref.flash_attention(q, k, v, q_offset=32)
+    np.testing.assert_allclose(np.array(o), np.array(orf),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,S,hd,win", [
+    (2, 4, 2, 256, 32, 0),
+    (3, 8, 1, 100, 16, 0),
+    (2, 4, 4, 128, 64, 48),
+    (1, 16, 2, 1024, 128, 0),
+])
+def test_decode_attention_matches_ref(B, H, K, S, hd, win):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, K, S, hd))
+    v = jax.random.normal(ks[2], (B, K, S, hd))
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kv_pos = kv_pos.at[:, S - 5:].set(-1)          # empty slots
+    cur = jnp.full((B,), S - 1)
+    o = dak.decode_attention(q, k, v, kv_pos, cur, window=win, k_blk=64)
+    orf = ref.decode_attention(q, k, v, kv_pos, cur, window=win)
+    np.testing.assert_allclose(np.array(o), np.array(orf),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_ring_buffer():
+    """Ring-buffered (windowed) cache: slot positions out of order."""
+    B, H, K, S, hd = 1, 2, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, K, S, hd))
+    v = jax.random.normal(ks[2], (B, K, S, hd))
+    # ring: slots hold positions 32..63 wrapped
+    kv_pos = jnp.asarray([(np.arange(S) + 32 - (np.arange(S) >= 16) * 0)
+                          % 64 + 32])[0][None, :]
+    kv_pos = jnp.asarray(np.roll(np.arange(32, 64), 7))[None, :]
+    cur = jnp.array([63])
+    o = dak.decode_attention(q, k, v, kv_pos, cur, window=16, k_blk=16)
+    orf = ref.decode_attention(q, k, v, kv_pos, cur, window=16)
+    np.testing.assert_allclose(np.array(o), np.array(orf),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch layer
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_ref_equals_kernel():
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 512))
+    for impl in ("auto", "ref"):
+        h, p, a = ops.entropy_stats(x, impl=impl)
+        assert h.shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked-scan kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,hd,N,chunk", [
+    (2, 24, 3, 8, 16, 8),
+    (1, 40, 2, 16, 8, 16),
+    (2, 33, 4, 8, 8, 8),           # ragged tail
+    (1, 16, 1, 32, 32, 16),
+])
+def test_ssd_scan_kernel_matches_ref(B, S, H, hd, N, chunk):
+    from repro.kernels import ssd_scan as ssdk
+    ks = jax.random.split(jax.random.PRNGKey(B * S + H), 5)
+    x = jax.random.normal(ks[0], (B, S, H, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y_k = ssdk.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    y_r = ref.ssd_scan(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.array(y_k), np.array(y_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(4, 40), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 99))
+def test_ssd_scan_chunk_invariance(s, chunk, seed):
+    """The chunk size must not change the result."""
+    from repro.kernels import ssd_scan as ssdk
+    B, H, hd, N = 1, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, s, H, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, s, N))
+    Cm = jax.random.normal(ks[4], (B, s, N))
+    y1 = ssdk.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    y2 = ssdk.ssd_scan(x, dt, A, Bm, Cm, chunk=max(s, 4))
+    np.testing.assert_allclose(np.array(y1), np.array(y2),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,198 @@
+"""Model substrate: per-arch smoke tests (deliverable f), cache
+consistency, and block-level equivalences (scan vs step, chunked vs
+naive)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import attention as attn
+from repro.models import nn, rglru, ssd
+from repro.models import transformer as tfm
+from repro.training import AdamW, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _frontends(cfg, batch):
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_embeds"] = 0.1 * jax.random.normal(
+            KEY, (batch, cfg.enc_seq, cfg.enc_d_model or cfg.d_model))
+    if cfg.family == "vlm":
+        kw["prefix_embeds"] = 0.1 * jax.random.normal(
+            KEY, (batch, cfg.n_patches, cfg.d_model))
+    return kw
+
+
+def _err(a, b):
+    return float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                 - b.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+# (f) smoke test per assigned architecture: reduced config, forward +
+# one train step, shape + finiteness asserts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 512 and cfg.n_layers <= 4
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    params = tfm.init_lm(cfg, KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    kw = _frontends(cfg, B)
+    logits, aux = tfm.forward(cfg, params, toks, **kw)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    opt = AdamW(lr=1e-3)
+    step = make_train_step(cfg, opt)
+    batch = {"tokens": jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)}
+    batch.update(_frontends(cfg, B))
+    params2, _, metrics = jax.jit(step)(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch).replace(remat=False, capacity_factor=4.0)
+    params = tfm.init_lm(cfg, KEY)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg.vocab)
+    kw = _frontends(cfg, B)
+    full, _ = tfm.forward(cfg, params, toks, **kw)
+    cache = tfm.init_cache(cfg, B, 64)
+    pre, cache = tfm.prefill(cfg, params, toks[:, :S - 1], cache, **kw)
+    prefix = cfg.n_patches if cfg.family == "vlm" else 0
+    lg, cache = tfm.decode_step(cfg, params, toks[:, S - 1:S], cache,
+                                prefix + S - 1)
+    scale = float(jnp.abs(full).max()) + 1e-6
+    assert _err(pre[:, 0], full[:, S - 2]) / scale < 0.02
+    assert _err(lg[:, 0], full[:, S - 1]) / scale < 0.02
+
+
+def test_multi_step_decode_consistency():
+    """8 decode steps == forward, token by token (stablelm)."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    S = 16
+    toks = jax.random.randint(jax.random.PRNGKey(9), (1, S), 0, cfg.vocab)
+    full, _ = tfm.forward(cfg, params, toks)
+    cache = tfm.init_cache(cfg, 1, 32)
+    _, cache = tfm.prefill(cfg, params, toks[:, :8], cache)
+    for i in range(8, S):
+        lg, cache = tfm.decode_step(cfg, params, toks[:, i:i + 1], cache, i)
+        assert _err(lg[:, 0], full[:, i]) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# block-level equivalences
+# ---------------------------------------------------------------------------
+
+def test_local_attention_equals_windowed_full():
+    """Blocked local attention == full attention with window mask,
+    wherever the query's window fits in [block i-1, block i]."""
+    B, S, H, hd, w = 1, 64, 2, 16, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    o_loc = attn.local_attention(q, k, v, window=w)
+    o_full = attn.causal_attention(q, k, v, window=w)
+    np.testing.assert_allclose(np.array(o_loc), np.array(o_full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_causal_attention_chunking_invariant():
+    """Chunk size must not change the result."""
+    B, S, H, hd = 2, 50, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    o1 = attn.causal_attention(q, k, v, q_chunk=1024)
+    o2 = attn.causal_attention(q, k, v, q_chunk=16)
+    np.testing.assert_allclose(np.array(o1), np.array(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunked_equals_stepwise():
+    """Chunked SSD scan == naive per-token recurrence."""
+    B, S, H, hd, N = 2, 24, 3, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    h0 = jnp.zeros((B, H, hd, N))
+    y_chunk, h_last = ssd.ssd_chunked(x, dt, A, Bm, Cm, h0, chunk=8)
+
+    # naive recurrence
+    h = h0
+    ys = []
+    for t in range(S):
+        a = jnp.exp(A[None] * dt[:, t])                       # [B,H]
+        h = (a[:, :, None, None] * h
+             + jnp.einsum("bh,bhd,bn->bhdn", dt[:, t], x[:, t], Bm[:, t]))
+        ys.append(jnp.einsum("bn,bhdn->bhd", Cm[:, t], h))
+    y_naive = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.array(y_chunk), np.array(y_naive),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(h_last), np.array(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_scan_equals_stepwise():
+    B, S, R = 2, 20, 16
+    p = rglru.rglru_params(KEY, 32, R, 4)
+    x = jax.random.normal(jax.random.PRNGKey(11), (B, S, R))
+    h0 = jnp.zeros((B, R))
+    y_scan, h_scan = rglru.rglru_scan(p, x, h0)
+    h = h0
+    ys = []
+    for t in range(S):
+        y, h = rglru.rglru_step(p, x[:, t:t + 1], h)
+        ys.append(y[:, 0])
+    np.testing.assert_allclose(np.array(y_scan),
+                               np.array(jnp.stack(ys, 1)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(h_scan), np.array(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_windowed_ring_cache_decode():
+    """Decode beyond the window size with a ring cache matches a full
+    cache restricted by the window mask."""
+    cfg = get_smoke_config("recurrentgemma-2b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    S = 40                                    # > window (16)
+    toks = jax.random.randint(jax.random.PRNGKey(13), (1, S), 0, cfg.vocab)
+    full, _ = tfm.forward(cfg, params, toks)
+    cache = tfm.init_cache(cfg, 1, 64)        # ring: C = window = 16
+    _, cache = tfm.prefill(cfg, params, toks[:, :32], cache)
+    for i in range(32, S):
+        lg, cache = tfm.decode_step(cfg, params, toks[:, i:i + 1], cache, i)
+        assert _err(lg[:, 0], full[:, i]) < 2e-2, i
+
+
+def test_rope_positions():
+    x = jax.random.normal(KEY, (1, 4, 2, 8))
+    r0 = nn.apply_rope(x, jnp.arange(4))
+    r1 = nn.apply_rope(x, jnp.arange(4) + 10)
+    assert not np.allclose(np.array(r0), np.array(r1))
+    # rotation preserves norms
+    np.testing.assert_allclose(
+        np.linalg.norm(np.array(r0), axis=-1),
+        np.linalg.norm(np.array(x), axis=-1), rtol=1e-5)

@@ -1,0 +1,138 @@
+"""Serving layer: batcher semantics, DES conservation laws, dual-path
+behaviour, closed-loop energy savings (Table-III shape)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdmissionController, DecayingThreshold,
+                        LatencyModel)
+from repro.serving import (ClosedLoopSimulator, DirectPath, DynamicBatcher,
+                           Oracle, bucket_size, bursty_arrivals,
+                           closed_loop_arrivals, poisson_arrivals)
+from repro.serving.workload import Request
+
+
+def _oracle(n, seed=0, proxy_acc=0.85):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 2, n)
+    full = labels.copy()
+    flip = rng.random(n) < (1 - proxy_acc)
+    proxy = np.where(flip, 1 - labels, labels)
+    return Oracle(full_pred=full, proxy_pred=proxy,
+                  entropy=rng.uniform(0, 0.7, n), labels=labels,
+                  proxy_latency=LatencyModel(0.0002, 0.0001))
+
+
+def _sim(oracle, *, enabled=True, path="auto", tau=(1.0, 0.45, 0.3),
+         rate=150.0, window=0.02, max_batch=32):
+    ctrl = AdmissionController(
+        threshold=DecayingThreshold(*tau), enabled=enabled)
+    return ClosedLoopSimulator(
+        oracle=oracle, controller=ctrl,
+        direct=DirectPath(LatencyModel(0.002, 0.004)),
+        batched=DynamicBatcher(LatencyModel(0.020, 0.0015),
+                               max_batch_size=max_batch,
+                               queue_window_s=window),
+        path=path)
+
+
+# ---------------------------------------------------------------------------
+# batcher semantics
+# ---------------------------------------------------------------------------
+
+def test_batcher_flushes_when_full():
+    b = DynamicBatcher(LatencyModel(0.01, 0.001), max_batch_size=4,
+                       queue_window_s=10.0)
+    out = []
+    for i in range(9):
+        out += b.submit(Request(i, arrival_s=0.001 * i), now=0.001 * i)
+    sizes = [x.size for x in out]
+    assert sizes == [4, 4]
+    assert b.queue_depth == 1
+
+
+def test_batcher_flushes_on_window():
+    b = DynamicBatcher(LatencyModel(0.01, 0.001), max_batch_size=32,
+                       queue_window_s=0.05, preferred_sizes=())
+    b.submit(Request(0, arrival_s=0.0), now=0.0)
+    b.submit(Request(1, arrival_s=0.01), now=0.01)
+    assert b.queue_depth == 2
+    flushed = b.poll(now=0.06)
+    assert len(flushed) == 1 and flushed[0].size == 2
+
+
+def test_batcher_serialises_server():
+    b = DynamicBatcher(LatencyModel(0.10, 0.0), max_batch_size=2,
+                       queue_window_s=10.0)
+    out = []
+    for i in range(4):
+        out += b.submit(Request(i, arrival_s=0.0), now=0.0)
+    assert out[1].t_start >= out[0].t_finish   # no overlap on one server
+
+
+# ---------------------------------------------------------------------------
+# DES conservation + behaviour
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 300), rate=st.floats(20, 400),
+       seed=st.integers(0, 99), enabled=st.booleans())
+def test_every_request_served_exactly_once(n, rate, seed, enabled):
+    oracle = _oracle(n, seed)
+    reqs = poisson_arrivals(n, rate, seed=seed)
+    m = _sim(oracle, enabled=enabled).run(reqs)
+    assert m.n == n
+    assert sorted(r.rid for r in m.records) == list(range(n))
+    for r in m.records:
+        assert r.finish >= r.arrival - 1e-12
+
+
+def test_controller_saves_busy_time_and_energy():
+    n = 1500
+    oracle = _oracle(n)
+    reqs = poisson_arrivals(n, 150.0, seed=1)
+    m_open = _sim(oracle, enabled=False).run(reqs)
+    m_bio = _sim(oracle, enabled=True).run(reqs)
+    assert m_bio.admission_rate < 0.95
+    assert m_bio.busy_s < m_open.busy_s
+    assert m_bio.energy_j < m_open.energy_j
+    # accuracy cost is bounded (proxy answers the skipped share)
+    assert m_open.accuracy - m_bio.accuracy < 0.15
+
+
+def test_direct_beats_batcher_at_low_rate():
+    """Paper Table II qualitative: at sparse traffic the direct path
+    has lower latency than managed batching."""
+    n = 400
+    oracle = _oracle(n)
+    reqs = poisson_arrivals(n, 20.0, seed=2)       # sparse
+    m_direct = _sim(oracle, enabled=False, path="direct").run(reqs)
+    m_batched = _sim(oracle, enabled=False, path="batched").run(reqs)
+    assert m_direct.mean_latency_s < m_batched.mean_latency_s
+
+
+def test_batcher_wins_throughput_under_load():
+    """...and under heavy bursts the batcher sustains higher
+    throughput/joule (Table II discussion)."""
+    n = 2000
+    oracle = _oracle(n)
+    reqs = bursty_arrivals(n, 100.0, 1200.0, seed=3)
+    m_direct = _sim(oracle, enabled=False, path="direct").run(reqs)
+    m_batched = _sim(oracle, enabled=False, path="batched",
+                     window=0.01).run(reqs)
+    jpr_direct = m_direct.energy_j / n
+    jpr_batched = m_batched.energy_j / n
+    assert jpr_batched < jpr_direct
+
+
+def test_bucket_size():
+    assert bucket_size(1) == 1
+    assert bucket_size(3) == 4
+    assert bucket_size(33) == 64
+    assert bucket_size(10_000) == 128
+
+
+def test_closed_loop_arrivals_monotone():
+    reqs = closed_loop_arrivals(10, think_s=0.1)
+    ts = [r.arrival_s for r in reqs]
+    assert ts == sorted(ts)

@@ -1,0 +1,133 @@
+"""Sharding policy invariants: every spec is mesh-legal (divisible), no
+axis used twice per spec, fallbacks engage for non-divisible dims."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch import sharding as shd
+from repro.models import transformer as tfm
+
+
+class FakeMesh:
+    """Shape-only stand-in (param_specs only reads .shape/.axis_names)."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH_POD = FakeMesh(pod=2, data=16, model=16)
+
+
+def _abstract_params(arch):
+    cfg = get_config(arch)
+    return cfg, jax.eval_shape(
+        lambda: tfm.init_lm(cfg, jax.random.PRNGKey(0)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_legal(arch):
+    cfg, params = _abstract_params(arch)
+    specs = shd.param_specs(params, MESH)
+
+    def check(path, leaf, spec):
+        assert len(spec) <= len(leaf.shape)
+        used = [s for s in spec if s is not None]
+        assert len(used) == len(set(used)), f"axis reuse at {path}"
+        for dim, ax in enumerate(spec):
+            if ax == "model":
+                assert leaf.shape[dim] % 16 == 0, \
+                    f"{path}: dim {dim} ({leaf.shape[dim]}) not divisible"
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), params, specs)
+
+
+def test_non_divisible_heads_fall_back():
+    """recurrentgemma has 10 Q heads: with the head-aligned guard the
+    q/k/v/o projections must NOT shard on model (10 % 16 != 0), even
+    though the flattened 2560 output dim is divisible — sharding
+    through head boundaries forces in-layer all-gathers (§Perf B)."""
+    cfg, params = _abstract_params("recurrentgemma-2b")
+    specs = shd.param_specs(params, MESH, cfg=cfg)
+    # attention layers are at pattern positions 2, 5, ... (python list)
+    attn_layer = specs["layers"][2]
+    assert "model" not in tuple(attn_layer["mix"]["wq"])
+    assert "model" not in tuple(attn_layer["mix"]["wk"])
+    assert "model" not in tuple(attn_layer["mix"]["wo"])
+    # MLP still shards
+    assert attn_layer["mlp"]["w_gate"][-1] == "model"
+
+
+def test_head_aligned_shards_when_divisible():
+    """internlm2: 48 Q heads / 8 KV heads on tp=16 -> q/o shard, k/v
+    replicate (8 % 16 != 0)."""
+    cfg, params = _abstract_params("internlm2-20b")
+    specs = shd.param_specs(params, MESH, cfg=cfg)
+    mix = specs["layers"]["mix"]
+    assert mix["wq"][-1] == "model"
+    assert mix["wo"][-2] == "model"
+    assert "model" not in tuple(mix["wk"])
+
+
+def test_fsdp_adds_data_axis():
+    cfg, params = _abstract_params("llama3-405b")
+    specs = shd.param_specs(params, MESH, cfg=cfg, fsdp=True)
+    wq = specs["layers"]["mix"]["wq"]          # [L, D, H*hd]
+    assert "model" in wq and "data" in wq
+    used = [s for s in wq if s is not None]
+    assert len(used) == len(set(used))
+
+
+def test_granite_expert_dim_falls_back_to_ffn():
+    """40 experts % 16 != 0 -> expert dim replicated, d_ff sharded."""
+    cfg, params = _abstract_params("granite-moe-3b-a800m")
+    specs = shd.param_specs(params, MESH)
+    wg = specs["layers"]["moe"]["w_gate"]     # [L, E, D, F]
+    assert wg[1] is None                      # expert dim not sharded
+    assert wg[-1] == "model"                  # 512 d_ff shards
+
+
+def test_dbrx_expert_dim_shards():
+    """16 experts % 16 == 0 -> expert-parallel."""
+    cfg, params = _abstract_params("dbrx-132b")
+    specs = shd.param_specs(params, MESH)
+    wg = specs["layers"]["moe"]["w_gate"]     # [L, E, D, F]
+    assert wg[1] == "model"
+
+
+def test_tokens_and_cache_specs():
+    cfg = get_config("internlm2-20b")
+    assert shd.tokens_spec(MESH, 256) == P("data", None)
+    assert shd.tokens_spec(MESH_POD, 256) == P(("pod", "data"), None)
+    # batch=1 -> batch unsharded
+    assert shd.tokens_spec(MESH, 1) == P(None, None)
+
+    cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 128, 1024))
+    specs = shd.cache_specs(cfg, cache, MESH, 128)
+    kv = specs.layers.kv
+    assert kv.k[1] == "data"                  # batch sharded
+    assert kv.k[3] is None                    # 8 kv heads % 16 != 0
+
+    # long-context batch=1: sequence dim takes the data axis
+    cache1 = jax.eval_shape(lambda: tfm.init_cache(cfg, 1, 4096))
+    specs1 = shd.cache_specs(cfg, cache1, MESH, 1)
+    assert specs1.layers.kv.k[1] is None
+    assert specs1.layers.kv.k[2] == "data"    # sequence-sharded decode
+
+
+def test_mla_cache_latent_spec():
+    cfg = get_config("minicpm3-4b")
+    cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 128, 512))
+    specs = shd.cache_specs(cfg, cache, MESH, 128)
+    assert specs.layers.kv.c_kv[1] == "data"
+
+
+def test_ssd_state_spec():
+    cfg = get_config("mamba2-780m")
+    cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 128, 512))
+    specs = shd.cache_specs(cfg, cache, MESH, 128)
+    assert specs.layers.rec.h[1] == "data"    # [L,B,H,hd,N]
+    assert specs.layers.rec.h[2] == "model"   # 48 heads shard

@@ -1,0 +1,91 @@
+"""End-to-end behaviour: train the classifier, serve it through the
+closed loop, and reproduce the paper's Table-III *shape* (admission
+cut, energy/time saving, bounded accuracy cost)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionController, DecayingThreshold,
+                        LatencyModel)
+from repro.models import distilbert
+from repro.serving import (ClassifierEngine, ClosedLoopSimulator,
+                           DirectPath, DynamicBatcher, Oracle,
+                           closed_loop_arrivals)
+from repro.training import ClassificationData, train_classifier
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = distilbert.config(n_layers=3, d_model=64, n_heads=4, d_ff=128,
+                            vocab=600, max_pos=48)
+    params = distilbert.init(cfg, jax.random.PRNGKey(0))
+    data = ClassificationData(vocab=600, seq_len=32, seed=42)
+    params, _ = train_classifier(cfg, params, data.train_batches(32),
+                                 steps=120, log_every=60, verbose=False)
+    return cfg, params, data
+
+
+def test_closed_loop_ablation_shape(trained):
+    """Open-loop vs bio-controller on the same workload: the
+    controller must cut admitted work substantially while keeping the
+    accuracy drop small — the Table III pattern."""
+    cfg, params, data = trained
+    engine = ClassifierEngine(cfg, params, exit_layer=2)
+    n = 800
+    toks, labels, _ = data.sample(n)
+    proxy_pred, entropy, maxp, _ = engine.proxy_scores(toks)
+    full_pred, _ = engine.classify(toks)
+    oracle = Oracle(full_pred=full_pred, proxy_pred=proxy_pred,
+                    entropy=entropy, labels=labels,
+                    proxy_latency=LatencyModel(0.0003, 0.0))
+    reqs = closed_loop_arrivals(n, think_s=0.002)
+
+    def run(enabled):
+        ctrl = AdmissionController(
+            threshold=DecayingThreshold(tau0=1.0, tau_inf=0.45, k=3.0),
+            enabled=enabled)
+        sim = ClosedLoopSimulator(
+            oracle=oracle, controller=ctrl,
+            direct=DirectPath(LatencyModel(0.002, 0.003)),
+            batched=DynamicBatcher(LatencyModel(0.015, 0.001),
+                                   max_batch_size=16,
+                                   queue_window_s=0.004),
+            path="auto")
+        return sim.run(reqs)
+
+    m_open = run(False)
+    m_bio = run(True)
+
+    assert m_open.admission_rate == 1.0
+    assert m_bio.admission_rate < 0.9            # work actually pruned
+    assert m_bio.busy_s < m_open.busy_s          # time saving
+    assert m_bio.energy_j < m_open.energy_j      # energy saving
+    # skipped requests are answered by the early-exit head, so the
+    # accuracy cost stays bounded (paper: -0.5pp; we allow slack for
+    # the tiny synthetic model)
+    assert m_open.accuracy - m_bio.accuracy < 0.10
+
+
+def test_full_model_beats_proxy(trained):
+    """Sanity: skipping everything WOULD cost accuracy, so the
+    controller's selectivity matters."""
+    cfg, params, data = trained
+    engine = ClassifierEngine(cfg, params, exit_layer=2)
+    toks, labels, _ = data.sample(600)
+    proxy_pred, entropy, _, _ = engine.proxy_scores(toks)
+    full_pred, _ = engine.classify(toks)
+    acc_full = float(np.mean(full_pred == labels))
+    acc_proxy = float(np.mean(proxy_pred == labels))
+    assert acc_full >= acc_proxy
+
+
+def test_entropy_selects_hard_examples(trained):
+    """The controller's premise: proxy entropy correlates with example
+    difficulty (and with proxy errors)."""
+    cfg, params, data = trained
+    engine = ClassifierEngine(cfg, params, exit_layer=2)
+    n = 600
+    diff = np.concatenate([np.full(n // 2, 0.2), np.full(n // 2, 0.95)])
+    toks, labels, _ = data.sample(n, difficulty=diff)
+    _, entropy, _, _ = engine.proxy_scores(toks)
+    assert entropy[n // 2:].mean() > entropy[:n // 2].mean()

@@ -1,0 +1,55 @@
+"""Telemetry: tracker runs (MLflow analogue) + carbon accounting
+(CodeCarbon analogue)."""
+import csv
+import json
+import os
+import time
+
+import pytest
+
+from repro.core import EnergyModel
+from repro.telemetry import (CarbonTracker, GRID_INTENSITY_KG_PER_KWH,
+                             Tracker)
+
+
+def test_tracker_run_lifecycle(tmp_path):
+    tr = Tracker(root=str(tmp_path))
+    run = tr.start_run("unit")
+    run.log_params(alpha=1.0, note="x")
+    run.log_metrics(0, loss=2.5)
+    run.log_metrics(1, loss=2.1, extra=7)
+    run.log_artifact("blob.json", {"k": [1, 2]})
+    d = run.finish()
+
+    with open(os.path.join(d, "params.json")) as f:
+        assert json.load(f)["alpha"] == 1.0
+    with open(os.path.join(d, "metrics.csv")) as f:
+        rows = list(csv.DictReader(f))
+    assert len(rows) == 2 and rows[1]["extra"] == "7"
+    with open(os.path.join(d, "blob.json")) as f:
+        assert json.load(f)["k"] == [1, 2]
+
+
+def test_carbon_tracker_regions():
+    for region, intensity in GRID_INTENSITY_KG_PER_KWH.items():
+        ct = CarbonTracker(region=region)
+        ct.meter.record(3.6e6)               # exactly 1 kWh
+        rep = ct.report()
+        assert rep["energy_kwh"] == pytest.approx(1.0)
+        assert rep["co2_kg"] == pytest.approx(intensity)
+
+
+def test_carbon_tracker_window():
+    ct = CarbonTracker()
+    ct.start()
+    time.sleep(0.01)
+    rep = ct.stop(n_requests=5)
+    assert rep["energy_j"] > 0
+    assert ct.meter.joules_per_request > 0
+
+
+def test_energy_model_roofline_joules():
+    em = EnergyModel()
+    t = em.roofline(flops=197e12, bytes_=0.0, coll_bytes=0.0)
+    assert t.step_time_s == pytest.approx(1.0)
+    assert em.joules(t, n_chips=2) == pytest.approx(2 * em.p_active)
