@@ -3,11 +3,7 @@ once, measures real walltimes on this host, and scales the paper's
 Table-II regime (batch=1, 100 iterations) onto them."""
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-
 import jax
-import numpy as np
 
 from repro.core import LatencyModel
 from repro.models import distilbert, resnet
@@ -50,28 +46,6 @@ def resnet_setup(image_hw: int = 64):
     out = (params, fwd, image_hw)
     _CACHE["resnet"] = out
     return out
-
-
-@dataclass
-class Timed:
-    mean_ms: float
-    std_ms: float
-    qps: float
-
-
-def time_fn(fn, *args, iters: int = 20, warmup: int = 2,
-            batch: int = 1) -> Timed:
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    ts = np.array(ts)
-    return Timed(mean_ms=float(ts.mean() * 1e3),
-                 std_ms=float(ts.std() * 1e3),
-                 qps=batch / float(ts.mean()))
 
 
 def latency_models_from_engine(engine: ClassifierEngine, seq_len: int):

@@ -13,14 +13,17 @@ import numpy as np
 from benchmarks.common import classifier_setup, latency_models_from_engine
 from repro.core import (AdaptiveThreshold, AdmissionController,
                         DecayingThreshold)
-from repro.serving import (ClosedLoopSimulator, DirectPath, DynamicBatcher,
-                           closed_loop_arrivals)
+from repro.serving import (AdmissionMiddleware, DirectPath,
+                           DynamicBatcher, OracleEngine, Server,
+                           ServerConfig, closed_loop_arrivals)
 
 N = 2000
 
 
-def _run_policy(oracle, direct_lat, batched_lat, *, enabled: bool,
-                tau_inf: float = 0.6, adaptive_target: float | None = None):
+def _run_policy(oracle, labels, direct_lat, batched_lat, *,
+                enabled: bool, tau_inf: float = 0.6,
+                adaptive_target: float | None = None) -> dict:
+    """One policy run through the unified Server; returns its summary."""
     if adaptive_target is not None:
         # closed-loop PI trim pinned to the paper's 58% admission rate
         th = AdaptiveThreshold(base=DecayingThreshold(1.0, tau_inf, 3.0),
@@ -29,14 +32,16 @@ def _run_policy(oracle, direct_lat, batched_lat, *, enabled: bool,
     else:
         th = DecayingThreshold(tau0=1.0, tau_inf=tau_inf, k=3.0)
     ctrl = AdmissionController(threshold=th, enabled=enabled)
-    sim = ClosedLoopSimulator(
-        oracle=oracle, controller=ctrl,
-        direct=DirectPath(direct_lat),
-        batched=DynamicBatcher(batched_lat, max_batch_size=16,
-                               queue_window_s=0.004),
-        path="auto")
-    reqs = closed_loop_arrivals(N, think_s=direct_lat.t_fixed_s * 0.8)
-    return sim.run(reqs)
+    server = Server(
+        OracleEngine(oracle, DirectPath(direct_lat),
+                     DynamicBatcher(batched_lat, max_batch_size=16,
+                                    queue_window_s=0.004)),
+        ServerConfig(path="auto"),
+        middleware=[AdmissionMiddleware(ctrl)])
+    reqs = closed_loop_arrivals(N, think_s=direct_lat.t_fixed_s * 0.8,
+                                labels=labels)
+    server.serve(reqs)
+    return server.summary()
 
 
 def run() -> list[dict]:
@@ -44,31 +49,29 @@ def run() -> list[dict]:
         n=N)
     direct_lat, batched_lat = latency_models_from_engine(engine, 32)
 
-    m_std = _run_policy(oracle, direct_lat, batched_lat, enabled=False)
-    m_bio = _run_policy(oracle, direct_lat, batched_lat, enabled=True)
+    def policy(**kw):
+        return _run_policy(oracle, labels, direct_lat, batched_lat, **kw)
 
-    def row(name, m):
+    def row(name, s):
         return {
             "policy": name,
-            "total_time_s": round(m.total_time_s, 4),
-            "busy_s": round(m.busy_s, 4),
-            "latency_per_req_ms": round(m.mean_latency_s * 1e3, 3),
-            "accuracy": round(m.accuracy, 4),
-            "admission_rate": round(float(m.admission_rate), 4),
-            "energy_kwh": round(m.energy_kwh, 9),
+            "total_time_s": s["total_time_s"],
+            "busy_s": s["busy_s"],
+            "latency_per_req_ms": s["mean_latency_ms"],
+            "accuracy": s["accuracy"],
+            "admission_rate": s["admission_rate"],
+            "energy_kwh": s["energy_kwh"],
         }
 
-    m_adapt = _run_policy(oracle, direct_lat, batched_lat, enabled=True,
-                          adaptive_target=0.58)
-    rows = [row("standard(open-loop)", m_std),
-            row("bio-controller", m_bio),
-            row("bio-adaptive(target=0.58)", m_adapt)]
+    rows = [row("standard(open-loop)", policy(enabled=False)),
+            row("bio-controller", policy(enabled=True)),
+            row("bio-adaptive(target=0.58)",
+                policy(enabled=True, adaptive_target=0.58))]
 
     # tau_inf sweep: admission rate is the policy dial (paper: 58%)
     for tau in (0.4, 0.5, 0.6, 0.7):
-        m = _run_policy(oracle, direct_lat, batched_lat, enabled=True,
-                        tau_inf=tau)
-        rows.append(row(f"bio(tau_inf={tau})", m))
+        rows.append(row(f"bio(tau_inf={tau})",
+                        policy(enabled=True, tau_inf=tau)))
     return rows
 
 

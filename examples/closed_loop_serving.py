@@ -1,19 +1,20 @@
 """Full closed-loop scenario: bursty traffic, adaptive threshold,
 landscape-driven batch-bucket selection, energy/CO2 report — everything
-from the paper's Fig. 2 architecture diagram in one script.
+from the paper's Fig. 2 architecture diagram in one script, served
+through the unified ``repro.serving.api.Server``.
 
     PYTHONPATH=src python examples/closed_loop_serving.py
 """
 import jax
-import numpy as np
 
 from repro.core import (AdaptiveThreshold, AdmissionController,
                         CostLandscape, CostWeights, DecayingThreshold,
                         LatencyModel)
 from repro.models import distilbert
-from repro.serving import (ClassifierEngine, ClosedLoopSimulator,
+from repro.serving import (AdmissionMiddleware, ClassifierEngine,
                            DirectPath, DynamicBatcher, Oracle,
-                           bursty_arrivals)
+                           OracleEngine, Server, ServerConfig,
+                           TelemetryMiddleware, bursty_arrivals)
 from repro.telemetry import CarbonTracker, Tracker
 from repro.training import ClassificationData, train_classifier
 
@@ -61,17 +62,19 @@ controller = AdmissionController(
     )
 controller.cost.weights = CostWeights.ecology_priority()
 
-sim = ClosedLoopSimulator(
-    oracle=oracle, controller=controller,
-    direct=DirectPath(lat_direct),
-    batched=DynamicBatcher(lat_batched, max_batch_size=max_batch,
-                           queue_window_s=0.006),
-    path="auto")
+# the unified server: controller as middleware, oracle as the backend ------
+telem = TelemetryMiddleware(run=run)
+server = Server(
+    OracleEngine(oracle, DirectPath(lat_direct),
+                 DynamicBatcher(lat_batched, max_batch_size=max_batch,
+                                queue_window_s=0.006)),
+    ServerConfig(path="auto"),
+    middleware=[AdmissionMiddleware(controller), telem])
 carbon = CarbonTracker(region="eu_avg")
-metrics = sim.run(bursty_arrivals(N, qps, qps * 6, seed=4))
-carbon.meter.record(metrics.energy_j, n_requests=N)
+server.serve(bursty_arrivals(N, qps, qps * 6, seed=4, labels=labels))
+carbon.meter.record(server.energy_j, n_requests=N)
 
-summary = metrics.summary()
+summary = server.summary()
 summary["operating_state"] = str(pick)
 run.log_params(qps=qps, max_batch=max_batch, weights="ecology")
 run.log_metrics(0, **{k: v for k, v in summary.items()

@@ -1,8 +1,10 @@
-"""Quickstart: the paper's closed loop in ~60 lines.
+"""Quickstart: the paper's closed loop in ~60 lines, through the
+unified serving API.
 
-Builds a tiny classifier, wires the bio-inspired admission controller
-(J(x) = aL + bE + cC vs decaying tau(t)), and serves a burst of
-requests through the dual-path stack.
+Builds a tiny classifier, plugs the bio-inspired admission controller
+(J(x) = aL + bE + cC vs decaying tau(t)) into the ``Server`` as
+middleware, and serves a burst of requests through the dual-path stack
+with one ``Server.serve(requests)`` call.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,8 +13,9 @@ import jax
 from repro.core import (AdmissionController, DecayingThreshold,
                         LatencyModel)
 from repro.models import distilbert
-from repro.serving import (ClassifierEngine, ClosedLoopSimulator,
+from repro.serving import (AdmissionMiddleware, ClassifierEngine,
                            DirectPath, DynamicBatcher, Oracle,
+                           OracleEngine, Server, ServerConfig,
                            poisson_arrivals)
 from repro.training import ClassificationData, train_classifier
 
@@ -25,7 +28,7 @@ params, _ = train_classifier(cfg, params, data.train_batches(32),
                              steps=120, verbose=False)
 engine = ClassifierEngine(cfg, params, exit_layer=1)
 
-# 2. requests + the oracle the simulator replays -------------------------
+# 2. requests + the oracle backend the server replays --------------------
 N = 1000
 toks, labels, _ = data.sample(N)
 proxy_pred, entropy, _, _ = engine.proxy_scores(toks)   # L(x) source
@@ -33,22 +36,23 @@ full_pred, _ = engine.classify(toks)
 oracle = Oracle(full_pred=full_pred, proxy_pred=proxy_pred,
                 entropy=entropy, labels=labels,
                 proxy_latency=LatencyModel(0.0004, 0.0))
+port = OracleEngine(
+    oracle,
+    DirectPath(LatencyModel(0.002, 0.003)),             # FastAPI+ORT
+    DynamicBatcher(LatencyModel(0.012, 0.001),          # Triton
+                   max_batch_size=16, queue_window_s=0.005))
 
 # 3. the controller: Eq. (1) cost vs Eq. (3) decaying threshold ----------
 controller = AdmissionController(
     threshold=DecayingThreshold(tau0=1.0, tau_inf=0.45, k=1.0))
 
-# 4. dual-path serving ----------------------------------------------------
-sim = ClosedLoopSimulator(
-    oracle=oracle, controller=controller,
-    direct=DirectPath(LatencyModel(0.002, 0.003)),          # FastAPI+ORT
-    batched=DynamicBatcher(LatencyModel(0.012, 0.001),      # Triton
-                           max_batch_size=16, queue_window_s=0.005),
-    path="auto")
-metrics = sim.run(poisson_arrivals(N, rate_qps=120.0, seed=2))
+# 4. one lifecycle for every path: triage -> admit -> route -> respond ---
+server = Server(port, ServerConfig(path="auto"),
+                middleware=[AdmissionMiddleware(controller)])
+server.serve(poisson_arrivals(N, rate_qps=120.0, seed=2, labels=labels))
 
 print("closed-loop serving summary:")
-for k, v in metrics.summary().items():
+for k, v in server.summary().items():
     print(f"  {k:18s} {v}")
 print(f"\nadmitted {controller.n_admitted}/{controller.n_seen} requests "
       f"(tau settled at {controller.threshold(1e9):.3f})")

@@ -105,6 +105,41 @@ class AdmissionController:
     def admission_rate(self) -> float:
         return self.n_admitted / max(self.n_seen, 1)
 
+    # -- middleware hooks (repro.serving.api) ---------------------------
+    def snapshot(self, t: float) -> tuple[float, float, float]:
+        """(tau, e_norm, c_norm) at time ``t`` — the hook the in-graph
+        gated path uses instead of per-request :meth:`decide`: the jit'd
+        step takes the normalised meter/congestion scalars as traced
+        inputs and applies the same J-vs-tau rule on device."""
+        E = self.meter.joules_per_request
+        C = self.congestion.value()
+        self.cost.norm_e.update(E)
+        self.cost.norm_c.update(C)
+        # open-loop: a tau no J can violate, so the gate admits all
+        # (up to the step's static capacity)
+        tau = (float(self.threshold(t)) if self.enabled
+               else (float("inf") if self.rule == "le"
+                     else float("-inf")))
+        return (tau, float(self.cost.norm_e(E)),
+                float(self.cost.norm_c(C)))
+
+    def observe_external(self, admits) -> None:
+        """Fold admissions decided outside :meth:`decide` (the in-graph
+        gate's mask) back into the closed-loop state, so admission-rate
+        tracking and the adaptive threshold see every request."""
+        for a in admits:
+            a = bool(a)
+            self.n_seen += 1
+            self.n_admitted += int(a)
+            if isinstance(self.threshold, AdaptiveThreshold):
+                self.threshold.observe(a)
+
+    def as_middleware(self):
+        """This controller as pluggable serving middleware (the unified
+        API's admission stage); see ``repro.serving.api``."""
+        from repro.serving.api import AdmissionMiddleware
+        return AdmissionMiddleware(self)
+
 
 def gate_batch(L: jnp.ndarray, tau: jnp.ndarray | float, *,
                E: float, C: float, cost: CostModel,

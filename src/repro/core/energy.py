@@ -109,7 +109,10 @@ class EnergyMeter:
     def record(self, joules: float, n_requests: int = 1) -> None:
         self._total_j += joules
         self._n += n_requests
-        per = joules / max(n_requests, 1)
+        if n_requests <= 0:
+            return          # energy burned but no request to pin it on:
+                            # count the joules, leave the EWMA alone
+        per = joules / n_requests
         if self._j_per_req == 0.0:
             self._j_per_req = per
         else:

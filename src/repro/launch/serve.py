@@ -1,14 +1,18 @@
 """End-to-end serving driver (the paper is a serving paper, so this is
-the primary launcher): train-or-load a classifier, stand up the
-dual-path stack with the closed-loop controller, replay a workload,
-and log latency/throughput/energy/CO2 to the tracker.
+the primary launcher): train-or-load a model, stand up the unified
+``repro.serving.api.Server`` with the closed-loop controller plugged in
+as admission middleware, replay a workload on the chosen execution
+path, and log latency/throughput/energy/CO2 to the tracker.
 
-Usage:
+All four paths go through one ``Server.serve(requests)`` call:
+
     PYTHONPATH=src python -m repro.launch.serve \
         --requests 2000 --qps 150 --controller bio --path auto
     PYTHONPATH=src python -m repro.launch.serve --controller open ...
+    PYTHONPATH=src python -m repro.launch.serve --path gated \
+        --requests 512                  # in-graph admission, live model
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
-        --mode generate --requests 4   # LM generation path (smoke cfg)
+        --mode generate --requests 4    # continuous-decode (smoke cfg)
 """
 from __future__ import annotations
 
@@ -23,9 +27,14 @@ from repro.core import (AdaptiveThreshold, AdmissionController,
                         CostWeights, DecayingThreshold, LatencyModel)
 from repro.models import distilbert
 from repro.models import transformer as tfm
-from repro.serving import (ClassifierEngine, ClosedLoopSimulator,
-                           DirectPath, DynamicBatcher, GenerationEngine,
-                           Oracle, bursty_arrivals, poisson_arrivals)
+from repro.serving import (AdmissionMiddleware, ClassifierEngine,
+                           ContinuousBatchingEngine,
+                           ContinuousEngineAdapter, DirectPath,
+                           DynamicBatcher, GatedEngineAdapter,
+                           InferRequest, Oracle, OracleEngine, Server,
+                           ServerConfig, TelemetryMiddleware,
+                           bursty_arrivals, canonical_path,
+                           poisson_arrivals)
 from repro.telemetry import CarbonTracker, Tracker
 from repro.training import ClassificationData, train_classifier
 
@@ -56,50 +65,75 @@ def make_controller(kind: str, *, weights: str, target_rate: float):
     return ctrl
 
 
+def _arrivals(args, labels, payloads=None):
+    if args.traffic == "bursty":
+        return bursty_arrivals(args.requests, args.qps, args.qps * 8,
+                               seed=args.seed, payloads=payloads,
+                               labels=labels)
+    return poisson_arrivals(args.requests, args.qps, seed=args.seed,
+                            payloads=payloads, labels=labels)
+
+
 def serve_classifier(args) -> dict:
     tracker = Tracker(root=args.runs)
     run = tracker.start_run(f"serve-{args.controller}-{args.path}")
     carbon = CarbonTracker(region=args.region)
+    path = canonical_path(args.path)
 
     cfg, params, data = build_classifier()
-    engine = ClassifierEngine(cfg, params, exit_layer=1)
     toks, labels, _ = data.sample(args.requests)
-    carbon.start()
-    proxy_pred, entropy, _, t_proxy = engine.proxy_scores(toks)
-    full_pred, t_full = engine.classify(toks)
-    carbon.stop(args.requests)
-
-    # calibrate the latency models from measured walltimes
-    times = engine.calibrate(seq_len=toks.shape[1], buckets=(1, 4, 16))
-    t1, t16 = times[1], times[16]
-    t_tok = max((t16 - t1) / 15, 1e-5)
-    direct_lat = LatencyModel(t_fixed_s=max(t1 - t_tok, 1e-4),
-                              t_tok_s=t_tok)
-    batched_lat = LatencyModel(t_fixed_s=max(t1 - t_tok, 1e-4) * 6,
-                               t_tok_s=t_tok)
-
-    oracle = Oracle(full_pred=full_pred, proxy_pred=proxy_pred,
-                    entropy=entropy, labels=labels,
-                    proxy_latency=LatencyModel(
-                        t_proxy / len(toks), 0.0))
-    if args.traffic == "bursty":
-        reqs = bursty_arrivals(args.requests, args.qps, args.qps * 8,
-                               seed=args.seed)
-    else:
-        reqs = poisson_arrivals(args.requests, args.qps, seed=args.seed)
 
     ctrl = make_controller(args.controller, weights=args.weights,
                            target_rate=args.target_rate)
-    sim = ClosedLoopSimulator(
-        oracle=oracle, controller=ctrl,
-        direct=DirectPath(direct_lat),
-        batched=DynamicBatcher(batched_lat,
-                               max_batch_size=args.max_batch,
-                               queue_window_s=args.window),
-        path=args.path)
-    metrics = sim.run(reqs)
-    summary = metrics.summary()
+
+    if path == "gated-in-graph":
+        # live in-graph admission over the real model; carbon window
+        # wraps the serving run itself.  The open baseline lifts the
+        # gate's static capacity to the full batch so it admits 100%
+        # like the open baseline on every other path.
+        cap = args.max_batch if args.controller == "open" else None
+        port = GatedEngineAdapter(cfg, params, batch=args.max_batch,
+                                  capacity=cap, exit_layer=1)
+        reqs = _arrivals(args, labels, payloads=toks)
+    else:
+        # precompute the oracle (one vectorised pass — what carbon
+        # measures here), calibrate latency models from measured
+        # walltimes, then replay through the virtual-time backend
+        engine = ClassifierEngine(cfg, params, exit_layer=1)
+        carbon.start()
+        proxy_pred, entropy, _, t_proxy = engine.proxy_scores(toks)
+        full_pred, _ = engine.classify(toks)
+        carbon.stop(args.requests)
+        times = engine.calibrate(seq_len=toks.shape[1],
+                                 buckets=(1, 4, 16))
+        t1, t16 = times[1], times[16]
+        t_tok = max((t16 - t1) / 15, 1e-5)
+        direct_lat = LatencyModel(t_fixed_s=max(t1 - t_tok, 1e-4),
+                                  t_tok_s=t_tok)
+        batched_lat = LatencyModel(t_fixed_s=max(t1 - t_tok, 1e-4) * 6,
+                                   t_tok_s=t_tok)
+        oracle = Oracle(full_pred=full_pred, proxy_pred=proxy_pred,
+                        entropy=entropy, labels=labels,
+                        proxy_latency=LatencyModel(
+                            t_proxy / len(toks), 0.0))
+        port = OracleEngine(
+            oracle, DirectPath(direct_lat),
+            DynamicBatcher(batched_lat, max_batch_size=args.max_batch,
+                           queue_window_s=args.window))
+        reqs = _arrivals(args, labels)
+
+    telem = TelemetryMiddleware(run=run)
+    server = Server(port, ServerConfig(path=path),
+                    middleware=[AdmissionMiddleware(ctrl), telem])
+    if path == "gated-in-graph":
+        carbon.start()
+        server.serve(reqs)
+        carbon.stop(args.requests)
+    else:
+        server.serve(reqs)
+    summary = server.summary()
     summary["controller"] = args.controller
+    summary["path"] = path
 
     run.log_params(**vars(args))
     run.log_metrics(0, **{k: v for k, v in summary.items()
@@ -113,12 +147,30 @@ def serve_classifier(args) -> dict:
 def serve_generate(args) -> dict:
     cfg = get_smoke_config(args.arch)
     params = tfm.init_lm(cfg, jax.random.PRNGKey(args.seed))
-    engine = GenerationEngine(cfg, params, max_seq=128)
-    prompts = np.random.default_rng(args.seed).integers(
-        0, cfg.vocab, size=(args.requests, 16)).astype(np.int32)
-    out = engine.generate(prompts, n_new=args.new_tokens)
-    summary = {"arch": args.arch, "batch": int(prompts.shape[0]),
-               "generated": out.shape, "sample": out[0][:8].tolist()}
+    engine = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
+                                     max_seq=128)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(args.requests, 16)).astype(np.int32)
+    ctrl = make_controller(args.controller, weights=args.weights,
+                           target_rate=args.target_rate)
+    server = Server(ContinuousEngineAdapter(engine, prompt_len=16),
+                    ServerConfig(path="continuous-decode"),
+                    middleware=[AdmissionMiddleware(ctrl)])
+    reqs = [InferRequest(rid=i, arrival_s=0.001 * i, payload=prompts[i],
+                         kind="generate", max_new=args.new_tokens,
+                         entropy_hint=float(rng.uniform(0, 1)))
+            for i in range(args.requests)]
+    responses = server.serve(reqs)
+    summary = server.summary()
+    summary.pop("accuracy", None)     # no labels in generation mode
+    summary.update(
+        arch=args.arch, path="continuous-decode",
+        controller=args.controller,
+        tokens_generated=sum(len(r.output) for r in responses),
+        sample=(responses[0].output[:8] if responses else []),
+        **{k: v for k, v in responses[-1].telemetry.items()
+           if k in ("decode_steps", "occupancy")} if responses else {})
     print(json.dumps(summary, default=str, indent=2))
     return summary
 
@@ -131,6 +183,7 @@ def main():
                     default="stablelm-3b")
     ap.add_argument("--requests", type=int, default=2000)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--qps", type=float, default=150.0)
     ap.add_argument("--traffic", choices=["poisson", "bursty"],
                     default="poisson")
@@ -140,7 +193,9 @@ def main():
                     choices=["balanced", "performance", "ecology"],
                     default="balanced")
     ap.add_argument("--target-rate", type=float, default=0.6)
-    ap.add_argument("--path", choices=["direct", "batched", "auto"],
+    ap.add_argument("--path",
+                    choices=["direct", "batched", "dynamic-batch",
+                             "gated", "gated-in-graph", "auto"],
                     default="auto")
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--window", type=float, default=0.01)

@@ -1,3 +1,33 @@
+"""Serving layer — unified behind ``repro.serving.api``.
+
+Start there: ``Server`` + an ``EnginePort`` adapter (from
+``repro.serving.adapters``) give one ``InferRequest``/``InferResponse``
+lifecycle — enqueue, proxy triage, admission middleware, routing,
+execution, per-request telemetry — across all four execution paths:
+
+  - ``direct``            per-request execution (FastAPI+ORT analogue)
+  - ``dynamic-batch``     queued/fused batches (Triton analogue)
+  - ``gated-in-graph``    admission fused into the jit (TPU-native)
+  - ``continuous-decode`` slot-pool LM decoding (vLLM-style)
+
+The remaining modules are the building blocks the adapters wrap
+(engines, batcher, gated step, continuous pool, workload streams) plus
+the legacy ``ClosedLoopSimulator`` shim, which now routes through the
+unified ``Server`` as well.
+"""
+from repro.serving.adapters import (CallableEngineAdapter,
+                                    ClassifierEngineAdapter,
+                                    ContinuousEngineAdapter,
+                                    GatedEngineAdapter, OracleEngine)
+from repro.serving.api import (ALL_PATHS, PATH_AUTO, PATH_CONTINUOUS,
+                               PATH_DIRECT, PATH_DYNAMIC_BATCH,
+                               PATH_GATED, PATH_SKIP,
+                               AdmissionMiddleware, Completion,
+                               EngineCapabilities, EnginePort,
+                               InferRequest, InferResponse, LoadState,
+                               Server, ServerConfig, ServingMiddleware,
+                               TelemetryMiddleware, TriageResult,
+                               canonical_path)
 from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
 from repro.serving.continuous import (ContinuousBatchingEngine,
                                       GenRequest)
@@ -11,6 +41,17 @@ from repro.serving.workload import (Request, bursty_arrivals,
                                     closed_loop_arrivals, poisson_arrivals)
 
 __all__ = [
+    # unified API
+    "ALL_PATHS", "PATH_AUTO", "PATH_CONTINUOUS", "PATH_DIRECT",
+    "PATH_DYNAMIC_BATCH", "PATH_GATED", "PATH_SKIP",
+    "AdmissionMiddleware", "Completion", "EngineCapabilities",
+    "EnginePort", "InferRequest", "InferResponse", "LoadState",
+    "Server", "ServerConfig", "ServingMiddleware", "TelemetryMiddleware",
+    "TriageResult", "canonical_path",
+    # adapters
+    "CallableEngineAdapter", "ClassifierEngineAdapter",
+    "ContinuousEngineAdapter", "GatedEngineAdapter", "OracleEngine",
+    # building blocks + legacy surface
     "Batch", "DirectPath", "DynamicBatcher",
     "ContinuousBatchingEngine", "GenRequest",
     "ClassifierEngine", "GenerationEngine", "bucket_size",

@@ -1,0 +1,386 @@
+"""EnginePort adapters — the four execution backends behind one API.
+
+  - :class:`OracleEngine` — the discrete-event simulator backend:
+    precomputed model behaviour (``Oracle``) + virtual-time dual-path
+    scheduling (``DirectPath`` / ``DynamicBatcher``).
+  - :class:`ClassifierEngineAdapter` — live ``ClassifierEngine``
+    execution (jit'd full + proxy models, measured walltimes) on the
+    ``direct`` and ``dynamic-batch`` paths.
+  - :class:`GatedEngineAdapter` — the in-graph gated step: admission
+    happens ON DEVICE from the (tau, e_norm, c_norm) snapshot the
+    admission middleware supplies; the mask flows back into the
+    controller's statistics.
+  - :class:`ContinuousEngineAdapter` — vLLM-style continuous-decode
+    over ``ContinuousBatchingEngine``; admission at enqueue time
+    through the same middleware as every other path.
+  - :class:`CallableEngineAdapter` — any jit'd ``payload -> output``
+    function as a direct-path backend (ResNet benchmark rows, future
+    multi-model routing).
+
+All adapters speak virtual time: simulated backends advance the clock
+with modelled latencies, live backends with measured walltimes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.api import (PATH_CONTINUOUS, PATH_DIRECT,
+                               PATH_DYNAMIC_BATCH, PATH_GATED, Completion,
+                               EngineCapabilities, LoadState, TriageResult)
+from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
+from repro.serving.continuous import ContinuousBatchingEngine, GenRequest
+from repro.serving.engine import ClassifierEngine
+from repro.serving.gated import GateParams, make_gated_classify_step
+from repro.serving.simulator import Oracle
+
+
+# ---------------------------------------------------------------------------
+# simulator backend
+# ---------------------------------------------------------------------------
+
+@dataclass
+class OracleEngine:
+    """Virtual-time backend over precomputed per-request behaviour."""
+    oracle: Oracle
+    direct: DirectPath
+    batched: DynamicBatcher
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name="oracle-sim", kind="classify",
+                                  paths=(PATH_DIRECT, PATH_DYNAMIC_BATCH))
+
+    def warmup(self, ctx) -> None:
+        pass
+
+    def load(self) -> LoadState:
+        return LoadState(queue_depth=self.batched.queue_depth,
+                         batch_fill=self.batched.fill)
+
+    def triage(self, req, now, ctx) -> TriageResult:
+        lat = self.oracle.proxy_latency
+        return TriageResult(
+            L=float(self.oracle.entropy[req.rid]),
+            proxy_output=int(self.oracle.proxy_pred[req.rid]),
+            cost_s=lat.step_time(1) if lat is not None else 0.0)
+
+    def _completion(self, b: Batch, path: str) -> Completion:
+        return Completion(
+            requests=b.requests,
+            outputs=[int(self.oracle.full_pred[r.rid])
+                     for r in b.requests],
+            path=path, t_start=b.t_start, t_finish=b.t_finish)
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        if path == PATH_DIRECT:
+            return [self._completion(self.direct.serve(req, now),
+                                     PATH_DIRECT)]
+        return [self._completion(b, PATH_DYNAMIC_BATCH)
+                for b in self.batched.submit(req, now)]
+
+    def step(self, now, ctx) -> list[Completion]:
+        return [self._completion(b, PATH_DYNAMIC_BATCH)
+                for b in self.batched.poll(now)]
+
+    def drain(self, now, ctx) -> list[Completion]:
+        return [self._completion(b, PATH_DYNAMIC_BATCH)
+                for b in self.batched.drain(now)]
+
+
+# ---------------------------------------------------------------------------
+# live classifier backend
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ClassifierEngineAdapter:
+    """Real jit'd execution; measured walltimes advance the clock."""
+    engine: ClassifierEngine
+    max_batch: int = 32
+    queue_window_s: float = 0.0       # 0 = flush on size / drain only
+    triage_enabled: bool = True
+
+    _queue: list = field(default_factory=list, init=False)
+    _free_at: float = field(default=0.0, init=False)
+    _warm: set = field(default_factory=set, init=False)
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name="classifier", kind="classify",
+                                  paths=(PATH_DIRECT, PATH_DYNAMIC_BATCH))
+
+    def warmup(self, ctx) -> None:
+        pass                   # compiled lazily per bucket (see _prime)
+
+    def _prime(self, kind: str, toks: np.ndarray) -> None:
+        """Run the jit'd call once untimed so the first *measured*
+        walltime is a step, not an XLA compile."""
+        from repro.serving.engine import bucket_size
+        key = (kind, bucket_size(len(toks)))
+        if key in self._warm:
+            return
+        self._warm.add(key)
+        if kind == "proxy":
+            self.engine.proxy_scores(toks)
+        else:
+            self.engine.classify(toks)
+
+    def load(self) -> LoadState:
+        return LoadState(queue_depth=len(self._queue),
+                         batch_fill=len(self._queue)
+                         / max(self.max_batch, 1))
+
+    def triage(self, req, now, ctx) -> TriageResult:
+        if not self.triage_enabled:
+            return TriageResult(L=None)
+        toks = np.asarray(req.payload)[None]
+        self._prime("proxy", toks)
+        preds, ents, _, dt = self.engine.proxy_scores(toks)
+        return TriageResult(L=float(ents[0]),
+                            proxy_output=int(preds[0]), cost_s=dt)
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        if path == PATH_DIRECT:
+            toks = np.asarray(req.payload)[None]
+            self._prime("full", toks)
+            preds, dt = self.engine.classify(toks)
+            start = max(now, self._free_at)
+            finish = start + dt
+            self._free_at = finish
+            return [Completion([req], [int(preds[0])], PATH_DIRECT,
+                               start, finish)]
+        self._queue.append(req)
+        if len(self._queue) >= self.max_batch:
+            return self._flush(now)
+        return []
+
+    def step(self, now, ctx) -> list[Completion]:
+        out = []
+        while self._queue and self.queue_window_s > 0:
+            deadline = (self._queue[0].arrival_s + self.queue_window_s)
+            if deadline <= now:
+                out.extend(self._flush(deadline))
+            else:
+                break
+        return out
+
+    def drain(self, now, ctx) -> list[Completion]:
+        out = []
+        while self._queue:
+            t = max(now, self._queue[0].arrival_s + self.queue_window_s)
+            out.extend(self._flush(t))
+        return out
+
+    def _flush(self, t: float) -> list[Completion]:
+        reqs, self._queue = (self._queue[:self.max_batch],
+                             self._queue[self.max_batch:])
+        toks = np.stack([np.asarray(r.payload) for r in reqs])
+        self._prime("full", toks)
+        preds, dt = self.engine.classify(toks)
+        start = max(t, self._free_at)
+        finish = start + dt
+        self._free_at = finish
+        return [Completion(reqs, [int(p) for p in preds],
+                           PATH_DYNAMIC_BATCH, start, finish)]
+
+
+# ---------------------------------------------------------------------------
+# in-graph gated backend
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GatedEngineAdapter:
+    """Admission fused into the jit: the controller middleware supplies
+    (tau, e_norm, c_norm) per batch via ``ctx.snapshot``; the mask the
+    device gate produced flows back through ``Completion.admit_mask``
+    and the batch walltime feeds the EnergyMeter EWMA — the full closed
+    loop, with static shapes."""
+    cfg: dict
+    params: dict
+    batch: int = 64
+    capacity: int | None = None
+    exit_layer: int = 2
+    gate: GateParams = field(default_factory=GateParams)
+
+    _step: Callable = field(init=False, repr=False)
+    _queue: list = field(default_factory=list, init=False)
+    _free_at: float = field(default=0.0, init=False)
+    _warm: bool = field(default=False, init=False)
+
+    def __post_init__(self):
+        self._step = make_gated_classify_step(
+            {**self.cfg}, exit_layer=self.exit_layer,
+            capacity=self.capacity, gate=self.gate)
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name="gated", kind="classify",
+                                  paths=(PATH_GATED,),
+                                  in_graph_admission=True)
+
+    def warmup(self, ctx) -> None:
+        pass
+
+    def load(self) -> LoadState:
+        return LoadState(queue_depth=len(self._queue),
+                         batch_fill=len(self._queue) / max(self.batch, 1))
+
+    def triage(self, req, now, ctx) -> TriageResult:
+        return TriageResult(L=None)    # proxy pass happens in-graph
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        self._queue.append(req)
+        if len(self._queue) >= self.batch:
+            return self._flush(now, ctx)
+        return []
+
+    def step(self, now, ctx) -> list[Completion]:
+        return []
+
+    def drain(self, now, ctx) -> list[Completion]:
+        out = []
+        while self._queue:
+            out.extend(self._flush(now, ctx))
+        return out
+
+    def _flush(self, t: float, ctx) -> list[Completion]:
+        reqs, self._queue = (self._queue[:self.batch],
+                             self._queue[self.batch:])
+        n = len(reqs)
+        chunk = np.stack([np.asarray(r.payload) for r in reqs])
+        if n < self.batch:             # static-shape pad
+            pad = np.zeros((self.batch - n,) + chunk.shape[1:],
+                           chunk.dtype)
+            chunk = np.concatenate([chunk, pad])
+        tau, e_norm, c_norm = ctx.snapshot(t)
+        if not self._warm:
+            # compile untimed: the first measured walltime must be a
+            # step, or one compile event dominates latency/energy
+            self._warm = True
+            jax.block_until_ready(
+                self._step(self.params, jnp.asarray(chunk), tau,
+                           e_norm, c_norm, n))
+        t0 = time.perf_counter()
+        pred, admit, ent = jax.block_until_ready(
+            self._step(self.params, jnp.asarray(chunk), tau, e_norm,
+                       c_norm, n))
+        dt = time.perf_counter() - t0
+        start = max(t, self._free_at)
+        finish = start + dt
+        self._free_at = finish
+        return [Completion(
+            requests=reqs,
+            outputs=[int(p) for p in np.asarray(pred[:n])],
+            path=PATH_GATED, t_start=start, t_finish=finish,
+            admit_mask=[bool(a) for a in np.asarray(admit[:n])],
+            extras={"tau": tau, "e_norm": e_norm, "c_norm": c_norm},
+            per_request=[{"entropy": float(e)}
+                         for e in np.asarray(ent[:n])])]
+
+
+# ---------------------------------------------------------------------------
+# continuous-decode backend
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ContinuousEngineAdapter:
+    """Generation through the slot-pool decoder.  The engine is built
+    WITHOUT a controller — admission is the server middleware's job —
+    and queued requests run to completion on drain."""
+    engine: ContinuousBatchingEngine
+    prompt_len: int | None = None
+
+    _queue: list = field(default_factory=list, init=False)
+    _free_at: float = field(default=0.0, init=False)
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name="continuous", kind="generate",
+                                  paths=(PATH_CONTINUOUS,))
+
+    def warmup(self, ctx) -> None:
+        pass
+
+    def load(self) -> LoadState:
+        return LoadState(queue_depth=len(self._queue),
+                         batch_fill=len(self._queue)
+                         / max(self.engine.n_slots, 1))
+
+    def triage(self, req, now, ctx) -> TriageResult:
+        hint = getattr(req, "entropy_hint", None)
+        return TriageResult(L=0.5 if hint is None else float(hint),
+                            proxy_output=[])
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        gr = GenRequest(rid=req.rid,
+                        prompt=np.asarray(req.payload, np.int32),
+                        max_new=getattr(req, "max_new", 16))
+        self._queue.append((req, gr))
+        return []
+
+    def step(self, now, ctx) -> list[Completion]:
+        return []
+
+    def drain(self, now, ctx) -> list[Completion]:
+        if not self._queue:
+            return []
+        reqs = [r for r, _ in self._queue]
+        gens = [g for _, g in self._queue]
+        self._queue = []
+        t0 = time.perf_counter()
+        stats = self.engine.serve(gens, prompt_len=self.prompt_len)
+        dt = time.perf_counter() - t0
+        start = max(now, self._free_at)
+        finish = start + dt
+        self._free_at = finish
+        return [Completion(requests=reqs,
+                           outputs=[list(g.generated) for g in gens],
+                           path=PATH_CONTINUOUS, t_start=start,
+                           t_finish=finish, extras=dict(stats))]
+
+
+# ---------------------------------------------------------------------------
+# generic callable backend
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CallableEngineAdapter:
+    """Serve any jit'd ``payload -> output`` function on the direct
+    path (no proxy head, so no host-side triage signal)."""
+    fn: Callable
+    name: str = "callable"
+
+    _free_at: float = field(default=0.0, init=False)
+    _warm: bool = field(default=False, init=False)
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name=self.name, kind="classify",
+                                  paths=(PATH_DIRECT,))
+
+    def warmup(self, ctx) -> None:
+        pass
+
+    def load(self) -> LoadState:
+        return LoadState()
+
+    def triage(self, req, now, ctx) -> TriageResult:
+        return TriageResult(L=None)
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        if not self._warm:
+            self._warm = True
+            jax.block_until_ready(self.fn(req.payload))   # compile
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self.fn(req.payload))
+        dt = time.perf_counter() - t0
+        start = max(now, self._free_at)
+        finish = start + dt
+        self._free_at = finish
+        return [Completion([req], [out], PATH_DIRECT, start, finish)]
+
+    def step(self, now, ctx) -> list[Completion]:
+        return []
+
+    def drain(self, now, ctx) -> list[Completion]:
+        return []

@@ -1,0 +1,479 @@
+"""``repro.serving.api`` — the unified serving surface.
+
+One request/response lifecycle across all four execution paths:
+
+    enqueue -> proxy triage -> admission (pluggable middleware)
+            -> route (direct | dynamic-batch | gated-in-graph
+                      | continuous-decode)
+            -> execute -> per-request telemetry -> respond
+
+The pieces:
+
+  - :class:`InferRequest` / :class:`InferResponse` — the shared typed
+    request/response pair every path consumes and produces.
+  - :class:`EnginePort` — the protocol (``warmup / triage / submit /
+    step / drain / capabilities / load``) an execution backend
+    implements.  Adapters for the four existing engines live in
+    ``repro.serving.adapters``.
+  - :class:`ServingMiddleware` — lifecycle hooks.  The paper's
+    closed-loop admission controller plugs in as
+    :class:`AdmissionMiddleware` (not as an engine constructor arg), so
+    policies compose with any backend.
+  - :class:`Server` — the orchestrator that owns the lifecycle,
+    virtual-time bookkeeping (busy/span), energy feedback, and the
+    per-request :class:`~repro.telemetry.request_log.RequestLog`.
+
+Time is *virtual*: requests carry ``arrival_s`` and simulated backends
+advance the clock with modelled latencies while live backends advance
+it with measured walltimes, so the discrete-event simulator and real
+engines share one code path (and one telemetry story).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.controller import AdmissionController, Decision
+from repro.core.energy import EnergyModel
+from repro.core.threshold import AdaptiveThreshold
+from repro.serving.workload import Request
+from repro.telemetry.request_log import RequestLog
+
+# -- canonical path names ---------------------------------------------------
+PATH_DIRECT = "direct"
+PATH_DYNAMIC_BATCH = "dynamic-batch"
+PATH_GATED = "gated-in-graph"
+PATH_CONTINUOUS = "continuous-decode"
+PATH_AUTO = "auto"
+PATH_SKIP = "skip"
+
+ALL_PATHS = (PATH_DIRECT, PATH_DYNAMIC_BATCH, PATH_GATED,
+             PATH_CONTINUOUS)
+
+_PATH_ALIASES = {
+    "batched": PATH_DYNAMIC_BATCH,       # legacy simulator name
+    "gated": PATH_GATED,
+    "continuous": PATH_CONTINUOUS,
+}
+
+
+def canonical_path(path: str) -> str:
+    """Map legacy/short path names onto the canonical four + auto."""
+    p = _PATH_ALIASES.get(path, path)
+    if p not in ALL_PATHS + (PATH_AUTO,):
+        raise ValueError(f"unknown path {path!r}; expected one of "
+                         f"{ALL_PATHS + (PATH_AUTO,)}")
+    return p
+
+
+# -- request / response -----------------------------------------------------
+
+@dataclass
+class InferRequest(Request):
+    """The unified request: a classification payload (token ids) or a
+    generation prompt.  Extends the workload ``Request`` wire type with
+    execution hints, so plain workload streams stay accepted."""
+    kind: str = "classify"             # "classify" | "generate"
+    max_new: int = 16                  # generation budget (kind=generate)
+    entropy_hint: float | None = None  # L(x) proxy known at enqueue time
+    metadata: dict = field(default_factory=dict)
+
+
+@dataclass
+class InferResponse:
+    """What every path returns for every request — including skipped
+    ones (answered by the proxy head, path='skip')."""
+    rid: int
+    output: Any                        # class id | generated token list
+    admitted: bool
+    path: str
+    arrival_s: float
+    t_start: float
+    t_finish: float
+    batch_size: int = 1
+    energy_j: float = 0.0              # modelled joules share
+    decision: Decision | None = None   # host-side admission record
+    label: int | None = None
+    telemetry: dict = field(default_factory=dict)
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_finish - self.arrival_s
+
+
+# -- engine port ------------------------------------------------------------
+
+@dataclass
+class TriageResult:
+    """Output of the cheap proxy pass over one request."""
+    L: float | None                    # uncertainty proxy; None = no
+    proxy_output: Any = None           # host-side triage (in-graph gate)
+    cost_s: float = 0.0                # triage walltime (busy-time)
+
+
+@dataclass
+class Completion:
+    """A finished execution unit (one batch; size 1 on the direct
+    path).  ``admit_mask`` is set by in-graph-admission engines whose
+    gate decided on device."""
+    requests: list
+    outputs: list
+    path: str
+    t_start: float
+    t_finish: float
+    admit_mask: list | None = None
+    extras: dict = field(default_factory=dict)       # batch-level
+    per_request: list | None = None                  # dict per request
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+
+@dataclass(frozen=True)
+class EngineCapabilities:
+    name: str
+    kind: str = "classify"                     # "classify" | "generate"
+    paths: tuple = (PATH_DIRECT,)
+    in_graph_admission: bool = False           # gate runs inside the jit
+
+
+@dataclass
+class LoadState:
+    queue_depth: int = 0
+    batch_fill: float = 0.0
+
+
+@runtime_checkable
+class EnginePort(Protocol):
+    """What a backend must provide to serve behind :class:`Server`.
+
+    ``submit``/``step``/``drain`` return completed :class:`Completion`s
+    (possibly none — e.g. a batcher absorbing the request); the server
+    owns everything around them (triage routing, admission, telemetry).
+    """
+
+    def capabilities(self) -> EngineCapabilities: ...
+
+    def warmup(self, ctx: "ServerContext") -> None: ...
+
+    def triage(self, req, now: float,
+               ctx: "ServerContext") -> TriageResult: ...
+
+    def submit(self, req, path: str, now: float,
+               ctx: "ServerContext") -> list[Completion]: ...
+
+    def step(self, now: float, ctx: "ServerContext") -> list[Completion]: ...
+
+    def drain(self, now: float,
+              ctx: "ServerContext") -> list[Completion]: ...
+
+    def load(self) -> LoadState: ...
+
+
+# -- middleware -------------------------------------------------------------
+
+class ServingMiddleware:
+    """Lifecycle hooks; subclass and override what you need.
+
+    ``on_triage`` may return a :class:`Decision`; with several
+    middleware the LAST non-None decision wins (later middleware can
+    veto earlier ones).  ``on_completion`` receives the finished
+    completion (None for skips) plus the responses minted from it.
+    """
+
+    def on_enqueue(self, req, ctx: "ServerContext") -> None:
+        return None
+
+    def on_triage(self, req, triage: TriageResult,
+                  ctx: "ServerContext") -> Decision | None:
+        return None
+
+    def on_decision(self, req, decision: Decision,
+                    ctx: "ServerContext") -> None:
+        """Observes the FINAL admission decision (after any override
+        by later middleware)."""
+        return None
+
+    def on_completion(self, completion: Completion | None,
+                      responses: list[InferResponse],
+                      ctx: "ServerContext") -> None:
+        return None
+
+    def on_finish(self, server: "Server",
+                  ctx: "ServerContext") -> None:
+        return None
+
+
+@dataclass
+class AdmissionMiddleware(ServingMiddleware):
+    """The paper's closed-loop controller as pluggable middleware.
+
+    Triage-time: feeds congestion state (queue depth, batch fill,
+    recent P95) into the controller and evaluates J(x) vs tau(t).
+    Completion-time: closes the loop — modelled joules from the batch
+    walltime feed the EnergyMeter EWMA that the NEXT decision's E(x)
+    reads.  For in-graph-admission engines it instead supplies the
+    (tau, e_norm, c_norm) snapshot via :meth:`snapshot` and folds the
+    device-side mask back into the controller's statistics."""
+    controller: AdmissionController
+    _pending: Decision | None = field(default=None, init=False)
+
+    def on_enqueue(self, req, ctx):
+        # feed congestion on EVERY path — the in-graph gate's C(x) leg
+        # reads this state through snapshot(), not through on_triage
+        cong = self.controller.congestion
+        load = ctx.engine.load()
+        cong.queue_depth = load.queue_depth
+        cong.batch_fill = load.batch_fill
+        if ctx.lat_window:
+            cong.p95_latency_s = float(
+                np.percentile(ctx.lat_window[-256:], 95))
+
+    def on_triage(self, req, triage, ctx):
+        if triage.L is None:
+            return None                 # nothing to triage on
+        self._pending = self.controller.decide(float(triage.L), ctx.now)
+        return self._pending
+
+    def on_decision(self, req, decision, ctx):
+        d, self._pending = self._pending, None
+        if d is None or decision is d:
+            return
+        # a later middleware overrode the controller: reconcile the
+        # closed-loop statistics with what was actually served (the
+        # adaptive threshold re-observes the served outcome, slightly
+        # overweighting overridden requests in its EWMA)
+        self.controller.n_admitted += (int(decision.admit)
+                                       - int(d.admit))
+        if isinstance(self.controller.threshold, AdaptiveThreshold):
+            self.controller.threshold.observe(decision.admit)
+
+    def on_completion(self, completion, responses, ctx):
+        if completion is None:
+            return
+        j = ctx.energy_model.p_active * (completion.t_finish
+                                         - completion.t_start)
+        # marginal energy is per unit of ADMITTED work (the full model
+        # ran only for those); matches serve_gated's offline loop
+        n = (completion.size if completion.admit_mask is None
+             else int(sum(completion.admit_mask)))
+        self.controller.meter.record(j, n_requests=n)
+        if completion.admit_mask is not None:
+            self.controller.observe_external(completion.admit_mask)
+
+    def snapshot(self, t: float) -> tuple[float, float, float]:
+        return self.controller.snapshot(t)
+
+
+@dataclass
+class TelemetryMiddleware(ServingMiddleware):
+    """Mirrors every response into a :class:`RequestLog` and optionally
+    a Tracker run (per-request audit rows)."""
+    log: RequestLog = field(default_factory=RequestLog)
+    run: Any = None                    # telemetry.Run, optional
+
+    def on_completion(self, completion, responses, ctx):
+        for r in responses:
+            self.log.add(r)
+
+    def on_finish(self, server, ctx):
+        self.log.busy_s = server.busy_s
+        self.log.span_s = server.span_s
+        self.flush()
+
+    def flush(self) -> None:
+        if self.run is not None:
+            self.log.log_to(self.run)
+
+
+# -- server -----------------------------------------------------------------
+
+@dataclass
+class ServerConfig:
+    """Lifecycle/routing knobs (engine-specific knobs live on the
+    adapters)."""
+    path: str = PATH_AUTO
+    auto_queue_threshold: int = 4      # route to the batcher when loaded
+    n_chips: int = 1
+    energy_model: EnergyModel = field(default_factory=EnergyModel)
+
+
+@dataclass
+class ServerContext:
+    """Shared mutable state middleware and engines may read."""
+    config: ServerConfig
+    engine: Any
+    energy_model: EnergyModel
+    n_chips: int = 1
+    now: float = 0.0
+    busy_s: float = 0.0
+    lat_window: list = field(default_factory=list)
+    snapshot: Callable[[float], tuple] | None = None
+    extras: dict = field(default_factory=dict)
+
+
+def _default_snapshot(t: float) -> tuple[float, float, float]:
+    # no admission middleware = open loop: a tau no J can violate
+    # (rule 'le'; a 'ge'-rule gate needs a real admission middleware)
+    return (float("inf"), 0.5, 0.0)
+
+
+@dataclass
+class Server:
+    """The one serving orchestrator.
+
+    ``serve(requests)`` drives the full lifecycle for any
+    :class:`EnginePort`; afterwards ``summary()`` reports the shared
+    latency/throughput/energy/admission metrics and ``responses`` holds
+    the per-request records.
+    """
+    engine: EnginePort
+    config: ServerConfig = field(default_factory=ServerConfig)
+    middleware: list = field(default_factory=list)
+
+    responses: list = field(default_factory=list, init=False)
+    log: RequestLog = field(init=False)
+    busy_s: float = field(default=0.0, init=False)
+    span_s: float = field(default=1e-9, init=False)
+    ctx: ServerContext = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self.log = RequestLog(energy_model=self.config.energy_model,
+                              n_chips=self.config.n_chips)
+
+    # -- lifecycle ----------------------------------------------------------
+    def serve(self, requests: Iterable[Request]) -> list[InferResponse]:
+        requests = list(requests)
+        self.log = RequestLog(energy_model=self.config.energy_model,
+                              n_chips=self.config.n_chips)
+        caps = self.engine.capabilities()
+        ctx = ServerContext(config=self.config, engine=self.engine,
+                            energy_model=self.config.energy_model,
+                            n_chips=self.config.n_chips)
+        for mw in self.middleware:
+            snap = getattr(mw, "snapshot", None)
+            if callable(snap):
+                ctx.snapshot = snap
+        if ctx.snapshot is None:
+            ctx.snapshot = _default_snapshot
+        self.ctx = ctx
+        self.engine.warmup(ctx)
+
+        out: list[InferResponse] = []
+        decisions: dict[int, Decision] = {}
+
+        for req in requests:
+            now = float(req.arrival_s)
+            ctx.now = now
+            # flush work whose deadline passed before this arrival
+            self._absorb(self.engine.step(now, ctx), ctx, decisions, out)
+
+            for mw in self.middleware:
+                mw.on_enqueue(req, ctx)
+
+            # proxy triage (cheap uncertainty signal; busy-time cost)
+            tri = self.engine.triage(req, now, ctx)
+            ctx.busy_s += tri.cost_s
+
+            # admission: last non-None middleware decision wins;
+            # in-graph engines gate on device instead
+            decision = None
+            if not caps.in_graph_admission:
+                for mw in self.middleware:
+                    d = mw.on_triage(req, tri, ctx)
+                    if d is not None:
+                        decision = d
+            if decision is not None:
+                decisions[req.rid] = decision
+                for mw in self.middleware:
+                    mw.on_decision(req, decision, ctx)
+
+            if decision is not None and not decision.admit:
+                # "skip or respond from cache": the proxy answers
+                resp = InferResponse(
+                    rid=req.rid, output=tri.proxy_output, admitted=False,
+                    path=PATH_SKIP, arrival_s=now, t_start=now,
+                    t_finish=now + tri.cost_s, decision=decision,
+                    label=getattr(req, "label", None))
+                ctx.lat_window.append(tri.cost_s)
+                out.append(resp)
+                self.log.add(resp)
+                for mw in self.middleware:
+                    mw.on_completion(None, [resp], ctx)
+                continue
+
+            path = self._route(caps, ctx)
+            self._absorb(self.engine.submit(req, path, now, ctx),
+                         ctx, decisions, out)
+
+        last = float(requests[-1].arrival_s) if requests else 0.0
+        ctx.now = last
+        self._absorb(self.engine.drain(last, ctx), ctx, decisions, out)
+
+        first = float(requests[0].arrival_s) if requests else 0.0
+        finish = max((r.t_finish for r in out), default=first)
+        self.span_s = max(finish - first, 1e-9)
+        self.busy_s = ctx.busy_s
+        self.log.busy_s = ctx.busy_s
+        self.log.span_s = self.span_s
+        self.responses = out
+        for mw in self.middleware:
+            mw.on_finish(self, ctx)
+        return out
+
+    # -- internals ----------------------------------------------------------
+    def _route(self, caps: EngineCapabilities, ctx) -> str:
+        p = canonical_path(self.config.path)
+        if p != PATH_AUTO:
+            if p not in caps.paths:
+                raise ValueError(
+                    f"engine {caps.name!r} cannot serve path {p!r} "
+                    f"(supports {caps.paths})")
+            return p
+        if len(caps.paths) == 1:
+            return caps.paths[0]
+        if (PATH_DYNAMIC_BATCH in caps.paths
+                and self.engine.load().queue_depth
+                >= self.config.auto_queue_threshold):
+            return PATH_DYNAMIC_BATCH
+        return (PATH_DIRECT if PATH_DIRECT in caps.paths
+                else caps.paths[0])
+
+    def _absorb(self, completions, ctx, decisions, out) -> None:
+        for comp in completions or ():
+            dt = comp.t_finish - comp.t_start
+            ctx.busy_s += dt
+            j_total = ctx.energy_model.p_active * dt
+            resps = []
+            for i, r in enumerate(comp.requests):
+                admitted = (True if comp.admit_mask is None
+                            else bool(comp.admit_mask[i]))
+                telemetry = dict(comp.extras) if comp.extras else {}
+                if comp.per_request is not None:
+                    telemetry.update(comp.per_request[i])
+                resp = InferResponse(
+                    rid=r.rid, output=comp.outputs[i], admitted=admitted,
+                    path=comp.path, arrival_s=float(r.arrival_s),
+                    t_start=comp.t_start, t_finish=comp.t_finish,
+                    batch_size=comp.size,
+                    energy_j=j_total / max(comp.size, 1),
+                    decision=decisions.get(r.rid),
+                    label=getattr(r, "label", None),
+                    telemetry=telemetry)
+                ctx.lat_window.append(resp.latency_s)
+                out.append(resp)
+                resps.append(resp)
+                self.log.add(resp)
+            for mw in self.middleware:
+                mw.on_completion(comp, resps, ctx)
+
+    # -- reporting ----------------------------------------------------------
+    @property
+    def energy_j(self) -> float:
+        return self.log.energy_j
+
+    def summary(self) -> dict:
+        return self.log.summary()

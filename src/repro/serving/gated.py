@@ -40,15 +40,17 @@ def make_gated_classify_step(cfg: dict, *, exit_layer: int = 2,
                              capacity: int | None = None,
                              gate: GateParams = GateParams()
                              ) -> Callable:
-    """Returns jit'd step(params, tokens, tau, e_norm, c_norm) ->
-    (pred [B], admitted [B] bool, entropy [B]).
+    """Returns jit'd step(params, tokens, tau, e_norm, c_norm,
+    n_valid=None) -> (pred [B], admitted [B] bool, entropy [B]).
+    ``n_valid`` (traced scalar) marks how many leading rows are real
+    requests; pad rows beyond it can never be admitted.
 
     ``e_norm``/``c_norm`` are the normalised meter/congestion scalars
     snapshotted on the host (the slow loop); ``tau`` the current
     threshold.  ``capacity`` bounds how many requests may take the
     full model per step (default B//2)."""
 
-    def step(params, tokens, tau, e_norm, c_norm):
+    def step(params, tokens, tau, e_norm, c_norm, n_valid=None):
         B = tokens.shape[0]
         cap = capacity or max(B // 2, 1)
 
@@ -64,6 +66,10 @@ def make_gated_classify_step(cfg: dict, *, exit_layer: int = 2,
         J = (gate.alpha * L + gate.beta * e_norm
              + gate.gamma * c_norm) / den
         admit = (J <= tau) if gate.rule == "le" else (J >= tau)
+        if n_valid is not None:
+            # partial batch: zero-pad rows look confident (low J) and
+            # would steal capacity from real requests — mask them out
+            admit = admit & (jnp.arange(B) < n_valid)
 
         # 4: bucket the `cap` best (lowest-J) admitted requests
         score = jnp.where(admit, -J, -jnp.inf)
@@ -85,19 +91,45 @@ def make_gated_classify_step(cfg: dict, *, exit_layer: int = 2,
 
 def serve_gated(cfg: dict, params, tokens, *, tau_schedule,
                 exit_layer: int = 2, batch: int = 64,
-                gate: GateParams = GateParams()):
+                gate: GateParams = GateParams(), meter=None):
     """Batched offline serving through the gated step.  Returns
     (preds [N], admitted [N], entropies [N]); tau_schedule(t) is
-    evaluated once per batch (the slow closed loop)."""
+    evaluated once per batch (the slow closed loop).
+
+    The energy leg of the loop is LIVE: each batch's measured walltime
+    becomes modelled joules in an :class:`EnergyMeter` EWMA over the
+    ADMITTED requests (the work the full model actually did — the same
+    E(x) source ``AdmissionController.decide`` reads), and the next
+    batch's ``e_norm`` is that joules/request EWMA squashed against
+    twice the first admitting batch's level — it starts at the
+    historical 0.5 seed and then tracks admitted-fraction/walltime
+    drift, tightening the gate when per-admitted-request energy
+    climbs.  NOTE: the served gated path (``Server`` +
+    ``GatedEngineAdapter`` + ``AdmissionMiddleware``) normalises the
+    same EWMA through the controller's running min/max ``Normalizer``
+    instead — same signal, different squash.
+    """
+    import time
+
     import numpy as np
+
+    from repro.core.energy import EnergyMeter
 
     step = make_gated_classify_step({**cfg}, exit_layer=exit_layer,
                                     gate=gate)
+    meter = meter if meter is not None else EnergyMeter()
     N = len(tokens)
     preds = np.zeros(N, np.int32)
     admits = np.zeros(N, bool)
     ents = np.zeros(N, np.float32)
-    e_norm = 0.5
+    # compile outside the timed loop — the first measured walltime must
+    # be a step, not an XLA compile, or e_ref is inflated ~1000x
+    warm = np.zeros((batch,) + np.asarray(tokens).shape[1:],
+                    np.asarray(tokens).dtype)
+    jax.block_until_ready(step(params, jnp.asarray(warm), 1.0, 0.5,
+                               0.0, batch))
+    e_norm = 0.5                          # seed until the meter has data
+    e_ref = None                          # first measured joules/request
     for start in range(0, N, batch):
         chunk = tokens[start:start + batch]
         n = len(chunk)
@@ -107,8 +139,22 @@ def serve_gated(cfg: dict, params, tokens, *, tau_schedule,
                                  chunk.dtype)])
         tau = float(tau_schedule(start))
         c_norm = 0.0                      # offline: no queue pressure
-        p, a, e = step(params, jnp.asarray(chunk), tau, e_norm, c_norm)
+        t0 = time.perf_counter()
+        p, a, e = jax.block_until_ready(
+            step(params, jnp.asarray(chunk), tau, e_norm, c_norm, n))
+        dt = time.perf_counter() - t0
         preds[start:start + n] = np.asarray(p[:n])
         admits[start:start + n] = np.asarray(a[:n])
         ents[start:start + n] = np.asarray(e[:n])
+        # close the loop: walltime joules over the admitted share ->
+        # EWMA -> next batch's e_norm
+        n_adm = int(admits[start:start + n].sum())
+        meter.record(meter.model.p_active * dt, n_requests=n_adm)
+        # reference level = first batch that actually admitted work;
+        # until then the EWMA is empty and e_norm stays at the seed
+        if e_ref is None and meter.joules_per_request > 0:
+            e_ref = meter.joules_per_request
+        if e_ref is not None:
+            e_norm = float(np.clip(
+                meter.joules_per_request / (2.0 * e_ref), 0.0, 1.0))
     return preds, admits, ents

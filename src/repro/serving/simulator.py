@@ -1,15 +1,14 @@
-"""Closed-loop discrete-event simulator — the paper's testbed, virtual.
+"""Closed-loop discrete-event simulation — the paper's testbed, virtual.
 
-Wires together: arrival stream -> admission controller (J vs tau) ->
-dual-path scheduler (DirectPath / DynamicBatcher) -> energy accounting
-(EnergyModel) -> feedback (EnergyMeter EWMA + congestion -> next J).
-
-Model behaviour enters through an ``Oracle``: precomputed per-request
-full-model predictions, proxy predictions and proxy entropies (the
-engines produce these in one vectorised pass), plus calibrated latency
-models.  The DES itself is pure bookkeeping, so 10k-request sweeps run
-in milliseconds and every run is exactly reproducible — the paper's
-"auditable basis" requirement.
+The lifecycle (arrival stream -> admission controller -> dual-path
+scheduler -> energy accounting -> EWMA/congestion feedback) lives in
+``repro.serving.api.Server``; this module keeps the simulator-specific
+pieces: the ``Oracle`` (precomputed per-request model behaviour, so 10k
+request sweeps run in milliseconds and every run is exactly
+reproducible — the paper's "auditable basis" requirement), the
+``SimMetrics`` report, and ``ClosedLoopSimulator`` — now a thin
+DEPRECATED shim that builds a ``Server`` over an ``OracleEngine``.
+New code should use ``repro.serving.api`` directly.
 """
 from __future__ import annotations
 
@@ -21,7 +20,7 @@ import numpy as np
 from repro.core.controller import AdmissionController
 from repro.core.energy import EnergyModel
 from repro.core.landscape import LatencyModel
-from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
+from repro.serving.batcher import DirectPath, DynamicBatcher
 from repro.serving.workload import Request
 
 
@@ -120,14 +119,21 @@ class SimMetrics:
             "throughput_qps": round(self.throughput_qps, 2),
             "total_time_s": round(self.span_s, 4),
             "busy_s": round(self.busy_s, 4),
-            "energy_kwh": round(self.energy_kwh, 6),
-            "co2_kg": round(self.co2_kg, 6),
+            "energy_kwh": round(self.energy_kwh, 9),
+            "co2_kg": round(self.co2_kg, 9),
             "accuracy": round(self.accuracy, 4),
         }
 
 
 @dataclass
 class ClosedLoopSimulator:
+    """DEPRECATED shim — kept so pre-unified-API callers keep working.
+
+    Builds a :class:`repro.serving.api.Server` over an
+    :class:`repro.serving.adapters.OracleEngine` with the controller
+    plugged in as admission middleware, then converts the unified
+    responses back into ``SimMetrics``.
+    """
     oracle: Oracle
     controller: AdmissionController
     direct: DirectPath
@@ -137,87 +143,33 @@ class ClosedLoopSimulator:
     auto_queue_threshold: int = 4     # route to batcher when loaded
     n_chips: int = 1
 
-    def _pick_path(self) -> str:
-        if self.path != "auto":
-            return self.path
-        return ("batched" if self.batched.queue_depth
-                >= self.auto_queue_threshold else "direct")
-
     def run(self, requests: list[Request]) -> SimMetrics:
-        ctrl = self.controller
-        recs: list[ServedRecord] = []
-        busy = 0.0
-        lat_window: list[float] = []
+        from repro.serving.adapters import OracleEngine
+        from repro.serving.api import (PATH_DYNAMIC_BATCH, Server,
+                                       ServerConfig, canonical_path)
 
-        def label_of(r: Request):
-            if r.label is not None:
-                return r.label
-            if self.oracle.labels is not None:
-                return int(self.oracle.labels[r.rid])
-            return None
+        server = Server(
+            engine=OracleEngine(self.oracle, self.direct, self.batched),
+            config=ServerConfig(
+                path=canonical_path(self.path),
+                auto_queue_threshold=self.auto_queue_threshold,
+                n_chips=self.n_chips, energy_model=self.energy_model),
+            middleware=[self.controller.as_middleware()])
+        responses = server.serve(requests)
 
-        def finish_batch(b: Batch, path: str):
-            nonlocal busy
-            busy += b.t_finish - b.t_start
-            # energy feedback: modelled joules amortised over the batch
-            j = self.energy_model.p_active * (b.t_finish - b.t_start)
-            ctrl.meter.record(j, n_requests=b.size)
-            for r in b.requests:
-                lat = b.t_finish - r.arrival_s
-                lat_window.append(lat)
-                pred = int(self.oracle.full_pred[r.rid])
-                lbl = label_of(r)
-                correct = None if lbl is None else pred == lbl
-                recs.append(ServedRecord(
-                    rid=r.rid, arrival=r.arrival_s, finish=b.t_finish,
-                    admitted=True, path=path, pred=pred, correct=correct,
-                    batch_size=b.size))
-
-        proxy_lat = (self.oracle.proxy_latency
-                     or LatencyModel(t_fixed_s=0.0, t_tok_s=0.0))
-
-        for req in requests:
-            now = req.arrival_s
-            for b in self.batched.poll(now):
-                finish_batch(b, "batched")
-
-            # ---- triage (Appendix A) --------------------------------
-            t_triage = proxy_lat.step_time(1)
-            busy += t_triage
-            L = float(self.oracle.entropy[req.rid])
-            ctrl.congestion.queue_depth = self.batched.queue_depth
-            ctrl.congestion.batch_fill = self.batched.fill
-            if lat_window:
-                ctrl.congestion.p95_latency_s = float(
-                    np.percentile(lat_window[-256:], 95))
-            decision = ctrl.decide(L, now)
-
-            if not decision.admit:
-                # "skip or respond from cache": the proxy answers
-                pred = int(self.oracle.proxy_pred[req.rid])
-                lbl = label_of(req)
-                correct = None if lbl is None else pred == lbl
-                finish = now + t_triage
-                lat_window.append(t_triage)
-                recs.append(ServedRecord(
-                    rid=req.rid, arrival=now, finish=finish,
-                    admitted=False, path="skip", pred=pred,
-                    correct=correct))
-                continue
-
-            if self._pick_path() == "direct":
-                finish_batch(self.direct.serve(req, now), "direct")
-            else:
-                for b in self.batched.submit(req, now):
-                    finish_batch(b, "batched")
-
-        last = requests[-1].arrival_s if requests else 0.0
-        for b in self.batched.drain(last):
-            finish_batch(b, "batched")
-
-        first = requests[0].arrival_s if requests else 0.0
-        span = max((max(r.finish for r in recs) - first) if recs else 0.0,
-                   1e-9)
-        return SimMetrics(records=recs, busy_s=busy, span_s=span,
+        legacy = {PATH_DYNAMIC_BATCH: "batched"}
+        recs = []
+        for r in responses:
+            lbl = r.label
+            if lbl is None and self.oracle.labels is not None:
+                lbl = int(self.oracle.labels[r.rid])
+            pred = int(r.output)
+            recs.append(ServedRecord(
+                rid=r.rid, arrival=r.arrival_s, finish=r.t_finish,
+                admitted=r.admitted, path=legacy.get(r.path, r.path),
+                pred=pred, correct=None if lbl is None else pred == lbl,
+                batch_size=r.batch_size))
+        return SimMetrics(records=recs, busy_s=server.busy_s,
+                          span_s=server.span_s,
                           energy_model=self.energy_model,
                           n_chips=self.n_chips)

@@ -1,5 +1,7 @@
 from repro.telemetry.carbon import (CarbonTracker,
                                     GRID_INTENSITY_KG_PER_KWH)
+from repro.telemetry.request_log import RequestLog
 from repro.telemetry.tracker import Run, Tracker
 
-__all__ = ["CarbonTracker", "GRID_INTENSITY_KG_PER_KWH", "Run", "Tracker"]
+__all__ = ["CarbonTracker", "GRID_INTENSITY_KG_PER_KWH", "RequestLog",
+           "Run", "Tracker"]

@@ -1,0 +1,257 @@
+"""Unified serving API: lifecycle round-trips on every execution path,
+controller-middleware ordering, and exact-output regression against
+the bare engines."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionController, DecayingThreshold,
+                        Decision, LatencyModel)
+from repro.models import distilbert
+from repro.serving import (PATH_CONTINUOUS, PATH_DIRECT,
+                           PATH_DYNAMIC_BATCH, PATH_GATED, PATH_SKIP,
+                           AdmissionMiddleware, ClassifierEngine,
+                           ClassifierEngineAdapter, ClosedLoopSimulator,
+                           ContinuousBatchingEngine,
+                           ContinuousEngineAdapter, DirectPath,
+                           DynamicBatcher, GatedEngineAdapter,
+                           InferRequest, Oracle, OracleEngine, Server,
+                           ServerConfig, ServingMiddleware,
+                           TelemetryMiddleware, canonical_path,
+                           poisson_arrivals)
+from repro.training import ClassificationData, train_classifier
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = distilbert.config(n_layers=2, d_model=32, n_heads=2, d_ff=64,
+                            vocab=300, max_pos=24)
+    params = distilbert.init(cfg, jax.random.PRNGKey(0))
+    data = ClassificationData(vocab=300, seq_len=16, seed=3)
+    params, _ = train_classifier(cfg, params, data.train_batches(32),
+                                 steps=60, verbose=False)
+    return cfg, params, data
+
+
+def _open_controller():
+    return AdmissionController(enabled=False)
+
+
+def _requests(toks, labels=None, *, arrival_gap=0.0):
+    return [InferRequest(rid=i, arrival_s=i * arrival_gap,
+                         payload=toks[i],
+                         label=None if labels is None else int(labels[i]))
+            for i in range(len(toks))]
+
+
+# ---------------------------------------------------------------------------
+# exact-output regression vs the bare engine
+# ---------------------------------------------------------------------------
+
+def test_direct_path_reproduces_classify_exactly(model):
+    cfg, params, data = model
+    engine = ClassifierEngine(cfg, params, exit_layer=1)
+    toks, labels, _ = data.sample(12)
+    server = Server(ClassifierEngineAdapter(engine),
+                    ServerConfig(path="direct"),
+                    middleware=[AdmissionMiddleware(_open_controller())])
+    responses = server.serve(_requests(toks, labels, arrival_gap=1.0))
+    assert [r.rid for r in responses] == list(range(12))
+    assert all(r.admitted and r.path == PATH_DIRECT for r in responses)
+    # batch-1 service == the engine's own classify on the same rows
+    ref = np.concatenate([engine.classify(toks[i:i + 1])[0]
+                          for i in range(12)])
+    np.testing.assert_array_equal(
+        np.array([r.output for r in responses]), ref)
+
+
+def test_dynamic_batch_reproduces_classify_exactly(model):
+    cfg, params, data = model
+    engine = ClassifierEngine(cfg, params, exit_layer=1)
+    n = 24
+    toks, labels, _ = data.sample(n)
+    server = Server(ClassifierEngineAdapter(engine, max_batch=n),
+                    ServerConfig(path="dynamic-batch"),
+                    middleware=[AdmissionMiddleware(_open_controller())])
+    responses = server.serve(_requests(toks, labels))
+    assert all(r.path == PATH_DYNAMIC_BATCH and r.batch_size == n
+               for r in responses)
+    # one fused batch in arrival order == one engine.classify call
+    ref, _ = engine.classify(toks)
+    np.testing.assert_array_equal(
+        np.array([r.output for r in responses]), ref)
+    summary = server.summary()
+    assert summary["n"] == n and summary["admission_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# lifecycle round-trips per path
+# ---------------------------------------------------------------------------
+
+def test_oracle_paths_auto_with_controller():
+    n = 300
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 2, n)
+    oracle = Oracle(full_pred=labels.copy(),
+                    proxy_pred=np.where(rng.random(n) < 0.15,
+                                        1 - labels, labels),
+                    entropy=rng.uniform(0, 0.7, n), labels=labels,
+                    proxy_latency=LatencyModel(0.0002, 0.0))
+    ctrl = AdmissionController(
+        threshold=DecayingThreshold(1.0, 0.45, 0.3))
+    server = Server(
+        OracleEngine(oracle, DirectPath(LatencyModel(0.002, 0.004)),
+                     DynamicBatcher(LatencyModel(0.02, 0.0015))),
+        ServerConfig(path="auto"),
+        middleware=[AdmissionMiddleware(ctrl)])
+    responses = server.serve(poisson_arrivals(n, 150.0, seed=1))
+    assert sorted(r.rid for r in responses) == list(range(n))
+    paths = {r.path for r in responses}
+    assert paths <= {PATH_DIRECT, PATH_DYNAMIC_BATCH, PATH_SKIP}
+    skipped = [r for r in responses if not r.admitted]
+    assert all(r.path == PATH_SKIP and r.decision is not None
+               and not r.decision.admit for r in skipped)
+    # energy feedback closed the loop
+    assert ctrl.meter.total_joules > 0
+    assert ctrl.n_seen == n
+
+
+def test_server_summary_matches_legacy_simulator():
+    """Old entry point (shim) and new API must report identical
+    numbers for the identical run."""
+    n = 200
+
+    def build():
+        rng = np.random.default_rng(7)
+        labels = rng.integers(0, 2, n)
+        oracle = Oracle(full_pred=labels.copy(), proxy_pred=labels.copy(),
+                        entropy=rng.uniform(0, 0.7, n), labels=labels,
+                        proxy_latency=LatencyModel(0.0002, 0.0))
+        ctrl = AdmissionController(
+            threshold=DecayingThreshold(1.0, 0.45, 0.3))
+        direct = DirectPath(LatencyModel(0.002, 0.004))
+        batched = DynamicBatcher(LatencyModel(0.02, 0.0015))
+        return oracle, ctrl, direct, batched
+
+    oracle, ctrl, direct, batched = build()
+    labels = oracle.labels
+    server = Server(OracleEngine(oracle, direct, batched),
+                    ServerConfig(path="auto"),
+                    middleware=[AdmissionMiddleware(ctrl)])
+    server.serve(poisson_arrivals(n, 150.0, seed=2, labels=labels))
+
+    oracle, ctrl, direct, batched = build()
+    sim = ClosedLoopSimulator(oracle=oracle, controller=ctrl,
+                              direct=direct, batched=batched)
+    metrics = sim.run(poisson_arrivals(n, 150.0, seed=2, labels=labels))
+    assert server.summary() == metrics.summary()
+
+
+def test_gated_path_round_trip(model):
+    cfg, params, data = model
+    n, batch, cap = 48, 16, 8
+    toks, labels, _ = data.sample(n)
+    ctrl = AdmissionController(
+        threshold=DecayingThreshold(0.9, 0.3, 0.05))
+    server = Server(
+        GatedEngineAdapter(cfg, params, batch=batch, capacity=cap,
+                           exit_layer=1),
+        ServerConfig(path="gated"),
+        middleware=[AdmissionMiddleware(ctrl)])
+    responses = server.serve(_requests(toks, labels, arrival_gap=0.001))
+    assert sorted(r.rid for r in responses) == list(range(n))
+    assert all(r.path == PATH_GATED for r in responses)
+    # capacity bound holds per batch
+    n_adm = sum(r.admitted for r in responses)
+    assert n_adm <= cap * (n // batch)
+    # in-graph mask flowed back into the controller's closed loop
+    assert ctrl.n_seen == n and ctrl.n_admitted == n_adm
+    assert ctrl.meter.total_joules > 0
+    # per-batch gate snapshot is attached as telemetry
+    assert all("tau" in r.telemetry and "e_norm" in r.telemetry
+               for r in responses)
+
+
+def test_continuous_path_round_trip():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, jax.random.PRNGKey(0))
+    engine = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64)
+    rng = np.random.default_rng(1)
+    reqs = [InferRequest(rid=i, arrival_s=0.001 * i,
+                         payload=rng.integers(0, cfg.vocab, 8),
+                         kind="generate", max_new=4)
+            for i in range(5)]
+    server = Server(ContinuousEngineAdapter(engine, prompt_len=8),
+                    ServerConfig(path="continuous"),
+                    middleware=[AdmissionMiddleware(_open_controller())])
+    responses = server.serve(reqs)
+    assert sorted(r.rid for r in responses) == list(range(5))
+    assert all(r.admitted and r.path == PATH_CONTINUOUS
+               for r in responses)
+    assert all(len(r.output) >= 4 for r in responses)
+    assert responses[0].telemetry["occupancy"] > 0
+
+
+# ---------------------------------------------------------------------------
+# middleware semantics
+# ---------------------------------------------------------------------------
+
+class _Probe(ServingMiddleware):
+    def __init__(self, name, trace, decide=None):
+        self.name, self.trace, self.decide = name, trace, decide
+
+    def on_enqueue(self, req, ctx):
+        self.trace.append(f"enqueue:{self.name}:{req.rid}")
+
+    def on_triage(self, req, triage, ctx):
+        self.trace.append(f"triage:{self.name}:{req.rid}")
+        if self.decide is None:
+            return None
+        admit = self.decide(req)
+        return Decision(admit=admit, J=0.0, tau=0.0, L=0.0, E=0.0,
+                        C=0.0, t=ctx.now)
+
+    def on_completion(self, completion, responses, ctx):
+        self.trace.append(f"completion:{self.name}")
+
+
+def test_middleware_ordering_last_decision_wins():
+    n = 6
+    rng = np.random.default_rng(0)
+    oracle = Oracle(full_pred=np.ones(n, np.int64),
+                    proxy_pred=np.zeros(n, np.int64),
+                    entropy=rng.uniform(0, 1, n),
+                    proxy_latency=LatencyModel(0.0001, 0.0))
+    trace = []
+    first = _Probe("first", trace, decide=lambda r: True)
+    second = _Probe("second", trace, decide=lambda r: r.rid % 2 == 0)
+    telem = TelemetryMiddleware()
+    server = Server(
+        OracleEngine(oracle, DirectPath(LatencyModel(0.001, 0.001)),
+                     DynamicBatcher(LatencyModel(0.01, 0.001))),
+        ServerConfig(path="direct"),
+        middleware=[first, second, telem])
+    responses = server.serve(
+        [InferRequest(rid=i, arrival_s=0.01 * i) for i in range(n)])
+
+    # the LAST middleware's decision overrides the first's admit-all
+    for r in responses:
+        assert r.admitted == (r.rid % 2 == 0)
+    assert [r.output for r in responses] == [1, 0, 1, 0, 1, 0]
+    # hooks fire in middleware order at each stage
+    assert trace[:4] == ["enqueue:first:0", "enqueue:second:0",
+                         "triage:first:0", "triage:second:0"]
+    # telemetry middleware saw every response
+    assert telem.log.n == n
+
+
+def test_canonical_path_aliases():
+    assert canonical_path("batched") == PATH_DYNAMIC_BATCH
+    assert canonical_path("gated") == PATH_GATED
+    assert canonical_path("continuous") == PATH_CONTINUOUS
+    assert canonical_path("auto") == "auto"
+    with pytest.raises(ValueError):
+        canonical_path("warp-drive")
