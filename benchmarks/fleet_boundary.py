@@ -1,0 +1,108 @@
+"""Fleet boundary sweep — the paper's Table-2 ORT-vs-Triton efficiency
+boundary as a *runtime* phenomenon.
+
+Sweeps steady-state QPS and reports, per load level:
+
+  - joules/request of a single **direct** replica (FastAPI+ORT
+    analogue) and a single **dynamic-batch** replica (Triton analogue)
+    -> the crossover point where managed batching overtakes direct
+    serving (paper Table 2: direct wins sparse, batching wins loaded);
+  - joules/request of a 3-replica heterogeneous fleet under each
+    routing policy (energy-aware vs round-robin vs least-loaded)
+    -> whether the energy-aware router *tracks* the boundary it is
+    supposed to discover at runtime.
+
+Emits ``BENCH_fleet.json`` at the repo root (perf-trajectory record)
+in addition to the standard ``results/benchmarks`` dump made by
+``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.fleet import (EnergyAwareRouter, FleetSimulator,
+                         LeastLoadedRouter, RoundRobinRouter,
+                         StaticRouter, build_sim_fleet, steady)
+
+QPS_SWEEP = (20, 40, 80, 160, 320, 640)
+N_REQUESTS = 1200
+FLEET_KINDS = ("direct", "dynamic-batch", "gated-in-graph")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_POLICIES = (
+    ("energy-aware", EnergyAwareRouter),
+    ("round-robin", RoundRobinRouter),
+    ("least-loaded", LeastLoadedRouter),
+)
+
+
+def run(qps_sweep=QPS_SWEEP, n: int = N_REQUESTS,
+        seed: int = 0) -> list[dict]:
+    rows = []
+    for qps in qps_sweep:
+        sc = steady(n, qps=qps, seed=seed)
+        oracle, reqs = sc.oracle, sc.requests
+
+        # single-replica boundaries (the offline Table-2 pair, live)
+        for kind in ("direct", "dynamic-batch"):
+            pool = build_sim_fleet(oracle, kinds=(kind,))
+            rep = FleetSimulator(pool, StaticRouter()).run(reqs)
+            s = rep.summary
+            rows.append({
+                "qps": qps, "config": kind, "n": s["n"],
+                "joules_per_request": s["joules_per_request"],
+                "p95_latency_ms": s["p95_latency_ms"],
+                "accuracy": s["accuracy"],
+            })
+
+        # the 3-replica fleet under each routing policy
+        for policy, router_cls in _POLICIES:
+            pool = build_sim_fleet(oracle, kinds=FLEET_KINDS)
+            rep = FleetSimulator(pool, router_cls()).run(reqs)
+            s = rep.summary
+            batch_share = (s["routed"].get("dynamic-batch-1", 0)
+                           / max(s["n"], 1))
+            rows.append({
+                "qps": qps, "config": f"fleet/{policy}", "n": s["n"],
+                "joules_per_request": s["joules_per_request"],
+                "p95_latency_ms": s["p95_latency_ms"],
+                "accuracy": s["accuracy"],
+                "batch_share": round(batch_share, 4),
+            })
+    return rows
+
+
+def check(rows) -> dict:
+    jpr = {(r["qps"], r["config"]): r["joules_per_request"]
+           for r in rows}
+    sweep = sorted({r["qps"] for r in rows})
+    batch_wins = [q for q in sweep
+                  if jpr[(q, "dynamic-batch")] < jpr[(q, "direct")]]
+    crossover = min(batch_wins) if batch_wins else None
+
+    ea = [jpr[(q, "fleet/energy-aware")] for q in sweep]
+    rr = [jpr[(q, "fleet/round-robin")] for q in sweep]
+    out = {
+        # Table-2 direction: direct wins sparse, batching wins loaded
+        "direct_wins_at_low_qps": sweep[0] not in batch_wins,
+        "batch_wins_at_high_qps": sweep[-1] in batch_wins,
+        "crossover_qps": crossover,
+        "energy_router_beats_round_robin_mean": (
+            float(np.mean(ea)) < float(np.mean(rr))),
+        "energy_vs_rr_saving_pct": round(
+            100.0 * (1 - float(np.mean(ea)) / float(np.mean(rr))), 2),
+    }
+    with open(os.path.join(_REPO_ROOT, "BENCH_fleet.json"), "w") as f:
+        json.dump({"bench": "fleet_boundary", "check": out,
+                   "rows": rows}, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print(check(rows))

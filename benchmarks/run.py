@@ -11,9 +11,9 @@ import os
 import time
 
 from benchmarks import (controller_dynamics, fig3_throughput,
-                        fig4_tradeoff, fig5_landscape, perf_variants,
-                        roofline, rule_ablation, table2_dual_path,
-                        table3_ablation)
+                        fig4_tradeoff, fig5_landscape, fleet_boundary,
+                        perf_variants, roofline, rule_ablation,
+                        table2_dual_path, table3_ablation)
 
 OUT = os.environ.get("BENCH_OUT", "results/benchmarks")
 
@@ -42,6 +42,9 @@ _BENCHES = [
      lambda c: (f"le_saves={c['le_saves_energy']};"
                 f"ge_saves={c['ge_saves_energy']};"
                 f"ge_skips_easier={c['ge_skips_easier']}")),
+    ("fleet_boundary", fleet_boundary,
+     lambda c: (f"crossover_qps={c['crossover_qps']};"
+                f"ea_vs_rr={c['energy_vs_rr_saving_pct']}%")),
 ]
 
 

@@ -1,0 +1,56 @@
+"""Run every fleet scenario under every routing policy and print the
+joules/request league table — the ORT-vs-Triton boundary as a runtime
+decision, in one screenful.
+
+    PYTHONPATH=src python examples/fleet_scenarios.py
+
+Everything is virtual-time (oracle-backed replicas), so the full
+4-scenario x 3-policy grid over 1.5k requests each runs in seconds
+and is exactly reproducible.
+"""
+import sys
+
+from repro.fleet import (Autoscaler, EnergyAwareRouter, FleetSimulator,
+                         LeastLoadedRouter, RoundRobinRouter,
+                         SCENARIOS, build_sim_fleet)
+
+N = 1500
+KINDS = ("direct", "dynamic-batch", "gated-in-graph",
+         "continuous-decode")
+POLICIES = (
+    ("energy-aware", EnergyAwareRouter),
+    ("round-robin", RoundRobinRouter),
+    ("least-loaded", LeastLoadedRouter),
+)
+
+
+def main(seed: int = 0) -> dict:
+    results = {}
+    print(f"{'scenario':22s} {'policy':14s} {'J/req':>8s} "
+          f"{'p95 ms':>9s} {'acc':>6s}  routed")
+    for name, build in SCENARIOS.items():
+        sc = build(N, seed=seed)
+        for policy, router_cls in POLICIES:
+            pool = build_sim_fleet(sc.oracle, kinds=KINDS)
+            sim = FleetSimulator(pool, router_cls(),
+                                 autoscaler=Autoscaler())
+            s = sim.run(sc.requests).summary
+            results[(name, policy)] = s
+            routed = ",".join(f"{k.split('-')[0]}:{v}"
+                              for k, v in s["routed"].items())
+            print(f"{name:22s} {policy:14s} "
+                  f"{s['joules_per_request']:8.3f} "
+                  f"{s['p95_latency_ms']:9.2f} {s['accuracy']:6.3f}  "
+                  f"{routed}")
+    wins = sum(
+        results[(n, "energy-aware")]["joules_per_request"]
+        <= min(results[(n, p)]["joules_per_request"]
+               for p, _ in POLICIES)
+        for n in SCENARIOS)
+    print(f"\nenergy-aware router cheapest on {wins}/{len(SCENARIOS)} "
+          f"scenarios")
+    return results
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 0)

@@ -123,6 +123,26 @@ class AdmissionController:
         return (tau, float(self.cost.norm_e(E)),
                 float(self.cost.norm_c(C)))
 
+    def peek(self, t: float) -> tuple[float, float, float]:
+        """Side-effect-free view of ``(tau, e_norm, c_norm)`` at ``t``.
+
+        Unlike :meth:`snapshot`, nothing is updated — not the cost
+        normaliser bounds, not an adaptive threshold's PI integral —
+        so external observers (the fleet router scoring candidate
+        replicas) can read the closed-loop state without perturbing
+        loops they don't own."""
+        E = self.meter.joules_per_request
+        C = self.congestion.value()
+        if not self.enabled:
+            tau = (float("inf") if self.rule == "le"
+                   else float("-inf"))
+        elif isinstance(self.threshold, AdaptiveThreshold):
+            tau = float(self.threshold.preview(t))
+        else:
+            tau = float(self.threshold(t))
+        return (tau, float(self.cost.norm_e(E)),
+                float(self.cost.norm_c(C)))
+
     def observe_external(self, admits) -> None:
         """Fold admissions decided outside :meth:`decide` (the in-graph
         gate's mask) back into the closed-loop state, so admission-rate

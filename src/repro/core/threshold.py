@@ -67,7 +67,17 @@ class AdaptiveThreshold:
         return self._rate
 
     def __call__(self, t: float) -> float:
+        tau = self.preview(t)
         err = self.target_rate - self._rate
         self._integral = max(-10.0, min(10.0, self._integral + err))
+        return tau
+
+    def preview(self, t: float) -> float:
+        """tau(t) WITHOUT advancing the PI integral — the single
+        source of the PI law; ``__call__`` delegates here and then
+        commits the integral.  External observers (the fleet router)
+        use this so scoring never perturbs the loop."""
+        err = self.target_rate - self._rate
         # rate too low -> loosen (raise tau); too high -> tighten
-        return self.base(t) + self.kp * err + self.ki * self._integral
+        integ = max(-10.0, min(10.0, self._integral + err))
+        return self.base(t) + self.kp * err + self.ki * integ

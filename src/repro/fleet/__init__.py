@@ -1,0 +1,57 @@
+"""``repro.fleet`` — energy-aware multi-replica serving.
+
+The layer above the four execution paths: a :class:`ReplicaPool` of
+heterogeneous replicas (each a full ``Server`` with its own admission
+controller and energy meter), an :class:`EnergyAwareRouter` that makes
+the paper's ORT-vs-Triton efficiency boundary a per-request runtime
+decision, a hysteresis :class:`Autoscaler` that drains and revives
+replicas from load and energy-per-request trends, and a scenario suite
+(diurnal / flash-crowd / multi-tenant / adversarial flood) driven by
+an event-driven fleet simulator with fleet-level carbon accounting.
+
+Quickstart::
+
+    from repro.fleet import (FleetSimulator, build_sim_fleet,
+                             EnergyAwareRouter, flash_crowd)
+
+    sc = flash_crowd(2000, qps=40.0, seed=0)
+    pool = build_sim_fleet(sc.oracle,
+                           kinds=("direct", "dynamic-batch",
+                                  "gated-in-graph"))
+    report = FleetSimulator(pool, EnergyAwareRouter()).run(sc.requests)
+    print(report.summary["joules_per_request"], report.carbon)
+
+or from the CLI: ``python -m repro.launch.serve --fleet``.
+"""
+from repro.fleet.autoscaler import Autoscaler
+from repro.fleet.pool import (FleetReport, FleetSimulator, ReplicaPool,
+                              build_sim_fleet)
+from repro.fleet.replica import (ACTIVE, REPLICA_KINDS, STOPPED,
+                                 Replica, SimBatchEngine,
+                                 SimContinuousEngine, SimDirectEngine,
+                                 SimGatedEngine, make_sim_replica)
+from repro.fleet.router import (ROUTERS, EnergyAwareRouter,
+                                LeastLoadedRouter, RoundRobinRouter,
+                                Router, StaticRouter, make_router)
+from repro.fleet.scenarios import (DEFAULT_TENANTS, SCENARIOS, Scenario,
+                                   diurnal, flash_crowd,
+                                   low_confidence_flood, make_scenario,
+                                   multi_tenant, steady)
+
+__all__ = [
+    # pool / simulator
+    "FleetReport", "FleetSimulator", "ReplicaPool", "build_sim_fleet",
+    # replicas
+    "ACTIVE", "STOPPED", "REPLICA_KINDS", "Replica",
+    "SimBatchEngine", "SimContinuousEngine", "SimDirectEngine",
+    "SimGatedEngine", "make_sim_replica",
+    # routing
+    "ROUTERS", "Router", "EnergyAwareRouter", "LeastLoadedRouter",
+    "RoundRobinRouter", "StaticRouter", "make_router",
+    # scaling
+    "Autoscaler",
+    # scenarios
+    "DEFAULT_TENANTS", "SCENARIOS", "Scenario", "diurnal",
+    "flash_crowd", "low_confidence_flood", "make_scenario",
+    "multi_tenant", "steady",
+]

@@ -1,0 +1,212 @@
+"""The replica pool and the event-driven fleet simulator.
+
+:class:`ReplicaPool` owns N heterogeneous replicas and the fleet-level
+signals the autoscaler reads (total energy including idle burn,
+requests served); :class:`FleetSimulator` drives a workload trace
+through the fleet on one virtual clock:
+
+    for each arrival (time order):
+        advance powered-on time on every non-stopped replica
+        poke all replicas (flush expired batch windows)
+        autoscaler.observe(...)          # maybe drain / revive
+        replica = router.route(request)  # the live ORT-vs-Triton call
+        replica.push(request)            # full per-replica Server
+                                         # lifecycle: triage ->
+                                         # admission -> execute
+    finish: drain every replica, close per-replica Servers
+
+Energy is node-accounted: each replica burns active power over its
+busy time and idle power over the rest of its powered-on time, which
+is exactly why the autoscaler's draining saves joules at the fleet
+level.  Totals flow into a fleet :class:`CarbonTracker`
+(region/intensity-configurable — nodes may sit in different grids).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.fleet.autoscaler import Autoscaler
+from repro.fleet.replica import (REPLICA_KINDS, STOPPED, Replica,
+                                 make_sim_replica)
+from repro.fleet.router import EnergyAwareRouter, Router
+from repro.serving.simulator import Oracle
+from repro.telemetry.carbon import CarbonTracker
+
+
+@dataclass
+class ReplicaPool:
+    replicas: list[Replica]
+
+    def __post_init__(self):
+        names = [r.name for r in self.replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"replica names must be unique: {names}")
+
+    def __iter__(self):
+        return iter(self.replicas)
+
+    def __len__(self):
+        return len(self.replicas)
+
+    def by_name(self, name: str) -> Replica:
+        for r in self.replicas:
+            if r.name == name:
+                return r
+        raise KeyError(name)
+
+    def routable(self) -> list[Replica]:
+        return [r for r in self.replicas if r.routable]
+
+    def start(self) -> "ReplicaPool":
+        for r in self.replicas:
+            r.start()
+        return self
+
+    def tick(self, dt: float) -> None:
+        """Accumulate powered-on time on every non-stopped replica."""
+        if dt <= 0:
+            return
+        for r in self.replicas:
+            if r.state != STOPPED:
+                r.active_s += dt
+
+    def drain(self, replica: Replica, now: float) -> list:
+        return replica.drain(now)
+
+    def revive(self, replica: Replica) -> None:
+        replica.revive()
+
+    # -- fleet-level signals -------------------------------------------------
+    def energy_j(self) -> float:
+        """Fleet energy as of the last tick/busy update."""
+        return sum(r.energy_j() for r in self.replicas)
+
+    def n_served(self) -> int:
+        return sum(r.server.log.n for r in self.replicas)
+
+
+def build_sim_fleet(oracle: Oracle, kinds=REPLICA_KINDS[:3], *,
+                    controller_factory=None, max_batch: int = 32,
+                    queue_window_s: float = 0.02,
+                    n_slots: int = 8) -> ReplicaPool:
+    """A heterogeneous virtual-time fleet, one replica per kind (kinds
+    may repeat: ``("direct", "direct", "dynamic-batch")`` builds two
+    direct nodes).  ``controller_factory(kind, i) -> controller`` gives
+    each replica its own closed-loop controller; default is open-loop
+    (disabled) controllers, which still feed the EnergyMeter EWMAs the
+    router needs."""
+    replicas = []
+    for i, kind in enumerate(kinds):
+        ctrl = (controller_factory(kind, i)
+                if controller_factory is not None else None)
+        replicas.append(make_sim_replica(
+            f"{kind}-{i}", kind, oracle, controller=ctrl,
+            max_batch=max_batch, queue_window_s=queue_window_s,
+            n_slots=n_slots))
+    return ReplicaPool(replicas)
+
+
+@dataclass
+class FleetReport:
+    responses: list
+    per_replica: list[dict]
+    summary: dict
+    carbon: dict
+    autoscaler_log: list = field(default_factory=list)
+
+    def __str__(self):
+        import json
+        return json.dumps({"summary": self.summary,
+                           "per_replica": self.per_replica,
+                           "carbon": self.carbon}, indent=2)
+
+
+@dataclass
+class FleetSimulator:
+    """Drives one workload trace through the pool per ``run()`` call.
+
+    ``run()`` is re-runnable — ``pool.start()`` resets per-run replica
+    state — but the fleet ``carbon`` meter is a *tracker*: it
+    accumulates every run's joules into one cumulative CO2 record,
+    exactly like :class:`CarbonTracker` windows elsewhere.
+    """
+    pool: ReplicaPool
+    router: Router = field(default_factory=EnergyAwareRouter)
+    autoscaler: Autoscaler | None = None
+    carbon: CarbonTracker = field(default_factory=CarbonTracker)
+    scale_every: int = 20          # autoscaler cadence, in arrivals
+
+    def run(self, requests) -> FleetReport:
+        requests = sorted(requests, key=lambda r: r.arrival_s)
+        self.pool.start()
+        prev = float(requests[0].arrival_s) if requests else 0.0
+        first = prev
+
+        for i, req in enumerate(requests):
+            now = float(req.arrival_s)
+            self.pool.tick(now - prev)
+            prev = now
+            for r in self.pool.replicas:
+                if r.state != STOPPED:
+                    r.poke(now)
+            if self.autoscaler is not None and i % self.scale_every == 0:
+                self.autoscaler.observe(now, self.pool)
+            replica = self.router.route(req, self.pool.routable(), now)
+            replica.push(req)
+
+        responses = []
+        for r in self.pool.replicas:
+            responses.extend(r.finish(prev))
+        responses.sort(key=lambda x: x.rid)
+
+        # the fleet span ends at the last completion ANYWHERE (a
+        # drained replica's final flush can be the latest event);
+        # powered-on time only extends on still-active replicas
+        fleet_finish = max((x.t_finish for x in responses),
+                           default=prev)
+        for r in self.pool.replicas:
+            if r.state != STOPPED:
+                tail = max((x.t_finish for x in r.server.responses),
+                           default=prev)
+                r.active_s += max(tail - prev, 0.0)
+
+        return self._report(responses, first, fleet_finish)
+
+    # -- reporting -----------------------------------------------------------
+    def _report(self, responses, first: float,
+                finish: float) -> FleetReport:
+        n = len(responses)
+        span = max(finish - first, 1e-9)
+        total_j = self.pool.energy_j()
+        self.carbon.meter.record(total_j, n_requests=max(n, 1))
+        lat = np.array([r.t_finish - r.arrival_s for r in responses]
+                       or [0.0])
+        correct = [int(r.output) == int(r.label) for r in responses
+                   if r.label is not None and np.isscalar(r.output)]
+        summary = {
+            "n": n,
+            "n_replicas": len(self.pool),
+            "router": type(self.router).__name__,
+            "span_s": round(span, 4),
+            "throughput_qps": round(n / span, 2),
+            "mean_latency_ms": round(float(lat.mean()) * 1e3, 3),
+            "p95_latency_ms": round(
+                float(np.percentile(lat, 95)) * 1e3, 3),
+            "energy_j": round(total_j, 3),
+            "joules_per_request": round(total_j / max(n, 1), 4),
+            "accuracy": (round(float(np.mean(correct)), 4)
+                         if correct else float("nan")),
+            "admission_rate": (round(float(np.mean(
+                [r.admitted for r in responses])), 4)
+                if responses else float("nan")),
+            "routed": {r.name: r.n_routed for r in self.pool},
+        }
+        return FleetReport(
+            responses=responses,
+            per_replica=[r.report() for r in self.pool],
+            summary=summary,
+            carbon=self.carbon.report(),
+            autoscaler_log=(list(self.autoscaler.log)
+                            if self.autoscaler else []))

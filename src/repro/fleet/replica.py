@@ -1,0 +1,491 @@
+"""Replicas — one serving node of the fleet.
+
+A :class:`Replica` wraps a full ``repro.serving.api.Server`` (engine +
+its OWN admission controller + telemetry) with the fleet-facing state
+the router and autoscaler read: lifecycle (``active`` / ``draining`` /
+``stopped``), routed-request count, accumulated powered-on time, and
+the per-replica marginal-energy signal (the controller's
+``EnergyMeter`` EWMA, falling back to an analytic prior before any
+traffic has been observed).
+
+The module also provides the four *virtual-time* simulation engines a
+heterogeneous fleet is built from — one per execution-path character:
+
+  - :class:`SimDirectEngine`      ORT/FastAPI-style: serial, low fixed
+                                  cost, pays full marginal compute per
+                                  request.
+  - :class:`SimBatchEngine`       Triton-style managed batching: high
+                                  fixed (orchestration) cost amortised
+                                  across the fused batch.
+  - :class:`SimGatedEngine`       in-graph admission: the controller
+                                  snapshot gates each fused batch and
+                                  only admitted requests pay marginal
+                                  compute (skips answered by the proxy).
+  - :class:`SimContinuousEngine`  slot-pool decode: concurrent slots,
+                                  small marginal cost, per-request
+                                  startup overhead.
+
+All four speak the :class:`~repro.serving.api.EnginePort` protocol plus
+one fleet extension — ``pressure(now)`` — the seconds of queued/backlog
+work, which is the congestion signal the router and autoscaler use
+(``LoadState.queue_depth`` alone misses a serial backend's backlog).
+Behaviour (predictions, proxy predictions, entropy) comes from a
+precomputed :class:`~repro.serving.simulator.Oracle`, so fleet sweeps
+over tens of thousands of requests run in milliseconds and are exactly
+reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.controller import AdmissionController
+from repro.core.energy import EnergyModel
+from repro.core.landscape import LatencyModel
+from repro.serving.api import (PATH_CONTINUOUS, PATH_DIRECT,
+                               PATH_DYNAMIC_BATCH, PATH_GATED,
+                               AdmissionMiddleware, Completion,
+                               EngineCapabilities, LoadState, Server,
+                               ServerConfig, TriageResult)
+from repro.serving.simulator import Oracle
+
+# lifecycle states (drain is synchronous in virtual time, so there is
+# no observable intermediate "draining" state)
+ACTIVE = "active"
+STOPPED = "stopped"
+
+REPLICA_KINDS = (PATH_DIRECT, PATH_DYNAMIC_BATCH, PATH_GATED,
+                 PATH_CONTINUOUS)
+
+
+# ---------------------------------------------------------------------------
+# virtual-time fleet engines
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _SimEngineBase:
+    """Shared oracle-backed triage + bookkeeping.
+
+    ``warmup`` (called by ``Server.start``) resets the virtual clock,
+    so a replica — and therefore a whole pool — can serve a fresh run.
+    """
+    oracle: Oracle
+    latency: LatencyModel
+
+    def warmup(self, ctx) -> None:
+        pass
+
+    def triage(self, req, now, ctx) -> TriageResult:
+        lat = self.oracle.proxy_latency
+        return TriageResult(
+            L=float(self.oracle.entropy[req.rid]),
+            proxy_output=int(self.oracle.proxy_pred[req.rid]),
+            cost_s=lat.step_time(1) if lat is not None else 0.0)
+
+    def step(self, now, ctx) -> list[Completion]:
+        return []
+
+
+@dataclass
+class SimDirectEngine(_SimEngineBase):
+    """Serial per-request execution (FastAPI+ORT analogue).
+
+    No queue — arrivals serialise behind ``server_free_at`` — so the
+    congestion signal is the backlog *time*, not a queue depth.
+    ``load()`` converts that backlog into an equivalent queue depth at
+    the last observed clock so the admission controller's C(x) leg
+    still sees saturation.
+    """
+    _free_at: float = field(default=0.0, init=False)
+    _now: float = field(default=0.0, init=False)
+
+    def warmup(self, ctx) -> None:
+        self._free_at = self._now = 0.0
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name="sim-direct", kind="classify",
+                                  paths=(PATH_DIRECT,))
+
+    def pressure(self, now: float) -> float:
+        return max(self._free_at - now, 0.0)
+
+    def load(self) -> LoadState:
+        step = max(self.latency.step_time(1), 1e-9)
+        return LoadState(queue_depth=int(self.pressure(self._now)
+                                         / step))
+
+    def step(self, now, ctx) -> list[Completion]:
+        self._now = max(self._now, now)
+        return []
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        self._now = max(self._now, now)
+        start = max(now, self._free_at)
+        finish = start + self.latency.step_time(1)
+        self._free_at = finish
+        return [Completion([req],
+                           [int(self.oracle.full_pred[req.rid])],
+                           PATH_DIRECT, start, finish)]
+
+    def drain(self, now, ctx) -> list[Completion]:
+        self._now = max(self._now, now)
+        return []
+
+
+@dataclass
+class _SimQueuedEngine(_SimEngineBase):
+    """Shared window/size batching machinery: requests queue until
+    ``max_batch`` or ``queue_window_s`` since the oldest arrival;
+    subclasses define what one flush does."""
+    max_batch: int = 32
+    queue_window_s: float = 0.02
+
+    _queue: list = field(default_factory=list, init=False)
+    _free_at: float = field(default=0.0, init=False)
+
+    def warmup(self, ctx) -> None:
+        self._queue.clear()
+        self._free_at = 0.0
+
+    def pressure(self, now: float) -> float:
+        backlog = max(self._free_at - now, 0.0)
+        if self._queue:
+            backlog += self.latency.step_time(len(self._queue))
+        return backlog
+
+    def load(self) -> LoadState:
+        return LoadState(queue_depth=len(self._queue),
+                         batch_fill=len(self._queue)
+                         / max(self.max_batch, 1))
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        out = self.step(now, ctx)
+        self._queue.append(req)
+        if len(self._queue) >= self.max_batch:
+            out.extend(self._flush(now, ctx))
+        return out
+
+    def step(self, now, ctx) -> list[Completion]:
+        out = []
+        while self._queue:
+            deadline = self._queue[0].arrival_s + self.queue_window_s
+            if deadline <= now:
+                out.extend(self._flush(deadline, ctx))
+            else:
+                break
+        return out
+
+    def drain(self, now, ctx) -> list[Completion]:
+        out = []
+        while self._queue:
+            out.extend(self._flush(
+                max(now, self._queue[0].arrival_s + self.queue_window_s),
+                ctx))
+        return out
+
+    def _flush(self, t: float, ctx) -> list[Completion]:
+        raise NotImplementedError
+
+
+@dataclass
+class SimBatchEngine(_SimQueuedEngine):
+    """Managed dynamic batching (Triton analogue): the fused batch pays
+    one fixed orchestration cost plus per-item marginal compute."""
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name="sim-batch", kind="classify",
+                                  paths=(PATH_DYNAMIC_BATCH,))
+
+    def _flush(self, t: float, ctx) -> list[Completion]:
+        reqs, self._queue = (self._queue[:self.max_batch],
+                             self._queue[self.max_batch:])
+        start = max(t, self._free_at)
+        finish = start + self.latency.step_time(len(reqs))
+        self._free_at = finish
+        return [Completion(
+            reqs, [int(self.oracle.full_pred[r.rid]) for r in reqs],
+            PATH_DYNAMIC_BATCH, start, finish)]
+
+
+@dataclass
+class SimGatedEngine(_SimQueuedEngine):
+    """In-graph admission (the TPU-native gated step, virtual time).
+
+    Batches like the dynamic batcher, but each flush reads the
+    controller snapshot ``(tau, e_norm, c_norm)`` through
+    ``ctx.snapshot`` and gates per request on
+    ``J = (L_n + e_norm + c_norm) / 3 <= tau`` — the same structure as
+    ``core.controller.gate_batch``.  Only admitted requests pay
+    marginal compute (skips are answered by the proxy prediction), so
+    the batch walltime — and the joules the admission middleware feeds
+    back into the EWMA — shrinks with the skip rate.
+    """
+    max_batch: int = 16
+    l_scale: float = float(np.log(2.0))     # binary-entropy normaliser
+    rule: str = "le"                        # mirror GateParams.rule
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name="sim-gated", kind="classify",
+                                  paths=(PATH_GATED,),
+                                  in_graph_admission=True)
+
+    def triage(self, req, now, ctx) -> TriageResult:
+        return TriageResult(L=None)        # the gate runs in-graph
+
+    def _flush(self, t: float, ctx) -> list[Completion]:
+        reqs, self._queue = (self._queue[:self.max_batch],
+                             self._queue[self.max_batch:])
+        tau, e_norm, c_norm = ctx.snapshot(t)
+        ent = np.array([float(self.oracle.entropy[r.rid]) for r in reqs])
+        l_n = np.clip(ent / max(self.l_scale, 1e-9), 0.0, 1.0)
+        J = (l_n + e_norm + c_norm) / 3.0
+        admit = (J <= tau) if self.rule == "le" else (J >= tau)
+        n_admit = int(admit.sum())
+        outputs = [int(self.oracle.full_pred[r.rid]) if a
+                   else int(self.oracle.proxy_pred[r.rid])
+                   for r, a in zip(reqs, admit)]
+        start = max(t, self._free_at)
+        # fixed cost covers the in-graph proxy pass over the whole
+        # batch; only the admitted bucket pays full-model compute
+        finish = start + (self.latency.t_fixed_s
+                          + n_admit * self.latency.t_tok_s)
+        self._free_at = finish
+        return [Completion(
+            requests=reqs, outputs=outputs, path=PATH_GATED,
+            t_start=start, t_finish=finish,
+            admit_mask=[bool(a) for a in admit],
+            extras={"tau": float(tau), "e_norm": float(e_norm),
+                    "c_norm": float(c_norm)},
+            per_request=[{"entropy": float(e)} for e in ent])]
+
+
+@dataclass
+class SimContinuousEngine(_SimEngineBase):
+    """Slot-pool decode (vLLM-style continuous batching, virtual time).
+
+    ``n_slots`` requests run concurrently; each pays a startup fixed
+    cost plus ``service_tokens`` marginal steps.  Busy time sums over
+    slots — the modelled analogue of a decode pool keeping the chip
+    hot — so its energy character is 'cheap marginal, always-warm'.
+    """
+    n_slots: int = 8
+    service_tokens: int = 16
+
+    _slot_free: list = field(default_factory=list, init=False)
+    _now: float = field(default=0.0, init=False)
+
+    def __post_init__(self):
+        self._slot_free = [0.0] * self.n_slots
+
+    def warmup(self, ctx) -> None:
+        self._slot_free = [0.0] * self.n_slots
+        self._now = 0.0
+
+    def capabilities(self) -> EngineCapabilities:
+        return EngineCapabilities(name="sim-continuous", kind="classify",
+                                  paths=(PATH_CONTINUOUS,))
+
+    def pressure(self, now: float) -> float:
+        return max(min(self._slot_free) - now, 0.0)
+
+    def load(self) -> LoadState:
+        # occupancy at the last observed clock: slots still serving
+        busy = sum(f > self._now for f in self._slot_free)
+        return LoadState(queue_depth=busy,
+                         batch_fill=busy / max(self.n_slots, 1))
+
+    def step(self, now, ctx) -> list[Completion]:
+        self._now = max(self._now, now)
+        return []
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        self._now = max(self._now, now)
+        i = int(np.argmin(self._slot_free))
+        start = max(now, self._slot_free[i])
+        finish = start + (self.latency.t_fixed_s
+                          + self.service_tokens * self.latency.t_tok_s)
+        self._slot_free[i] = finish
+        return [Completion([req],
+                           [int(self.oracle.full_pred[req.rid])],
+                           PATH_CONTINUOUS, start, finish,
+                           extras={"slot": i})]
+
+    def drain(self, now, ctx) -> list[Completion]:
+        self._now = max(self._now, now)
+        return []
+
+
+# ---------------------------------------------------------------------------
+# the replica
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Replica:
+    """One fleet serving node: a full ``Server`` (engine + controller
+    middleware) plus the lifecycle / energy state the router and
+    autoscaler operate on."""
+    name: str
+    kind: str                              # one of REPLICA_KINDS
+    server: Server
+    controller: AdmissionController | None = None
+    utility: float = 1.0                   # expected-quality prior
+    energy_prior_j: float = 1.0            # joules/request before data
+    energy_model: EnergyModel = field(default_factory=EnergyModel)
+
+    state: str = field(default=ACTIVE, init=False)
+    n_routed: int = field(default=0, init=False)
+    active_s: float = field(default=0.0, init=False)   # powered-on time
+
+    # -- serving ------------------------------------------------------------
+    def start(self) -> "Replica":
+        """Open a fresh serving run: resets the wrapped server AND the
+        per-run fleet state (powered-on time, routed count, lifecycle),
+        so a pool can be re-run."""
+        self.server.start()
+        self.state = ACTIVE
+        self.n_routed = 0
+        self.active_s = 0.0
+        return self
+
+    def push(self, req) -> list:
+        self.n_routed += 1
+        return self.server.push(req)
+
+    def poke(self, now: float) -> list:
+        return self.server.poke(now)
+
+    def finish(self, now: float) -> list:
+        return self.server.finish(now)
+
+    # -- lifecycle (autoscaler) ---------------------------------------------
+    def drain(self, now: float) -> list:
+        """Flush queued work and power down (stops idle burn; the
+        request-path ``EnginePort.drain`` does the flushing).  The
+        node stays powered through the flush, so powered-on time
+        extends to the last drained completion — otherwise the flush's
+        busy seconds would eat pre-drain idle time in energy_j()."""
+        out = self.server.drain_now(now)
+        tail = max((r.t_finish for r in out), default=now)
+        self.active_s += max(tail - now, 0.0)
+        self.state = STOPPED
+        return out
+
+    def revive(self) -> None:
+        self.state = ACTIVE
+
+    @property
+    def routable(self) -> bool:
+        return self.state == ACTIVE
+
+    # -- signals ------------------------------------------------------------
+    def load(self) -> LoadState:
+        return self.server.engine.load()
+
+    def pressure(self, now: float) -> float:
+        """Seconds of backlog/queued work at ``now``."""
+        eng = self.server.engine
+        if hasattr(eng, "pressure"):
+            return float(eng.pressure(now))
+        return 0.01 * eng.load().queue_depth
+
+    def joules_per_request(self) -> float:
+        """Marginal-energy signal: the controller's EnergyMeter EWMA,
+        or the analytic prior before any traffic has been metered."""
+        if (self.controller is not None
+                and self.controller.meter.joules_per_request > 0):
+            return self.controller.meter.joules_per_request
+        return self.energy_prior_j
+
+    @property
+    def busy_s(self) -> float:
+        ctx = getattr(self.server, "ctx", None)
+        return ctx.busy_s if ctx is not None else self.server.busy_s
+
+    def energy_j(self) -> float:
+        """Modelled node energy: active power over busy time + idle
+        power over the remaining powered-on time."""
+        busy = self.busy_s
+        idle = max(self.active_s - busy, 0.0)
+        return (self.energy_model.p_active * busy
+                + self.energy_model.p_idle * idle)
+
+    def report(self) -> dict:
+        n = self.server.log.n
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "state": self.state,
+            "n_routed": self.n_routed,
+            "n_served": n,
+            "busy_s": round(self.busy_s, 4),
+            "active_s": round(self.active_s, 4),
+            "energy_j": round(self.energy_j(), 3),
+            "joules_per_request": round(
+                self.energy_j() / max(n, 1), 4),
+            "ewma_j_per_req": round(self.joules_per_request(), 4),
+            "admission_rate": (round(
+                self.controller.admission_rate, 4)
+                if self.controller is not None else 1.0),
+        }
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+_DEFAULT_LATENCY = {
+    PATH_DIRECT: LatencyModel(t_fixed_s=0.002, t_tok_s=0.004),
+    PATH_DYNAMIC_BATCH: LatencyModel(t_fixed_s=0.020, t_tok_s=0.0015),
+    PATH_GATED: LatencyModel(t_fixed_s=0.016, t_tok_s=0.0020),
+    PATH_CONTINUOUS: LatencyModel(t_fixed_s=0.004, t_tok_s=0.0004),
+}
+
+
+def make_sim_replica(name: str, kind: str, oracle: Oracle, *,
+                     controller: AdmissionController | None = None,
+                     latency: LatencyModel | None = None,
+                     max_batch: int = 32, queue_window_s: float = 0.02,
+                     n_slots: int = 8,
+                     energy_model: EnergyModel | None = None) -> Replica:
+    """Build a virtual-time replica of the given execution-path kind.
+
+    ``controller=None`` serves open-loop but still plugs in a disabled
+    ``AdmissionController`` so the per-replica EnergyMeter EWMA — the
+    router's marginal-energy signal — is always fed.
+    """
+    if kind not in REPLICA_KINDS:
+        raise ValueError(f"unknown replica kind {kind!r}; expected one "
+                         f"of {REPLICA_KINDS}")
+    em = energy_model or EnergyModel()
+    lat = latency or _DEFAULT_LATENCY[kind]
+    if controller is None:
+        controller = AdmissionController(enabled=False, log_history=False)
+
+    if kind == PATH_DIRECT:
+        engine = SimDirectEngine(oracle, lat)
+        prior = em.p_active * lat.step_time(1)
+    elif kind == PATH_DYNAMIC_BATCH:
+        engine = SimBatchEngine(oracle, lat, max_batch=max_batch,
+                                queue_window_s=queue_window_s)
+        # prior at half fill: optimistic enough to be reachable, honest
+        # about the orchestration overhead at low load
+        half = max(max_batch // 2, 1)
+        prior = em.p_active * lat.step_time(half) / half
+    elif kind == PATH_GATED:
+        engine = SimGatedEngine(oracle, lat,
+                                max_batch=max(max_batch // 2, 1),
+                                queue_window_s=queue_window_s,
+                                rule=controller.rule)
+        half = max(max_batch // 4, 1)
+        prior = em.p_active * lat.step_time(half) / half
+    else:
+        engine = SimContinuousEngine(oracle, lat, n_slots=n_slots)
+        prior = em.p_active * (lat.t_fixed_s + 16 * lat.t_tok_s)
+
+    server = Server(engine,
+                    ServerConfig(path=kind, energy_model=em),
+                    middleware=[AdmissionMiddleware(controller)])
+    return Replica(name=name, kind=kind, server=server,
+                   controller=controller, energy_prior_j=prior,
+                   energy_model=em)

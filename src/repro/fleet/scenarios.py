@@ -1,0 +1,224 @@
+"""Fleet scenario suite — traffic shapes that stress the routing and
+scaling decisions, built on ``serving.workload``'s exact thinning
+sampler (``nonhomogeneous_arrivals``).
+
+Each builder returns a :class:`Scenario`: the request trace (with
+labels, per-request entropy hints, and tenant metadata), plus the
+precomputed :class:`~repro.serving.simulator.Oracle` the virtual-time
+replicas execute against.  Deterministic per seed.
+
+  - ``flash_crowd``          steady base rate with one sudden sustained
+                             spike — the classic scale-up test and the
+                             headline ``--fleet`` demo.
+  - ``diurnal``              sinusoidal day/night load; deep troughs
+                             are where the autoscaler's drain pays.
+  - ``multi_tenant``         a Poisson mix of tenants with different
+                             SLOs (``metadata['slo_s']``) — the
+                             energy-aware router parks latency-tolerant
+                             tenants in deeper, cheaper basins.
+  - ``low_confidence_flood`` adversarial: a window of junk traffic
+                             whose proxy entropy is pinned high and
+                             whose proxy answers are coin flips —
+                             admission controllers must spend energy or
+                             accuracy, never both saved.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.landscape import LatencyModel
+from repro.serving.api import InferRequest
+from repro.serving.simulator import Oracle
+from repro.serving.workload import nonhomogeneous_arrivals
+
+
+@dataclass
+class Scenario:
+    name: str
+    requests: list
+    oracle: Oracle
+    description: str = ""
+    slo_s: float = 0.25
+
+    @property
+    def n(self) -> int:
+        return len(self.requests)
+
+    @property
+    def span_s(self) -> float:
+        if not self.requests:
+            return 0.0
+        return (self.requests[-1].arrival_s
+                - self.requests[0].arrival_s)
+
+
+def _oracle(n: int, rng, *, proxy_acc: float = 0.85,
+            entropy=None) -> Oracle:
+    labels = rng.integers(0, 2, n)
+    full = labels.copy()
+    flip = rng.random(n) < (1 - proxy_acc)
+    proxy = np.where(flip, 1 - labels, labels)
+    ent = (rng.uniform(0.0, 0.7, n) if entropy is None
+           else np.asarray(entropy, float))
+    return Oracle(full_pred=full, proxy_pred=proxy, entropy=ent,
+                  labels=labels,
+                  proxy_latency=LatencyModel(0.0002, 0.0))
+
+
+def _requests(arrivals, oracle: Oracle, *, metadata=None):
+    out = []
+    for i, a in enumerate(arrivals):
+        out.append(InferRequest(
+            rid=i, arrival_s=a.arrival_s,
+            label=int(oracle.labels[i]),
+            entropy_hint=float(oracle.entropy[i]),
+            metadata=dict(metadata[i]) if metadata is not None else {}))
+    return out
+
+
+def steady(n: int = 2000, *, qps: float = 80.0,
+           seed: int = 0) -> Scenario:
+    """Constant-rate Poisson traffic — the control scenario and the
+    load axis the QPS boundary sweep (``benchmarks/fleet_boundary.py``)
+    walks."""
+    rng = np.random.default_rng(seed + 5)   # decouple from arrival draws
+    arrivals = nonhomogeneous_arrivals(n, lambda t: qps, qps, seed=seed)
+    oracle = _oracle(n, rng)
+    return Scenario(
+        name="steady", requests=_requests(arrivals, oracle),
+        oracle=oracle, description=f"{qps} qps Poisson")
+
+
+def flash_crowd(n: int = 2000, *, qps: float = 40.0,
+                flash_x: float = 10.0, flash_at_s: float = 10.0,
+                flash_len_s: float = 5.0, seed: int = 0) -> Scenario:
+    """Base rate ``qps`` with a ``flash_x``-times spike of
+    ``flash_len_s`` seconds starting at ``flash_at_s``."""
+    flash_qps = qps * flash_x
+
+    def rate(t: float) -> float:
+        return (flash_qps if flash_at_s <= t < flash_at_s + flash_len_s
+                else qps)
+
+    rng = np.random.default_rng(seed + 1)
+    arrivals = nonhomogeneous_arrivals(n, rate, flash_qps, seed=seed)
+    oracle = _oracle(n, rng)
+    return Scenario(
+        name="flash-crowd", requests=_requests(arrivals, oracle),
+        oracle=oracle,
+        description=(f"{qps} qps base, x{flash_x} flash at "
+                     f"t={flash_at_s}s for {flash_len_s}s"))
+
+
+def diurnal(n: int = 2000, *, qps: float = 20.0, peak_x: float = 8.0,
+            period_s: float = 40.0, seed: int = 0) -> Scenario:
+    """Sinusoidal day/night cycle between ``qps`` and ``qps*peak_x``."""
+    peak = qps * peak_x
+
+    def rate(t: float) -> float:
+        phase = (1 - math.cos(2 * math.pi * t / period_s)) / 2
+        return qps + (peak - qps) * phase
+
+    rng = np.random.default_rng(seed + 2)
+    arrivals = nonhomogeneous_arrivals(n, rate, peak, seed=seed)
+    oracle = _oracle(n, rng)
+    return Scenario(
+        name="diurnal", requests=_requests(arrivals, oracle),
+        oracle=oracle,
+        description=(f"{qps}..{peak} qps sinusoid, "
+                     f"period {period_s}s"))
+
+
+DEFAULT_TENANTS = (
+    # (name, traffic share, SLO seconds)
+    ("interactive", 0.3, 0.10),
+    ("standard", 0.5, 0.30),
+    ("batch", 0.2, 2.00),
+)
+
+
+def multi_tenant(n: int = 2000, *, qps: float = 80.0,
+                 tenants=DEFAULT_TENANTS, seed: int = 0) -> Scenario:
+    """A steady Poisson mix of tenants with different latency SLOs;
+    each request carries ``metadata={'tenant', 'slo_s'}``."""
+    shares = np.array([t[1] for t in tenants], float)
+    if not math.isclose(float(shares.sum()), 1.0, rel_tol=1e-6):
+        raise ValueError(f"tenant shares must sum to 1, got "
+                         f"{shares.sum():.4f}")
+    rng = np.random.default_rng(seed + 3)
+    arrivals = nonhomogeneous_arrivals(n, lambda t: qps, qps, seed=seed)
+    which = rng.choice(len(tenants), size=n, p=shares)
+    meta = [{"tenant": tenants[w][0], "slo_s": tenants[w][2]}
+            for w in which]
+    oracle = _oracle(n, rng)
+    return Scenario(
+        name="multi-tenant",
+        requests=_requests(arrivals, oracle, metadata=meta),
+        oracle=oracle,
+        description=(f"{qps} qps, tenants "
+                     + "/".join(t[0] for t in tenants)))
+
+
+def low_confidence_flood(n: int = 2000, *, qps: float = 80.0,
+                         flood_at_s: float = 8.0,
+                         flood_len_s: float = 6.0, flood_x: float = 4.0,
+                         seed: int = 0) -> Scenario:
+    """Adversarial junk-traffic window: arrival rate jumps ``flood_x``
+    times AND the flood's requests carry maximal proxy entropy with
+    coin-flip proxy answers.  An admission policy that skips on high
+    L(x) answers the flood from a 50%-accurate proxy; one that admits
+    it burns full-model energy on junk — the scenario makes that
+    trade-off visible instead of hiding it in an average."""
+    flood_qps = qps * flood_x
+
+    def rate(t: float) -> float:
+        return (flood_qps if flood_at_s <= t < flood_at_s + flood_len_s
+                else qps)
+
+    rng = np.random.default_rng(seed + 4)
+    arrivals = nonhomogeneous_arrivals(n, rate, flood_qps, seed=seed)
+    in_flood = np.array(
+        [flood_at_s <= a.arrival_s < flood_at_s + flood_len_s
+         for a in arrivals])
+    ln2 = float(np.log(2.0))
+    entropy = np.where(in_flood,
+                       rng.uniform(0.9 * ln2, ln2, n),
+                       rng.uniform(0.0, 0.5, n))
+    labels = rng.integers(0, 2, n)
+    full = labels.copy()
+    # normal traffic: decent proxy; flood: coin-flip proxy
+    flip = np.where(in_flood, rng.random(n) < 0.5,
+                    rng.random(n) < 0.15)
+    proxy = np.where(flip, 1 - labels, labels)
+    oracle = Oracle(full_pred=full, proxy_pred=proxy, entropy=entropy,
+                    labels=labels,
+                    proxy_latency=LatencyModel(0.0002, 0.0))
+    meta = [{"flood": bool(f)} for f in in_flood]
+    return Scenario(
+        name="low-confidence-flood",
+        requests=_requests(arrivals, oracle, metadata=meta),
+        oracle=oracle,
+        description=(f"{qps} qps, x{flood_x} high-entropy flood at "
+                     f"t={flood_at_s}s for {flood_len_s}s"))
+
+
+SCENARIOS = {
+    "steady": steady,
+    "flash-crowd": flash_crowd,
+    "diurnal": diurnal,
+    "multi-tenant": multi_tenant,
+    "low-confidence-flood": low_confidence_flood,
+}
+
+
+def make_scenario(name: str, n: int = 2000, *, qps: float | None = None,
+                  seed: int = 0, **kw) -> Scenario:
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; known: "
+                         f"{sorted(SCENARIOS)}")
+    if qps is not None:
+        kw["qps"] = qps
+    return SCENARIOS[name](n, seed=seed, **kw)

@@ -13,6 +13,17 @@ All four paths go through one ``Server.serve(requests)`` call:
         --requests 512                  # in-graph admission, live model
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
         --mode generate --requests 4    # continuous-decode (smoke cfg)
+
+``--fleet`` switches to the multi-replica layer (``repro.fleet``): a
+heterogeneous replica pool, a routing policy, an optional autoscaler,
+and a traffic scenario — the ORT-vs-Triton boundary as a runtime
+decision:
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet
+    PYTHONPATH=src python -m repro.launch.serve --fleet \
+        --scenario diurnal --policy round-robin --no-autoscale
+    PYTHONPATH=src python -m repro.launch.serve --fleet \
+        --fleet-kinds direct,direct,dynamic-batch,continuous-decode
 """
 from __future__ import annotations
 
@@ -144,6 +155,62 @@ def serve_classifier(args) -> dict:
     return summary
 
 
+def serve_fleet(args) -> dict:
+    """Run a traffic scenario over a heterogeneous replica fleet."""
+    from repro.fleet import (Autoscaler, FleetSimulator,
+                             REPLICA_KINDS, build_sim_fleet,
+                             make_router, make_scenario)
+
+    kinds = tuple(k.strip() for k in args.fleet_kinds.split(","))
+    for k in kinds:
+        if k not in REPLICA_KINDS:
+            raise SystemExit(f"unknown replica kind {k!r}; choose from "
+                             f"{REPLICA_KINDS}")
+
+    scenario = make_scenario(args.scenario, args.requests,
+                             qps=args.qps, seed=args.seed)
+
+    def controllers(kind, i):
+        # each replica gets its OWN closed-loop controller
+        return make_controller(args.controller, weights=args.weights,
+                               target_rate=args.target_rate)
+
+    pool = build_sim_fleet(scenario.oracle, kinds=kinds,
+                           controller_factory=controllers,
+                           max_batch=args.max_batch,
+                           queue_window_s=args.window,
+                           n_slots=args.slots)
+    carbon = CarbonTracker(region=args.region)
+    sim = FleetSimulator(
+        pool, make_router(args.policy),
+        autoscaler=Autoscaler() if args.autoscale else None,
+        carbon=carbon)
+    report = sim.run(scenario.requests)
+
+    tracker = Tracker(root=args.runs)
+    run = tracker.start_run(f"fleet-{scenario.name}-{args.policy}")
+    run.log_params(**{k: str(v) for k, v in vars(args).items()})
+    run.log_metrics(0, **{k: v for k, v in report.summary.items()
+                          if isinstance(v, (int, float))})
+    run.log_artifact("fleet_summary.json", report.summary)
+    run.log_artifact("fleet_replicas.json", report.per_replica)
+    run.log_artifact("carbon.json", report.carbon)
+    if report.autoscaler_log:
+        run.log_artifact("autoscaler.json", report.autoscaler_log)
+    run.finish()
+
+    out = {"scenario": scenario.name,
+           "description": scenario.description,
+           "policy": args.policy,
+           "autoscale": bool(args.autoscale),
+           **report.summary,
+           "per_replica": report.per_replica,
+           "autoscaler_actions": len(report.autoscaler_log),
+           "carbon": report.carbon}
+    print(json.dumps(out, indent=2, default=str))
+    return out
+
+
 def serve_generate(args) -> dict:
     cfg = get_smoke_config(args.arch)
     params = tfm.init_lm(cfg, jax.random.PRNGKey(args.seed))
@@ -184,7 +251,10 @@ def main():
     ap.add_argument("--requests", type=int, default=2000)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
-    ap.add_argument("--qps", type=float, default=150.0)
+    ap.add_argument("--qps", type=float, default=None,
+                    help="arrival rate (default: 150 single-server, "
+                         "40 fleet — small sim fleets saturate at the "
+                         "single-server default)")
     ap.add_argument("--traffic", choices=["poisson", "bursty"],
                     default="poisson")
     ap.add_argument("--controller",
@@ -202,8 +272,37 @@ def main():
     ap.add_argument("--region", default="world_avg")
     ap.add_argument("--runs", default="runs")
     ap.add_argument("--seed", type=int, default=0)
+    # fleet mode
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve through the multi-replica fleet layer")
+    ap.add_argument("--scenario", default="flash-crowd",
+                    choices=["steady", "flash-crowd", "diurnal",
+                             "multi-tenant", "low-confidence-flood"])
+    ap.add_argument("--policy", default="energy-aware",
+                    choices=["energy-aware", "round-robin",
+                             "least-loaded", "static"])
+    ap.add_argument("--fleet-kinds",
+                    default="direct,dynamic-batch,gated-in-graph",
+                    help="comma-separated replica kinds (>=1)")
+    ap.add_argument("--no-autoscale", dest="autoscale",
+                    action="store_false", default=True)
     args = ap.parse_args()
+    if args.qps is None:
+        args.qps = 40.0 if args.fleet else 150.0
 
+    if args.fleet:
+        # refuse single-server flags that fleet mode would silently
+        # ignore (misleading experiment configs otherwise)
+        ignored = [f"--{k} {getattr(args, k)}"
+                   for k in ("mode", "path", "traffic")
+                   if getattr(args, k) != ap.get_default(k)]
+        if ignored:
+            raise SystemExit(
+                f"--fleet does not use {', '.join(ignored)}; fleet "
+                f"traffic comes from --scenario and replicas from "
+                f"--fleet-kinds")
+        serve_fleet(args)
+        return
     if args.mode == "generate":
         serve_generate(args)
         return

@@ -38,7 +38,9 @@ from repro.serving.gated import (GateParams, make_gated_classify_step,
 from repro.serving.simulator import (ClosedLoopSimulator, Oracle,
                                      ServedRecord, SimMetrics)
 from repro.serving.workload import (Request, bursty_arrivals,
-                                    closed_loop_arrivals, poisson_arrivals)
+                                    closed_loop_arrivals,
+                                    nonhomogeneous_arrivals,
+                                    poisson_arrivals)
 
 __all__ = [
     # unified API
@@ -58,5 +60,5 @@ __all__ = [
     "GateParams", "make_gated_classify_step", "serve_gated",
     "ClosedLoopSimulator", "Oracle", "ServedRecord", "SimMetrics",
     "Request", "bursty_arrivals", "closed_loop_arrivals",
-    "poisson_arrivals",
+    "nonhomogeneous_arrivals", "poisson_arrivals",
 ]

@@ -329,6 +329,13 @@ class Server:
     :class:`EnginePort`; afterwards ``summary()`` reports the shared
     latency/throughput/energy/admission metrics and ``responses`` holds
     the per-request records.
+
+    The lifecycle is also exposed incrementally — ``start()`` /
+    ``push(req)`` / ``poke(now)`` / ``finish(now)`` — so an external
+    driver (the fleet simulator in ``repro.fleet``) can interleave many
+    servers on one virtual clock, routing each request to a replica at
+    arrival time.  ``serve`` is exactly start + push-per-request +
+    finish.
     """
     engine: EnginePort
     config: ServerConfig = field(default_factory=ServerConfig)
@@ -343,13 +350,33 @@ class Server:
     def __post_init__(self):
         self.log = RequestLog(energy_model=self.config.energy_model,
                               n_chips=self.config.n_chips)
+        self._started = False
+        self._closed = False
+
+    def _ensure_open(self) -> None:
+        """Auto-start a NEVER-started server (push-first convenience),
+        but refuse to silently wipe a finished session's telemetry."""
+        if self._started:
+            return
+        if self._closed:
+            raise RuntimeError(
+                "session already finished — call start() to begin a "
+                "new run (this would silently wipe the previous "
+                "session's responses)")
+        self.start()
 
     # -- lifecycle ----------------------------------------------------------
     def serve(self, requests: Iterable[Request]) -> list[InferResponse]:
-        requests = list(requests)
+        self.start()
+        for req in requests:
+            self.push(req)
+        return self.finish()
+
+    def start(self) -> "Server":
+        """Open an incremental serving session (resets all state)."""
         self.log = RequestLog(energy_model=self.config.energy_model,
                               n_chips=self.config.n_chips)
-        caps = self.engine.capabilities()
+        self._caps = self.engine.capabilities()
         ctx = ServerContext(config=self.config, engine=self.engine,
                             energy_model=self.config.energy_model,
                             n_chips=self.config.n_chips)
@@ -360,66 +387,121 @@ class Server:
         if ctx.snapshot is None:
             ctx.snapshot = _default_snapshot
         self.ctx = ctx
+        self._out: list[InferResponse] = []
+        self._decisions: dict[int, Decision] = {}
+        self._first_arrival: float | None = None
+        self._last_arrival: float = 0.0
+        self._started = True
+        self._closed = False
         self.engine.warmup(ctx)
+        return self
 
-        out: list[InferResponse] = []
-        decisions: dict[int, Decision] = {}
+    def push(self, req) -> list[InferResponse]:
+        """Run one request through triage/admission/routing; returns the
+        responses COMPLETED by this arrival (possibly none — e.g. the
+        batcher absorbing the request, or several flushed batches)."""
+        self._ensure_open()
+        ctx, caps = self.ctx, self._caps
+        n0 = len(self._out)
+        now = float(req.arrival_s)
+        if self._first_arrival is None:
+            self._first_arrival = now
+        self._last_arrival = max(self._last_arrival, now)
+        ctx.now = now
+        # flush work whose deadline passed before this arrival
+        self._absorb(self.engine.step(now, ctx), ctx, self._decisions,
+                     self._out)
 
-        for req in requests:
-            now = float(req.arrival_s)
-            ctx.now = now
-            # flush work whose deadline passed before this arrival
-            self._absorb(self.engine.step(now, ctx), ctx, decisions, out)
+        for mw in self.middleware:
+            mw.on_enqueue(req, ctx)
 
+        # proxy triage (cheap uncertainty signal; busy-time cost)
+        tri = self.engine.triage(req, now, ctx)
+        ctx.busy_s += tri.cost_s
+
+        # admission: last non-None middleware decision wins;
+        # in-graph engines gate on device instead
+        decision = None
+        if not caps.in_graph_admission:
             for mw in self.middleware:
-                mw.on_enqueue(req, ctx)
+                d = mw.on_triage(req, tri, ctx)
+                if d is not None:
+                    decision = d
+        if decision is not None:
+            self._decisions[req.rid] = decision
+            for mw in self.middleware:
+                mw.on_decision(req, decision, ctx)
 
-            # proxy triage (cheap uncertainty signal; busy-time cost)
-            tri = self.engine.triage(req, now, ctx)
-            ctx.busy_s += tri.cost_s
+        if decision is not None and not decision.admit:
+            # "skip or respond from cache": the proxy answers
+            resp = InferResponse(
+                rid=req.rid, output=tri.proxy_output, admitted=False,
+                path=PATH_SKIP, arrival_s=now, t_start=now,
+                t_finish=now + tri.cost_s, decision=decision,
+                label=getattr(req, "label", None))
+            ctx.lat_window.append(tri.cost_s)
+            self._out.append(resp)
+            self.log.add(resp)
+            for mw in self.middleware:
+                mw.on_completion(None, [resp], ctx)
+            return self._out[n0:]
 
-            # admission: last non-None middleware decision wins;
-            # in-graph engines gate on device instead
-            decision = None
-            if not caps.in_graph_admission:
-                for mw in self.middleware:
-                    d = mw.on_triage(req, tri, ctx)
-                    if d is not None:
-                        decision = d
-            if decision is not None:
-                decisions[req.rid] = decision
-                for mw in self.middleware:
-                    mw.on_decision(req, decision, ctx)
+        path = self._route(caps, ctx)
+        self._absorb(self.engine.submit(req, path, now, ctx),
+                     ctx, self._decisions, self._out)
+        return self._out[n0:]
 
-            if decision is not None and not decision.admit:
-                # "skip or respond from cache": the proxy answers
-                resp = InferResponse(
-                    rid=req.rid, output=tri.proxy_output, admitted=False,
-                    path=PATH_SKIP, arrival_s=now, t_start=now,
-                    t_finish=now + tri.cost_s, decision=decision,
-                    label=getattr(req, "label", None))
-                ctx.lat_window.append(tri.cost_s)
-                out.append(resp)
-                self.log.add(resp)
-                for mw in self.middleware:
-                    mw.on_completion(None, [resp], ctx)
-                continue
+    def poke(self, now: float) -> list[InferResponse]:
+        """Advance the engine's clock without a new arrival (flush
+        expired queue windows).  The fleet driver calls this on every
+        replica at each fleet-level event so idle replicas still honour
+        their batching deadlines."""
+        self._ensure_open()
+        ctx = self.ctx
+        n0 = len(self._out)
+        ctx.now = max(ctx.now, float(now))
+        self._absorb(self.engine.step(ctx.now, ctx), ctx,
+                     self._decisions, self._out)
+        return self._out[n0:]
 
-            path = self._route(caps, ctx)
-            self._absorb(self.engine.submit(req, path, now, ctx),
-                         ctx, decisions, out)
+    def drain_now(self, now: float | None = None) -> list[InferResponse]:
+        """Flush ALL queued work at ``now`` without closing the session
+        (the fleet autoscaler drains a replica mid-run; it may be
+        revived and receive traffic again afterwards)."""
+        self._ensure_open()
+        ctx = self.ctx
+        n0 = len(self._out)
+        t = self._last_arrival if now is None else float(now)
+        ctx.now = max(ctx.now, t)
+        self._absorb(self.engine.drain(ctx.now, ctx), ctx,
+                     self._decisions, self._out)
+        return self._out[n0:]
 
-        last = float(requests[-1].arrival_s) if requests else 0.0
-        ctx.now = last
-        self._absorb(self.engine.drain(last, ctx), ctx, decisions, out)
+    def finish(self, now: float | None = None) -> list[InferResponse]:
+        """Drain, finalise span/busy accounting, fire ``on_finish``."""
+        if not self._started:
+            # restarting here would silently wipe the previous
+            # session's responses/summary
+            raise RuntimeError(
+                "finish() without an open session — call start()/push() "
+                "first")
+        ctx = self.ctx
+        last = self._last_arrival if now is None else float(now)
+        ctx.now = max(ctx.now, last)
+        self._absorb(self.engine.drain(ctx.now, ctx), ctx,
+                     self._decisions, self._out)
 
-        first = float(requests[0].arrival_s) if requests else 0.0
+        out = self._out
+        first = (self._first_arrival if self._first_arrival is not None
+                 else 0.0)
         finish = max((r.t_finish for r in out), default=first)
         self.span_s = max(finish - first, 1e-9)
         self.busy_s = ctx.busy_s
         self.log.busy_s = ctx.busy_s
         self.log.span_s = self.span_s
         self.responses = out
+        self._started = False
+        self._closed = True
         for mw in self.middleware:
             mw.on_finish(self, ctx)
         return out

@@ -24,13 +24,31 @@ GRID_INTENSITY_KG_PER_KWH = {
 
 @dataclass
 class CarbonTracker:
+    """Per-run (or per-fleet-node) energy -> CO2 accounting.
+
+    ``region`` picks a grid intensity from
+    :data:`GRID_INTENSITY_KG_PER_KWH`; pass an explicit ``intensity``
+    (kgCO2/kWh) instead when the node sits in a grid the table doesn't
+    know — fleet replicas may span regions — in which case ``region``
+    is treated as a free-form label.
+    """
     region: str = "world_avg"
+    intensity: float | None = None       # kgCO2/kWh override
     meter: EnergyMeter = field(default_factory=EnergyMeter)
     _start: float | None = field(default=None, init=False)
 
-    @property
-    def intensity(self) -> float:
-        return GRID_INTENSITY_KG_PER_KWH[self.region]
+    def __post_init__(self):
+        if self.intensity is None:
+            if self.region not in GRID_INTENSITY_KG_PER_KWH:
+                known = ", ".join(sorted(GRID_INTENSITY_KG_PER_KWH))
+                raise ValueError(
+                    f"unknown grid region {self.region!r}; known regions: "
+                    f"{known} — or pass an explicit "
+                    f"intensity=<kgCO2/kWh> override")
+            self.intensity = GRID_INTENSITY_KG_PER_KWH[self.region]
+        elif self.intensity < 0:
+            raise ValueError(
+                f"intensity must be >= 0 kgCO2/kWh, got {self.intensity}")
 
     def start(self) -> None:
         self._start = time.time()

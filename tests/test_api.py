@@ -248,6 +248,48 @@ def test_middleware_ordering_last_decision_wins():
     assert telem.log.n == n
 
 
+def test_incremental_lifecycle_matches_serve():
+    """start/push/finish (the fleet driver's surface) must reproduce
+    serve() exactly — serve() IS that sequence."""
+    n = 150
+
+    def build():
+        rng = np.random.default_rng(5)
+        labels = rng.integers(0, 2, n)
+        oracle = Oracle(full_pred=labels.copy(), proxy_pred=labels.copy(),
+                        entropy=rng.uniform(0, 0.7, n), labels=labels,
+                        proxy_latency=LatencyModel(0.0002, 0.0))
+        ctrl = AdmissionController(
+            threshold=DecayingThreshold(1.0, 0.45, 0.3))
+        return Server(
+            OracleEngine(oracle, DirectPath(LatencyModel(0.002, 0.004)),
+                         DynamicBatcher(LatencyModel(0.02, 0.0015))),
+            ServerConfig(path="auto"),
+            middleware=[AdmissionMiddleware(ctrl)])
+
+    labels = np.random.default_rng(5).integers(0, 2, n)
+    reqs = poisson_arrivals(n, 150.0, seed=9, labels=labels)
+
+    batch_server = build()
+    batch_server.serve(reqs)
+
+    inc_server = build().start()
+    pushed = []
+    for req in reqs:
+        pushed.extend(inc_server.push(req))
+    final = inc_server.finish()          # full list, like serve()
+
+    assert batch_server.summary() == inc_server.summary()
+    assert [r.rid for r in final] == [r.rid for r in
+                                      batch_server.responses]
+    # push streamed each completion exactly once, in response order;
+    # finish() flushed only the remainder
+    assert [r.rid for r in pushed] == [r.rid for r in
+                                       final[:len(pushed)]]
+    drained = final[len(pushed):]
+    assert sorted(r.rid for r in pushed + drained) == list(range(n))
+
+
 def test_canonical_path_aliases():
     assert canonical_path("batched") == PATH_DYNAMIC_BATCH
     assert canonical_path("gated") == PATH_GATED

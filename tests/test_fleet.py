@@ -1,0 +1,246 @@
+"""Fleet layer: routing policies, replica lifecycle, autoscaler
+hysteresis, scenario suite, and the runtime ORT-vs-Triton boundary
+(paper Table 2 made a live decision)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import AdmissionController, DecayingThreshold
+from repro.fleet import (ACTIVE, Autoscaler, EnergyAwareRouter,
+                         FleetSimulator, LeastLoadedRouter, ReplicaPool,
+                         RoundRobinRouter, SCENARIOS, STOPPED,
+                         StaticRouter, build_sim_fleet, make_router,
+                         make_scenario, make_sim_replica)
+from repro.fleet.scenarios import (diurnal, flash_crowd,
+                                   low_confidence_flood, multi_tenant)
+
+KINDS3 = ("direct", "dynamic-batch", "gated-in-graph")
+
+
+def _run(scenario, router, *, kinds=KINDS3, autoscaler=None,
+         controller_factory=None):
+    pool = build_sim_fleet(scenario.oracle, kinds=kinds,
+                           controller_factory=controller_factory)
+    sim = FleetSimulator(pool, router, autoscaler=autoscaler)
+    return sim.run(scenario.requests), pool
+
+
+# ---------------------------------------------------------------------------
+# scenario suite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_builders(name):
+    sc = make_scenario(name, 400, seed=3)
+    assert sc.n == 400
+    ts = [r.arrival_s for r in sc.requests]
+    assert ts == sorted(ts)
+    assert [r.rid for r in sc.requests] == list(range(400))
+    assert len(sc.oracle.full_pred) == 400
+    assert all(r.entropy_hint is not None for r in sc.requests)
+    # deterministic per seed
+    sc2 = make_scenario(name, 400, seed=3)
+    assert [r.arrival_s for r in sc2.requests] == ts
+    np.testing.assert_array_equal(sc.oracle.full_pred,
+                                  sc2.oracle.full_pred)
+
+
+def test_multi_tenant_metadata_and_shares():
+    sc = multi_tenant(3000, qps=100.0, seed=1)
+    tenants = [r.metadata["tenant"] for r in sc.requests]
+    assert all("slo_s" in r.metadata for r in sc.requests)
+    share = tenants.count("standard") / len(tenants)
+    assert share == pytest.approx(0.5, abs=0.05)
+
+
+def test_flood_scenario_is_adversarial():
+    sc = low_confidence_flood(3000, qps=60.0, seed=2)
+    flood = [r for r in sc.requests if r.metadata["flood"]]
+    calm = [r for r in sc.requests if not r.metadata["flood"]]
+    assert len(flood) > 200
+    assert (np.mean([r.entropy_hint for r in flood])
+            > 2 * np.mean([r.entropy_hint for r in calm]))
+    # flood proxy is a coin flip
+    ids = [r.rid for r in flood]
+    proxy_acc = np.mean(sc.oracle.proxy_pred[ids]
+                        == sc.oracle.labels[ids])
+    assert 0.35 < proxy_acc < 0.65
+
+
+# ---------------------------------------------------------------------------
+# fleet conservation + lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["energy-aware", "round-robin",
+                                    "least-loaded", "static"])
+def test_every_request_served_exactly_once(policy):
+    sc = flash_crowd(800, qps=50.0, seed=4)
+    rep, _ = _run(sc, make_router(policy))
+    assert sorted(r.rid for r in rep.responses) == list(range(800))
+    for r in rep.responses:
+        assert r.t_finish >= r.arrival_s - 1e-12
+    assert sum(rep.summary["routed"].values()) == 800
+
+
+def test_heterogeneous_paths_actually_used():
+    sc = flash_crowd(900, qps=60.0, seed=5)
+    rep, _ = _run(sc, RoundRobinRouter())
+    assert {r.path for r in rep.responses} == {
+        "direct", "dynamic-batch", "gated-in-graph"}
+
+
+def test_replica_drain_flushes_and_revive_serves_again():
+    sc = flash_crowd(300, qps=200.0, seed=6)
+    pool = build_sim_fleet(sc.oracle, kinds=("dynamic-batch",))
+    pool.start()
+    rep = pool.replicas[0]
+    for req in sc.requests[:40]:
+        rep.push(req)
+    assert rep.load().queue_depth > 0
+    flushed = rep.drain(sc.requests[39].arrival_s)
+    assert rep.state == STOPPED
+    assert rep.load().queue_depth == 0
+    assert flushed and not rep.routable
+    rep.revive()
+    assert rep.state == ACTIVE and rep.routable
+    rep.push(sc.requests[40])
+    out = rep.finish(sc.requests[40].arrival_s)
+    assert sorted(r.rid for r in out) == list(range(41))
+
+
+def test_pool_rejects_duplicate_names():
+    sc = flash_crowd(10, qps=50.0, seed=0)
+    r1 = make_sim_replica("a", "direct", sc.oracle)
+    r2 = make_sim_replica("a", "direct", sc.oracle)
+    with pytest.raises(ValueError):
+        ReplicaPool([r1, r2])
+
+
+# ---------------------------------------------------------------------------
+# routing policies — acceptance criterion (a)
+# ---------------------------------------------------------------------------
+
+def test_energy_router_beats_round_robin_at_equal_accuracy():
+    """The headline: on a flash-crowd trace the energy-aware router
+    spends fewer joules/request than round-robin without giving up
+    accuracy (open-loop controllers -> every request full-model)."""
+    sc = flash_crowd(1500, qps=40.0, seed=0)
+    ea, _ = _run(sc, EnergyAwareRouter())
+    rr, _ = _run(sc, RoundRobinRouter())
+    assert ea.summary["accuracy"] == pytest.approx(
+        rr.summary["accuracy"], abs=0.01)
+    assert (ea.summary["joules_per_request"]
+            < 0.95 * rr.summary["joules_per_request"])
+
+
+def test_energy_router_beats_least_loaded_on_energy():
+    sc = multi_tenant(1500, qps=80.0, seed=1)
+    ea, _ = _run(sc, EnergyAwareRouter())
+    ll, _ = _run(sc, LeastLoadedRouter())
+    assert (ea.summary["joules_per_request"]
+            <= ll.summary["joules_per_request"])
+
+
+def test_energy_router_sheds_load_to_batch_under_pressure():
+    """At sparse traffic the direct basin wins outright; under a deep
+    flash the congestion term must push overflow onto the managed
+    replicas (the runtime Table-2 decision)."""
+    calm = flash_crowd(800, qps=30.0, flash_x=1.0, seed=7)
+    rep_calm, _ = _run(calm, EnergyAwareRouter())
+    direct_share = (rep_calm.summary["routed"]["direct-0"]
+                    / rep_calm.summary["n"])
+    assert direct_share > 0.95
+
+    crowd = flash_crowd(2500, qps=40.0, flash_x=15.0, seed=7)
+    rep_crowd, _ = _run(crowd, EnergyAwareRouter())
+    managed = (rep_crowd.summary["n"]
+               - rep_crowd.summary["routed"]["direct-0"])
+    assert managed > 0.2 * rep_crowd.summary["n"]
+
+
+def test_static_router_pins_one_replica():
+    sc = flash_crowd(300, qps=40.0, seed=8)
+    rep, _ = _run(sc, StaticRouter())
+    assert rep.summary["routed"]["direct-0"] == 300
+
+
+def test_closed_loop_controllers_per_replica():
+    """Each replica's own controller runs its admission loop; skipped
+    requests are answered by the proxy and metered per replica."""
+    def ctrl(kind, i):
+        return AdmissionController(
+            threshold=DecayingThreshold(1.0, 0.45, 0.3))
+
+    sc = flash_crowd(1200, qps=80.0, seed=9)
+    rep, pool = _run(sc, RoundRobinRouter(), controller_factory=ctrl)
+    assert sorted(r.rid for r in rep.responses) == list(range(1200))
+    assert rep.summary["admission_rate"] < 1.0
+    for r in pool:
+        assert r.controller.n_seen > 0
+        assert r.controller.meter.total_joules > 0
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_drains_and_revives_with_hysteresis():
+    sc = diurnal(3000, qps=8.0, peak_x=45.0, period_s=30.0, seed=2)
+    base, _ = _run(sc, EnergyAwareRouter())
+    scaled, _ = _run(sc, EnergyAwareRouter(),
+                     autoscaler=Autoscaler(cooldown_s=1.0))
+    acts = [a["action"] for a in scaled.autoscaler_log]
+    assert acts.count("drain") >= 1          # trough: idle burn shed
+    assert acts.count("revive") >= 1         # peak: capacity restored
+    # nothing lost across drains/revives
+    assert sorted(r.rid for r in scaled.responses) == list(range(3000))
+    # shedding idle replicas saves fleet energy
+    assert (scaled.summary["joules_per_request"]
+            < base.summary["joules_per_request"])
+    # every action carries its audit signals
+    for a in scaled.autoscaler_log:
+        assert {"t", "action", "replica", "pressure_ewma_s",
+                "jpr_ewma"} <= set(a)
+
+
+def test_autoscaler_respects_min_active():
+    sc = flash_crowd(600, qps=5.0, flash_x=1.0, seed=3)   # idle fleet
+    asc = Autoscaler(cooldown_s=0.5, min_active=2)
+    rep, pool = _run(sc, EnergyAwareRouter(), autoscaler=asc)
+    assert len(pool.routable()) >= 2
+    assert sorted(r.rid for r in rep.responses) == list(range(600))
+
+
+# ---------------------------------------------------------------------------
+# the QPS boundary sweep — acceptance criterion (b)
+# ---------------------------------------------------------------------------
+
+def test_fleet_boundary_finds_table2_crossover(tmp_path, monkeypatch):
+    import benchmarks.fleet_boundary as fb
+
+    # keep the sweep small and write BENCH_fleet.json into tmp
+    monkeypatch.setattr(fb, "_REPO_ROOT", str(tmp_path))
+    rows = fb.run(qps_sweep=(20, 160, 640), n=800, seed=0)
+    chk = fb.check(rows)
+
+    # paper Table 2 direction: direct (ORT-style) wins sparse traffic,
+    # managed batching (Triton-style) overtakes under load
+    assert chk["direct_wins_at_low_qps"]
+    assert chk["batch_wins_at_high_qps"]
+    assert chk["crossover_qps"] is not None
+    assert 20 < chk["crossover_qps"] <= 640
+    assert chk["energy_router_beats_round_robin_mean"]
+    assert (tmp_path / "BENCH_fleet.json").exists()
+
+
+def test_carbon_accounting_in_fleet_report():
+    sc = flash_crowd(500, qps=40.0, seed=1)
+    rep, _ = _run(sc, EnergyAwareRouter())
+    assert rep.carbon["energy_j"] > 0
+    assert rep.carbon["co2_kg"] > 0
+    assert rep.summary["energy_j"] == pytest.approx(
+        rep.carbon["energy_j"], rel=1e-3)

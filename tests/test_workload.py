@@ -1,0 +1,163 @@
+"""Arrival processes (determinism, empirical rates, burst density —
+the non-homogeneous Poisson thinning fix) and CarbonTracker
+regions/override."""
+import numpy as np
+import pytest
+
+from repro.serving import (bursty_arrivals, closed_loop_arrivals,
+                           nonhomogeneous_arrivals, poisson_arrivals)
+from repro.telemetry import CarbonTracker, GRID_INTENSITY_KG_PER_KWH
+
+
+def _times(reqs):
+    return np.array([r.arrival_s for r in reqs])
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda seed: poisson_arrivals(200, 80.0, seed=seed),
+    lambda seed: bursty_arrivals(200, 40.0, 400.0, seed=seed),
+    lambda seed: nonhomogeneous_arrivals(
+        200, lambda t: 50.0 + 30.0 * (t % 2 < 1), 80.0, seed=seed),
+])
+def test_arrivals_deterministic_per_seed(make):
+    a, b, c = make(7), make(7), make(8)
+    np.testing.assert_array_equal(_times(a), _times(b))
+    assert not np.array_equal(_times(a), _times(c))
+    for reqs in (a, c):
+        ts = _times(reqs)
+        assert len(ts) == 200
+        assert (np.diff(ts) >= 0).all()
+        assert [r.rid for r in reqs] == list(range(200))
+
+
+# ---------------------------------------------------------------------------
+# empirical rates
+# ---------------------------------------------------------------------------
+
+def test_poisson_empirical_rate():
+    n, rate = 6000, 120.0
+    ts = _times(poisson_arrivals(n, rate, seed=3))
+    observed = n / ts[-1]
+    assert observed == pytest.approx(rate, rel=0.1)
+
+
+def test_nonhomogeneous_piecewise_rates():
+    """Thinning reproduces each piece's rate, not just the average."""
+    lo, hi, period = 30.0, 300.0, 2.0
+
+    def rate(t):
+        return hi if (t % period) < 1.0 else lo
+
+    n = 8000
+    ts = _times(nonhomogeneous_arrivals(n, rate, hi, seed=5))
+    phase = ts % period
+    span = ts[-1] - ts[0]
+    n_hi = int((phase < 1.0).sum())
+    n_lo = n - n_hi
+    # each regime occupies half the span
+    assert n_hi / (span / 2) == pytest.approx(hi, rel=0.15)
+    assert n_lo / (span / 2) == pytest.approx(lo, rel=0.15)
+
+
+def test_nonhomogeneous_rejects_bad_envelope():
+    with pytest.raises(ValueError):
+        nonhomogeneous_arrivals(10, lambda t: 50.0, 0.0, seed=0)
+    with pytest.raises(ValueError, match="envelope"):
+        nonhomogeneous_arrivals(10, lambda t: 50.0, 10.0, seed=0)
+
+
+def test_nonhomogeneous_raises_instead_of_spinning_on_dead_rate():
+    """A rate profile that decays to zero must raise, not hang."""
+    with pytest.raises(RuntimeError, match="stalled"):
+        nonhomogeneous_arrivals(
+            1000, lambda t: 100.0 if t < 0.05 else 0.0, 100.0,
+            seed=0, max_candidates=50_000)
+
+
+# ---------------------------------------------------------------------------
+# burst density (the bug: gaps sampled at the gap-start rate could
+# jump clean over an entire burst window)
+# ---------------------------------------------------------------------------
+
+def test_bursty_windows_are_denser():
+    base, burst = 20.0, 400.0
+    every, length = 2.0, 0.5
+    n = 6000
+    ts = _times(bursty_arrivals(n, base, burst, burst_every_s=every,
+                                burst_len_s=length, seed=11))
+    phase = ts % every
+    in_burst = phase < length
+    span = ts[-1] - ts[0]
+    burst_frac = length / every
+    rate_in = in_burst.sum() / (span * burst_frac)
+    rate_out = (~in_burst).sum() / (span * (1 - burst_frac))
+    assert rate_in == pytest.approx(burst, rel=0.15)
+    assert rate_out == pytest.approx(base, rel=0.15)
+    assert rate_in > 5 * rate_out
+
+
+def test_bursty_never_skips_a_burst_window():
+    """Regression for the non-homogeneous Poisson bug: with a sparse
+    base rate every burst window inside the span must still contain
+    arrivals (the old sampler's base-rate gaps jumped over them)."""
+    base, burst = 2.0, 200.0
+    every, length = 2.0, 0.25
+    ts = _times(bursty_arrivals(2000, base, burst, burst_every_s=every,
+                                burst_len_s=length, seed=0))
+    n_windows = int(ts[-1] // every)
+    hit = {int(t // every) for t in ts if (t % every) < length}
+    missed = [w for w in range(n_windows) if w not in hit]
+    assert not missed, f"burst windows with zero arrivals: {missed}"
+
+
+def test_bursty_rejects_sparser_bursts():
+    with pytest.raises(ValueError, match="denser"):
+        bursty_arrivals(10, 100.0, 50.0, seed=0)
+    with pytest.raises(ValueError):
+        bursty_arrivals(10, 10.0, 100.0, burst_every_s=1.0,
+                        burst_len_s=2.0, seed=0)
+
+
+def test_closed_loop_arrivals_spacing():
+    reqs = closed_loop_arrivals(10, think_s=0.1)
+    ts = _times(reqs)
+    np.testing.assert_allclose(np.diff(ts), 0.1)
+
+
+# ---------------------------------------------------------------------------
+# CarbonTracker regions + override
+# ---------------------------------------------------------------------------
+
+def test_carbon_tracker_known_regions():
+    for region, intensity in GRID_INTENSITY_KG_PER_KWH.items():
+        ct = CarbonTracker(region=region)
+        ct.meter.record(3.6e6)               # exactly 1 kWh
+        rep = ct.report()
+        assert rep["co2_kg"] == pytest.approx(intensity)
+        assert rep["region"] == region
+
+
+def test_carbon_tracker_unknown_region_lists_known():
+    with pytest.raises(ValueError) as ei:
+        CarbonTracker(region="atlantis")
+    msg = str(ei.value)
+    assert "atlantis" in msg
+    for region in GRID_INTENSITY_KG_PER_KWH:
+        assert region in msg
+    assert "intensity" in msg                # points at the override
+
+
+def test_carbon_tracker_intensity_override():
+    # fleet nodes may sit in grids the table doesn't know
+    ct = CarbonTracker(region="rack-7-geothermal", intensity=0.011)
+    ct.meter.record(3.6e6)
+    rep = ct.report()
+    assert rep["co2_kg"] == pytest.approx(0.011)
+    assert rep["intensity_kg_per_kwh"] == 0.011
+    assert rep["region"] == "rack-7-geothermal"
+    with pytest.raises(ValueError):
+        CarbonTracker(intensity=-1.0)
