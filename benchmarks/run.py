@@ -10,10 +10,11 @@ import json
 import os
 import time
 
-from benchmarks import (controller_dynamics, fig3_throughput,
-                        fig4_tradeoff, fig5_landscape, fleet_boundary,
-                        perf_variants, roofline, rule_ablation,
-                        table2_dual_path, table3_ablation)
+from benchmarks import (continuous_perf, controller_dynamics,
+                        fig3_throughput, fig4_tradeoff, fig5_landscape,
+                        fleet_boundary, perf_variants, roofline,
+                        rule_ablation, table2_dual_path,
+                        table3_ablation)
 
 OUT = os.environ.get("BENCH_OUT", "results/benchmarks")
 
@@ -45,6 +46,11 @@ _BENCHES = [
     ("fleet_boundary", fleet_boundary,
      lambda c: (f"crossover_qps={c['crossover_qps']};"
                 f"ea_vs_rr={c['energy_vs_rr_saving_pct']}%")),
+    ("continuous_perf", continuous_perf,
+     lambda c: (f"steps_gain_x={c['steps_per_s_gain_x']};"
+                f"host_sync={c['host_sync_frac_fused']}"
+                f"(was {c['host_sync_frac_legacy']});"
+                f"parity={c['greedy_tokens_identical']}")),
 ]
 
 

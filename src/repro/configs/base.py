@@ -32,6 +32,10 @@ class ModelConfig:
     rope_pct: float = 1.0           # partial rotary (stablelm: 0.25)
     qkv_bias: bool = False
     prefix_lm: bool = False         # bidirectional prefix (paligemma)
+    attn_impl: str = "xla"          # xla | auto | ref | pallas — route
+                                    # attn/local_attn layers through the
+                                    # repro.kernels dispatch ("auto":
+                                    # Pallas on TPU, jnp oracle on CPU)
 
     # per-layer pattern for hybrids: tuple of block kinds, tiled over
     # n_layers.  Empty -> homogeneous (kind inferred from family).

@@ -1,11 +1,16 @@
 """Public jit'd entry points for the Pallas kernels.
 
-Dispatch policy:
-  - on TPU backends the compiled Pallas kernel runs natively;
-  - on CPU (this container) ``interpret=True`` executes the kernel body
-    in Python for correctness, or callers can pick the pure-jnp oracle
-    (``impl='ref'``) which is what the production model code uses for
-    XLA-lowered rooflines.
+Dispatch policy (``impl=``):
+  - ``"auto"``   — the production setting: the compiled Pallas kernel
+    on TPU backends, the pure-jnp oracle (XLA-lowered) elsewhere.
+    Interpret-mode Pallas is a validation tool, not a serving path —
+    ``auto`` never picks it, so serving code can say ``impl="auto"``
+    unconditionally and get the kernel exactly where it was written
+    for.
+  - ``"ref"``    — always the pure-jnp oracle (``repro.kernels.ref``).
+  - ``"pallas"`` — force the kernel: native on TPU, ``interpret=True``
+    (Python-evaluated body) elsewhere.  Kernel validation and
+    debugging only.
 """
 from __future__ import annotations
 
@@ -16,22 +21,35 @@ from repro.kernels import entropy as _ent
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 
+_IMPLS = ("auto", "ref", "pallas")
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _use_kernel(impl: str) -> bool:
+    if impl not in _IMPLS:
+        raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+    if impl == "ref":
+        return False
+    if impl == "pallas":
+        return True
+    return _on_tpu()
+
+
 def entropy_stats(logits, *, impl: str = "auto"):
     """logits [B,V] -> (entropy, max_prob, argmax).  The controller's
     L(x) hot-spot (vocab streaming, one HBM pass)."""
-    if impl == "ref":
+    if not _use_kernel(impl):
         return _ref.entropy_stats(logits)
     return _ent.entropy_stats(logits, interpret=not _on_tpu())
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
                     impl: str = "auto"):
-    if impl == "ref":
+    """q [B,H,Sq,hd]; k/v [B,K,Skv,hd] (GQA: H = K*G) -> [B,H,Sq,hd]."""
+    if not _use_kernel(impl):
         return _ref.flash_attention(q, k, v, causal=causal, window=window,
                                     q_offset=q_offset)
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
@@ -40,7 +58,8 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
 
 def decode_attention(q, k, v, kv_pos, cur_pos, *, window=0,
                      impl: str = "auto"):
-    if impl == "ref":
+    """q [B,H,hd]; k/v [B,K,S,hd]; kv_pos [B,S]; cur_pos [B] -> [B,H,hd]."""
+    if not _use_kernel(impl):
         return _ref.decode_attention(q, k, v, kv_pos, cur_pos,
                                      window=window)
     return _da.decode_attention(q, k, v, kv_pos, cur_pos, window=window,
@@ -50,7 +69,7 @@ def decode_attention(q, k, v, kv_pos, cur_pos, *, window=0,
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, impl: str = "auto"):
     """Mamba-2 SSD chunked scan (attention-free archs' hot-spot)."""
     from repro.kernels import ssd_scan as _ssd
-    if impl == "ref":
+    if not _use_kernel(impl):
         return _ref.ssd_scan(x, dt, A, Bm, Cm)
     return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
                          interpret=not _on_tpu())

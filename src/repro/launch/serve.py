@@ -231,13 +231,21 @@ def serve_generate(args) -> dict:
     responses = server.serve(reqs)
     summary = server.summary()
     summary.pop("accuracy", None)     # no labels in generation mode
+    # decode windows complete mid-stream now, so the LAST response may
+    # be a skip — the cumulative session stats ride on the last
+    # continuous-path completion
+    decode_stats = {}
+    for r in reversed(responses):
+        if "decode_steps" in r.telemetry:
+            decode_stats = {k: r.telemetry[k]
+                            for k in ("decode_steps", "occupancy")}
+            break
     summary.update(
         arch=args.arch, path="continuous-decode",
         controller=args.controller,
         tokens_generated=sum(len(r.output) for r in responses),
         sample=(responses[0].output[:8] if responses else []),
-        **{k: v for k, v in responses[-1].telemetry.items()
-           if k in ("decode_steps", "occupancy")} if responses else {})
+        **decode_stats)
     print(json.dumps(summary, default=str, indent=2))
     return summary
 

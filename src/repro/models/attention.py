@@ -224,6 +224,48 @@ def local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# fused-kernel dispatch (repro.kernels) — BSHD layout shims
+# ---------------------------------------------------------------------------
+
+def causal_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            window: int = 0, q_offset: int = 0,
+                            impl: str = "auto") -> jax.Array:
+    """Full causal attention through ``kops.flash_attention``.
+
+    The model speaks BSHD (q [B,S,H,hd], k/v [B,Skv,K,hd]); the kernel
+    speaks BHSD — two transposes at the boundary buy the fused online-
+    softmax kernel on TPU (``impl='auto'`` falls back to the jnp
+    oracle elsewhere).  Window masking matches ``mask_bias``
+    (q_pos - k_pos < window)."""
+    from repro.kernels import ops as kops
+    o = kops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=window,
+        q_offset=q_offset, impl=impl)
+    return o.transpose(0, 2, 1, 3)
+
+
+def decode_attend_kernel(q: jax.Array, cache: "KVCache", *,
+                         pos: jax.Array, window: int = 0,
+                         impl: str = "auto") -> jax.Array:
+    """One-token attention via ``kops.decode_attention`` (the flash-
+    decode kernel: KV streamed through VMEM, online softmax, per-slot
+    absolute positions so ring-buffered windows just work).
+
+    q [B,1,H,hd]; ``pos`` scalar (lockstep) or [B] (continuous
+    batching).  Same validity rule as :func:`decode_attend`."""
+    from repro.kernels import ops as kops
+    B = q.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    cur = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    o = kops.decode_attention(
+        q[:, 0], cache.k.transpose(0, 2, 1, 3),
+        cache.v.transpose(0, 2, 1, 3), cache.pos, cur,
+        window=window, impl=impl)
+    return o[:, None]
+
+
+# ---------------------------------------------------------------------------
 # KV cache (full or ring-buffered) + decode step
 # ---------------------------------------------------------------------------
 

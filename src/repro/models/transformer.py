@@ -221,6 +221,12 @@ def _attn_mix(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
     """Temporal mixing for attn/local_attn. Returns (y, new LayerCache)."""
     window = cfg.window if kind == "local_attn" else 0
     rd = int(cfg.head_dim * cfg.rope_pct)
+    # kernel dispatch (cfg.attn_impl != "xla"): the fused flash /
+    # flash-decode kernels — Pallas on TPU, jnp oracle on CPU.  The
+    # prefix-LM mask is jnp-only, so prefix batches stay on the
+    # chunked path regardless of the flag.
+    use_kernel = (cfg.attn_impl != "xla"
+                  and isinstance(prefix_len, int) and prefix_len == 0)
     if mode in ("full", "prefill"):
         B, S, _ = x.shape
         positions = jnp.arange(S)
@@ -228,7 +234,10 @@ def _attn_mix(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
                                    cfg.head_dim)
         q = nn.apply_rope(q, positions, cfg.rope_theta, rotary_dim=rd)
         k = nn.apply_rope(k, positions, cfg.rope_theta, rotary_dim=rd)
-        if window and S > window:
+        if use_kernel:
+            o = attn.causal_attention_kernel(q, k, v, window=window,
+                                             impl=cfg.attn_impl)
+        elif window and S > window:
             o = attn.local_attention(q, k, v, window=window)
         else:
             o = attn.causal_attention(q, k, v, window=window,
@@ -246,7 +255,11 @@ def _attn_mix(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
     q = nn.apply_rope(q, posv, cfg.rope_theta, rotary_dim=rd)
     k = nn.apply_rope(k, posv, cfg.rope_theta, rotary_dim=rd)
     kv = attn.cache_write(lc.kv, k, v, pos)
-    o = attn.decode_attend(q, kv, pos=pos, window=window)
+    if use_kernel:
+        o = attn.decode_attend_kernel(q, kv, pos=pos, window=window,
+                                      impl=cfg.attn_impl)
+    else:
+        o = attn.decode_attend(q, kv, pos=pos, window=window)
     return attn.out_proj(p, o), LayerCache(kv=kv, rec=lc.rec)
 
 

@@ -30,7 +30,7 @@ from repro.serving.api import (ALL_PATHS, PATH_AUTO, PATH_CONTINUOUS,
                                canonical_path)
 from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
 from repro.serving.continuous import (ContinuousBatchingEngine,
-                                      GenRequest)
+                                      DecodeSession, GenRequest)
 from repro.serving.engine import (ClassifierEngine, GenerationEngine,
                                   bucket_size)
 from repro.serving.gated import (GateParams, make_gated_classify_step,
@@ -55,7 +55,7 @@ __all__ = [
     "ContinuousEngineAdapter", "GatedEngineAdapter", "OracleEngine",
     # building blocks + legacy surface
     "Batch", "DirectPath", "DynamicBatcher",
-    "ContinuousBatchingEngine", "GenRequest",
+    "ContinuousBatchingEngine", "DecodeSession", "GenRequest",
     "ClassifierEngine", "GenerationEngine", "bucket_size",
     "GateParams", "make_gated_classify_step", "serve_gated",
     "ClosedLoopSimulator", "Oracle", "ServedRecord", "SimMetrics",

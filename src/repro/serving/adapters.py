@@ -286,14 +286,25 @@ class GatedEngineAdapter:
 
 @dataclass
 class ContinuousEngineAdapter:
-    """Generation through the slot-pool decoder.  The engine is built
-    WITHOUT a controller — admission is the server middleware's job —
-    and queued requests run to completion on drain."""
+    """Generation through the slot-pool decoder's INCREMENTAL session.
+
+    The engine is built WITHOUT a controller — admission is the server
+    middleware's job.  ``submit`` pushes the prompt into a live
+    :class:`~repro.serving.continuous.DecodeSession`; every ``step``
+    (each arrival) advances one fused ``sync_every``-step decode
+    window, so decoding interleaves with the arrival stream instead of
+    waiting for drain — requests that finish mid-stream complete
+    mid-stream.  ``drain`` runs the session dry.  Each window that
+    completes requests is minted as one :class:`Completion` carrying
+    the session's cumulative occupancy/host-sync stats."""
     engine: ContinuousBatchingEngine
     prompt_len: int | None = None
+    advance_on_arrival: bool = True
 
-    _queue: list = field(default_factory=list, init=False)
+    _session: object = field(default=None, init=False)
+    _by_rid: dict = field(default_factory=dict, init=False)
     _free_at: float = field(default=0.0, init=False)
+    _pending_dt: float = field(default=0.0, init=False)
 
     def capabilities(self) -> EngineCapabilities:
         return EngineCapabilities(name="continuous", kind="generate",
@@ -302,10 +313,18 @@ class ContinuousEngineAdapter:
     def warmup(self, ctx) -> None:
         pass
 
+    def _ensure_session(self):
+        if self._session is None:
+            self._session = self.engine.start_session(self.prompt_len)
+        return self._session
+
     def load(self) -> LoadState:
-        return LoadState(queue_depth=len(self._queue),
-                         batch_fill=len(self._queue)
-                         / max(self.engine.n_slots, 1))
+        if self._session is None:
+            return LoadState()
+        return LoadState(
+            queue_depth=self._session.n_queued,
+            batch_fill=self._session.n_active
+            / max(self.engine.n_slots, 1))
 
     def triage(self, req, now, ctx) -> TriageResult:
         hint = getattr(req, "entropy_hint", None)
@@ -313,31 +332,52 @@ class ContinuousEngineAdapter:
                             proxy_output=[])
 
     def submit(self, req, path, now, ctx) -> list[Completion]:
+        hint = getattr(req, "entropy_hint", None)
+        meta = getattr(req, "metadata", None) or {}
         gr = GenRequest(rid=req.rid,
                         prompt=np.asarray(req.payload, np.int32),
-                        max_new=getattr(req, "max_new", 16))
-        self._queue.append((req, gr))
+                        max_new=getattr(req, "max_new", 16),
+                        entropy_hint=(0.5 if hint is None
+                                      else float(hint)),
+                        arrival_t=float(req.arrival_s),
+                        eos_id=meta.get("eos_id"))
+        self._by_rid[req.rid] = req
+        self._ensure_session().push(gr)
         return []
+
+    def _advance_once(self, now: float) -> list[Completion]:
+        t0 = time.perf_counter()
+        finished = self._session.advance()
+        self._pending_dt += time.perf_counter() - t0
+        if not finished:
+            # busy time of windows that completed nothing is folded
+            # into the next completing window's span
+            return []
+        start = max(now, self._free_at)
+        finish = start + self._pending_dt
+        self._free_at = finish
+        self._pending_dt = 0.0
+        reqs = [self._by_rid.pop(g.rid) for g in finished]
+        return [Completion(requests=reqs,
+                           outputs=[list(g.generated)
+                                    for g in finished],
+                           path=PATH_CONTINUOUS, t_start=start,
+                           t_finish=finish,
+                           extras=dict(self._session.stats()))]
 
     def step(self, now, ctx) -> list[Completion]:
-        return []
+        if (not self.advance_on_arrival or self._session is None
+                or self._session.idle):
+            return []
+        return self._advance_once(now)
 
     def drain(self, now, ctx) -> list[Completion]:
-        if not self._queue:
+        if self._session is None:
             return []
-        reqs = [r for r, _ in self._queue]
-        gens = [g for _, g in self._queue]
-        self._queue = []
-        t0 = time.perf_counter()
-        stats = self.engine.serve(gens, prompt_len=self.prompt_len)
-        dt = time.perf_counter() - t0
-        start = max(now, self._free_at)
-        finish = start + dt
-        self._free_at = finish
-        return [Completion(requests=reqs,
-                           outputs=[list(g.generated) for g in gens],
-                           path=PATH_CONTINUOUS, t_start=start,
-                           t_finish=finish, extras=dict(stats))]
+        out: list[Completion] = []
+        while not self._session.idle:
+            out.extend(self._advance_once(now))
+        return out
 
 
 # ---------------------------------------------------------------------------

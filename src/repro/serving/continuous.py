@@ -3,18 +3,31 @@
 Fixed pool of B slots over one shared KV cache; every decode step
 advances ALL active slots (each at its own absolute position — the
 per-row `pos` vector path through the unified transformer), finished
-slots are refilled from the queue by prefilling a single request into
-a batch-1 cache and splicing it into the pool at the slot's batch
-index.  The admission controller plugs in at enqueue time exactly as
-in the dual-path scheduler.
+slots are refilled from the queue.  The admission controller plugs in
+at enqueue time exactly as in the dual-path scheduler.
 
 Why it matters for the paper: decode is the serving regime where
 energy ∝ occupied-slot-steps; continuous batching keeps slot occupancy
 (and thus joules/request) near optimal, and the controller prunes the
 low-value share of the stream before it ever occupies a slot.
+
+The hot path is IN-GRAPH (§Perf PR 3): one jit'd
+``jax.lax.scan`` advances ``sync_every`` micro-steps carrying
+(pool, cur_tok, pos, active, remaining) as on-device arrays — argmax,
+done-masking and position bookkeeping never leave the device, and the
+KV pool is donated (``donate_argnums``) so steps update the cache in
+place instead of copying it.  The host syncs once per window to
+harvest tokens, complete finished requests and refill; refills prefill
+up to ``n_free`` prompts in ONE bucketed call whose rows are scattered
+straight into the pool slots.  The legacy per-step loop (device→host
+argmax pull + per-slot Python loop + batch-1 prefill + leaf-wise tree
+splice) is kept as ``serve(..., legacy=True)`` — it is the parity
+baseline for tests and the "before" row of
+``benchmarks/continuous_perf.py``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -33,33 +46,109 @@ class GenRequest:
     prompt: np.ndarray               # [S] int32
     max_new: int = 16
     entropy_hint: float = 0.5        # L(x) proxy at enqueue time
+    arrival_t: float | None = None   # admission clock (workload arrival_s)
+    eos_id: int | None = None        # stop after emitting this token
 
     generated: list = field(default_factory=list)
     done: bool = False
     admitted: bool = True
 
 
-def _splice(pool_cache, row_cache, slot: int):
-    """Insert a batch-1 cache into the pool at batch index ``slot``.
+# ---------------------------------------------------------------------------
+# slot writes: batched rows -> pool slots
+# ---------------------------------------------------------------------------
 
-    Cache leaves are [L, B, ...] (stacked) or [B, ...] (per-layer
-    lists are handled leaf-wise too); the batch dim is axis 1 for
-    stacked leaves with a leading layer dim, else axis 0.  We detect
-    by comparing against the row cache (whose batch dim is 1)."""
+def _leaf_batch_axis(shape_a: tuple, shape_b: tuple) -> int:
+    """Batch axis of one cache leaf, from the SAME leaf's shape under
+    two different batch sizes.  Returns -1 for leaves that carry no
+    batch dimension (per-layer length bookkeeping); raises on layouts
+    where the batch axis cannot be identified unambiguously."""
+    if len(shape_a) != len(shape_b):
+        raise ValueError(
+            f"cache leaf rank changed with batch size: {shape_a} vs "
+            f"{shape_b} — unknown cache layout")
+    if shape_a == shape_b:
+        return -1
+    diffs = [i for i, (x, y) in enumerate(zip(shape_a, shape_b)) if x != y]
+    if len(diffs) != 1:
+        raise ValueError(
+            f"cache leaf has no unique batch axis: {shape_a} vs "
+            f"{shape_b} differ on axes {diffs}")
+    return diffs[0]
+
+
+def cache_batch_axes(cfg: ModelConfig, max_seq: int):
+    """Per-leaf batch-axis tree for ``tfm.init_cache``'s layout.
+
+    Derived structurally (``jax.eval_shape`` at two batch sizes — no
+    allocation), so stacked [L, B, ...] leaves, per-layer [B, ...]
+    lists, MLA/recurrent states and the scalar length bookkeeping are
+    all classified exactly instead of by the old guess-the-axis
+    heuristic."""
+    s2 = jax.eval_shape(lambda: tfm.init_cache(cfg, 2, max_seq))
+    s3 = jax.eval_shape(lambda: tfm.init_cache(cfg, 3, max_seq))
+    return jax.tree_util.tree_map(
+        lambda a, b: _leaf_batch_axis(a.shape, b.shape), s2, s3)
+
+
+def slot_write(pool_cache, row_cache, slot_idx, axes):
+    """Scatter a batched row cache (batch nb) into pool slots.
+
+    ``slot_idx`` [nb] int32 — target slot per row; out-of-range
+    indices (>= n_slots, used for bucket-padding rows) are DROPPED.
+    Leaves whose shapes don't match the derived batch axis raise
+    instead of silently keeping the stale pool row."""
+    def leaf(pool, row, ax):
+        if ax < 0:
+            return pool              # no batch dim (length bookkeeping)
+        if (pool.ndim != row.ndim
+                or pool.shape[:ax] != row.shape[:ax]
+                or pool.shape[ax + 1:] != row.shape[ax + 1:]):
+            raise ValueError(
+                f"cache leaf {row.shape} does not fit pool leaf "
+                f"{pool.shape} at batch axis {ax} — refusing to drop "
+                f"the prefilled row")
+        idx = (slice(None),) * ax + (slot_idx,)
+        return pool.at[idx].set(row.astype(pool.dtype), mode="drop")
+
+    return jax.tree_util.tree_map(leaf, pool_cache, row_cache, axes)
+
+
+def _splice(pool_cache, row_cache, slot: int):
+    """Insert a batch-1 cache into the pool at batch index ``slot``
+    (the LEGACY per-request refill path).
+
+    The batch axis is wherever the pool's extent differs from the
+    row's; equal-shaped leaves carry no batch dim (length bookkeeping)
+    and pass through.  More than one differing axis means the layout
+    is unknown — raise rather than silently dropping the row (the old
+    heuristic returned the pool unchanged).  NOTE: a batch-1 pool is
+    indistinguishable from the row (every leaf equal-shaped), so the
+    caller must special-case n_slots == 1 (the row IS the pool)."""
     def leaf_splice(pool, row):
-        if not hasattr(pool, "ndim") or pool.ndim == 0:
+        if not hasattr(pool, "ndim"):
             return pool
-        # find the axis where row has extent 1 and pool differs
-        for ax in range(min(pool.ndim, 2)):
-            if row.shape[ax] == 1 and pool.shape[ax] != 1:
-                idx = [slice(None)] * pool.ndim
-                idx[ax] = slot
-                return pool.at[tuple(idx)].set(
-                    jnp.squeeze(row, axis=ax).astype(pool.dtype))
-        return pool
+        ax = _leaf_batch_axis(tuple(row.shape), tuple(pool.shape))
+        if ax < 0:
+            return pool
+        idx = [slice(None)] * pool.ndim
+        idx[ax] = slot
+        return pool.at[tuple(idx)].set(
+            jnp.squeeze(row, axis=ax).astype(pool.dtype))
 
     return jax.tree_util.tree_map(leaf_splice, pool_cache, row_cache)
 
+
+def _bucket(n: int) -> int:
+    """Prefill batch bucket: the serving-wide power-of-two buckets,
+    never below ``n`` (a dropped prefill row would lose a request)."""
+    from repro.serving.engine import bucket_size
+    return max(bucket_size(n), n)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
 
 @dataclass
 class ContinuousBatchingEngine:
@@ -68,13 +157,23 @@ class ContinuousBatchingEngine:
     n_slots: int = 8
     max_seq: int = 256
     controller: AdmissionController | None = None
+    sync_every: int = 8              # fused micro-steps per host sync
+    donate: bool = True              # donate pool buffers into the jit
 
-    _decode: Callable = field(init=False)
-    _prefill1: Callable = field(init=False)
+    _decode: Callable = field(init=False, repr=False)
+    _prefill1: Callable = field(init=False, repr=False)
+    _step_k: Callable = field(init=False, repr=False)
+    _prefill_b: dict = field(init=False, repr=False, default_factory=dict)
+    _axes: object = field(init=False, repr=False)
 
     def __post_init__(self):
         cfg = self.cfg
+        max_seq = self.max_seq
+        k = max(int(self.sync_every), 1)
+        self.sync_every = k
+        self._axes = cache_batch_axes(cfg, max_seq)
 
+        # legacy per-step path (parity baseline + before/after bench)
         @jax.jit
         def decode(params, token, cache, pos):
             return tfm.decode_step(cfg, params, token, cache, pos)
@@ -86,29 +185,150 @@ class ContinuousBatchingEngine:
         self._decode = decode
         self._prefill1 = prefill1
 
-    def serve(self, requests: list[GenRequest], *,
-              prompt_len: int | None = None) -> dict:
-        """Run all requests to completion; returns summary stats.
+        # fused k-step window: argmax, emission masks, EOS/max-new
+        # done-masks and position bookkeeping all stay on device; ONE
+        # host sync per window.  The pool is donated so the KV cache
+        # updates in place across the whole window.  ``eos`` [B] is
+        # the per-slot stop token (-1 = none; argmax is >= 0 so it
+        # never matches).
+        self._decode_traces = 0
 
-        Prompts are padded/truncated to one static prefill length so
-        the batch-1 prefill compiles once (bucketed lengths in a full
-        deployment)."""
-        cfg = self.cfg
-        B = self.n_slots
+        def step_k(params, pool, cur_tok, pos, active, remaining, eos):
+            self._decode_traces += 1         # trace-time side effect:
+                                             # counts (re)compiles
+            def body(carry, _):
+                pool, tok, pos, act, rem = carry
+                logits, pool = tfm.decode_step(cfg, params, tok, pool,
+                                               pos)
+                nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+                new_pos = jnp.where(act, pos + 1, pos)
+                new_rem = jnp.where(act, rem - 1, rem)
+                alive = (act & (new_rem > 0) & (new_pos < max_seq - 1)
+                         & (nxt != eos))
+                new_tok = jnp.where(act, nxt, tok[:, 0])[:, None]
+                return (pool, new_tok, new_pos, alive, new_rem), (nxt,
+                                                                  act)
+
+            carry = (pool, cur_tok, pos, active, remaining)
+            carry, (toks, emitted) = jax.lax.scan(body, carry, None,
+                                                  length=k)
+            pool, cur_tok, pos, active, remaining = carry
+            return pool, cur_tok, pos, active, remaining, toks, emitted
+
+        self._step_k = jax.jit(
+            step_k, donate_argnums=(1,) if self.donate else ())
+
+    # -- jit caches ---------------------------------------------------------
+    @property
+    def decode_compile_count(self) -> int:
+        """How many times the fused decode window has been traced —
+        the shape-drift regression guard (must stay 1 across refills).
+        Counted by a trace-time side effect in the window body, so it
+        needs no private JAX API."""
+        return self._decode_traces
+
+    def _prefill_bucket(self, nb: int, plen: int) -> Callable:
+        """Batched prefill for bucket size ``nb`` at prompt length
+        ``plen``: prefill nb prompts in one call, scatter the rows
+        straight into the pool slots, and flip the per-slot decode
+        state (pos/cur_tok/active/remaining) in the same jit."""
+        key = (nb, plen)
+        fn = self._prefill_b.get(key)
+        if fn is not None:
+            return fn
+        cfg, max_seq, axes = self.cfg, self.max_seq, self._axes
+
+        def prefill_b(params, tokens, pool, slot_idx, cur_tok, pos,
+                      active, remaining, rem_new, eos, eos_new):
+            rows = tfm.init_cache(cfg, nb, max_seq)
+            logits, rows = tfm.prefill(cfg, params, tokens, rows)
+            first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            pool = slot_write(pool, rows, slot_idx, axes)
+            cur_tok = cur_tok.at[slot_idx, 0].set(first, mode="drop")
+            pos = pos.at[slot_idx].set(
+                jnp.full((nb,), plen, jnp.int32), mode="drop")
+            # a slot whose PREFILL token already hits EOS never decodes
+            active = active.at[slot_idx].set(first != eos_new,
+                                             mode="drop")
+            remaining = remaining.at[slot_idx].set(rem_new, mode="drop")
+            eos = eos.at[slot_idx].set(eos_new, mode="drop")
+            return pool, first, cur_tok, pos, active, remaining, eos
+
+        fn = jax.jit(prefill_b,
+                     donate_argnums=(2, 4, 5, 6, 7, 9) if self.donate
+                     else ())
+        self._prefill_b[key] = fn
+        return fn
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self, requests: list[GenRequest]) -> list[GenRequest]:
+        """Run the controller over the stream.  Each request is decided
+        at its OWN arrival time when the workload supplies one
+        (``arrival_t``); the legacy fixed-increment clock is only the
+        fallback for hand-built request lists."""
         queue: list[GenRequest] = []
         t = 0.0
         for r in requests:
             if self.controller is not None:
-                d = self.controller.decide(r.entropy_hint, t)
+                ta = (float(r.arrival_t) if r.arrival_t is not None
+                      else t)
+                d = self.controller.decide(r.entropy_hint, ta)
                 r.admitted = d.admit
-                t += 0.001
+                t = ta + 0.001
             if r.admitted:
                 queue.append(r)
             else:
                 r.done = True                 # skipped (proxy/cache)
+        return queue
 
-        plen = prompt_len or (max((len(r.prompt) for r in queue),
-                                  default=8))
+    # -- serving ------------------------------------------------------------
+    def start_session(self, prompt_len: int | None = None
+                      ) -> "DecodeSession":
+        return DecodeSession(self, prompt_len=prompt_len)
+
+    def serve(self, requests: list[GenRequest], *,
+              prompt_len: int | None = None,
+              legacy: bool = False) -> dict:
+        """Run all requests to completion; returns summary stats.
+
+        Prompts are padded/truncated to one static prefill length so
+        each prefill bucket compiles once.  ``legacy=True`` runs the
+        old host-driven per-step loop (parity/benchmark baseline)."""
+        wall0 = time.perf_counter()
+        queue = self._admit(list(requests))
+        # batch mode pads every prompt to ONE static prefill length
+        # (legacy semantics; incremental sessions pad per refill wave)
+        plen = prompt_len or max((len(r.prompt) for r in queue),
+                                 default=8)
+        if legacy:
+            stats = self._serve_legacy(queue, plen)
+        else:
+            session = self.start_session(plen)
+            for r in queue:
+                session.push(r)
+            while not session.idle:
+                session.advance()
+            stats = session.stats()
+        wall = time.perf_counter() - wall0
+        stats.update(
+            n_requests=len(requests),
+            n_admitted=sum(r.admitted for r in requests),
+            tokens_generated=sum(len(r.generated) for r in requests),
+            wall_s=wall,
+            host_s=max(wall - stats["device_s"], 0.0),
+            host_sync_frac=(max(wall - stats["device_s"], 0.0)
+                            / wall if wall > 0 else 0.0),
+            steps_per_s=(stats["decode_steps"] / wall if wall > 0
+                         else 0.0),
+        )
+        return stats
+
+    def _serve_legacy(self, queue: list[GenRequest],
+                      plen: int) -> dict:
+        """The pre-PR-3 loop: batch-1 prefill + tree splice per refill,
+        device→host argmax pull + per-slot Python loop per step."""
+        cfg = self.cfg
+        B = self.n_slots
         pool = tfm.init_cache(cfg, B, self.max_seq)
         slots: list[GenRequest | None] = [None] * B
         pos = np.zeros(B, np.int32)
@@ -116,33 +336,53 @@ class ContinuousBatchingEngine:
         active = np.zeros(B, bool)
         steps = 0
         occupied_slot_steps = 0
+        prefills = 0
+        device_s = 0.0
 
         def refill():
-            nonlocal pool
-            for s in range(B):
+            nonlocal pool, prefills, device_s
+            s = 0
+            while s < B:
                 if active[s] or not queue:
+                    s += 1
                     continue
                 r = queue.pop(0)
                 p = np.asarray(r.prompt[:plen], np.int32)
                 if len(p) < plen:
                     p = np.pad(p, (0, plen - len(p)))
                 row_cache = tfm.init_cache(cfg, 1, self.max_seq)
-                logits, row_cache = self._prefill1(
-                    self.params, jnp.asarray(p[None]), row_cache)
-                pool = _splice(pool, row_cache, s)
+                t0 = time.perf_counter()
+                logits, row_cache = jax.block_until_ready(
+                    self._prefill1(self.params, jnp.asarray(p[None]),
+                                   row_cache))
+                device_s += time.perf_counter() - t0
+                prefills += 1
+                # B == 1: pool and row shapes coincide, so axis
+                # detection can't see the batch dim — the row IS the
+                # pool
+                pool = (row_cache if B == 1
+                        else _splice(pool, row_cache, s))
+                first = int(jnp.argmax(logits[0, -1]))
+                r.generated.append(first)
+                if r.eos_id is not None and first == r.eos_id:
+                    r.done = True        # EOS at prefill: slot stays
+                    continue             # free — retry it with the
+                                         # next queued request
                 slots[s] = r
                 pos[s] = plen
-                cur_tok[s, 0] = int(jnp.argmax(logits[0, -1]))
-                r.generated.append(int(cur_tok[s, 0]))
+                cur_tok[s, 0] = first
                 active[s] = True
+                s += 1
 
         refill()
         while any(active):
             steps += 1
             occupied_slot_steps += int(active.sum())
-            logits, pool = self._decode(self.params,
-                                        jnp.asarray(cur_tok), pool,
-                                        jnp.asarray(pos))
+            t0 = time.perf_counter()
+            logits, pool = jax.block_until_ready(
+                self._decode(self.params, jnp.asarray(cur_tok), pool,
+                             jnp.asarray(pos)))
+            device_s += time.perf_counter() - t0
             nxt = np.asarray(jnp.argmax(logits[:, 0], -1),
                              np.int32)
             for s in range(B):
@@ -153,19 +393,176 @@ class ContinuousBatchingEngine:
                 pos[s] += 1
                 cur_tok[s, 0] = nxt[s]
                 if len(r.generated) >= r.max_new \
-                        or pos[s] >= self.max_seq - 1:
+                        or pos[s] >= self.max_seq - 1 \
+                        or (r.eos_id is not None
+                            and int(nxt[s]) == r.eos_id):
                     r.done = True
                     active[s] = False
                     slots[s] = None
             refill()
 
-        n_adm = sum(r.admitted for r in requests)
         return {
-            "n_requests": len(requests),
-            "n_admitted": n_adm,
+            "mode": "legacy",
+            "sync_every": 1,
             "decode_steps": steps,
             "occupied_slot_steps": occupied_slot_steps,
             "occupancy": (occupied_slot_steps / (steps * B)
                           if steps else 0.0),
-            "tokens_generated": sum(len(r.generated) for r in requests),
+            "host_syncs": steps,
+            "prefill_calls": prefills,
+            "device_s": device_s,
+        }
+
+
+# ---------------------------------------------------------------------------
+# incremental session — what the serving adapter drives
+# ---------------------------------------------------------------------------
+
+class DecodeSession:
+    """One slot-pool decode session over an engine's jit caches.
+
+    ``push`` enqueues at any time (continuous batching — arrivals
+    interleave with decoding); ``advance`` refills free slots with one
+    bucketed prefill, runs one fused ``sync_every``-step window, and
+    returns the requests that completed in that window.  All decode
+    state between windows lives on device."""
+
+    def __init__(self, engine: ContinuousBatchingEngine,
+                 prompt_len: int | None = None):
+        self.engine = engine
+        self.prompt_len = prompt_len
+        B = engine.n_slots
+        self.queue: list[GenRequest] = []
+        self.slots: list[GenRequest | None] = [None] * B
+        self._pool = tfm.init_cache(engine.cfg, B, engine.max_seq)
+        self._cur_tok = jnp.zeros((B, 1), jnp.int32)
+        self._pos = jnp.zeros((B,), jnp.int32)
+        self._active = jnp.zeros((B,), bool)
+        self._remaining = jnp.zeros((B,), jnp.int32)
+        self._eos = jnp.full((B,), -1, jnp.int32)
+        self._active_host = np.zeros(B, bool)
+        self._prefill_done: list[GenRequest] = []
+        # counters
+        self.decode_steps = 0
+        self.occupied_slot_steps = 0
+        self.host_syncs = 0
+        self.prefill_calls = 0
+        self.device_s = 0.0
+
+    # -- state --------------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self._active_host.any()
+
+    @property
+    def n_active(self) -> int:
+        return int(self._active_host.sum())
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.queue)
+
+    def push(self, r: GenRequest) -> None:
+        self.queue.append(r)
+
+    # -- refill -------------------------------------------------------------
+    def _refill(self) -> None:
+        eng = self.engine
+        B = eng.n_slots
+        free = [s for s in range(B) if not self._active_host[s]]
+        take = min(len(free), len(self.queue))
+        if take == 0:
+            return
+        reqs = [self.queue.pop(0) for _ in range(take)]
+        # a fixed prompt_len pins ONE prefill shape (compile-once);
+        # without it each wave pads to its own longest prompt —
+        # bucketed to a power of two so the per-(nb, plen) jit cache
+        # stays logarithmic — and a long prompt arriving mid-stream
+        # is never silently truncated to an earlier wave's length
+        plen = self.prompt_len or min(
+            _bucket(max((len(r.prompt) for r in reqs), default=8)),
+            eng.max_seq - 1)
+        nb = _bucket(take)
+        toks = np.zeros((nb, plen), np.int32)
+        slot_idx = np.full((nb,), B, np.int32)   # OOB pad rows: dropped
+        rem_new = np.ones((nb,), np.int32)
+        eos_new = np.full((nb,), -1, np.int32)
+        for j, r in enumerate(reqs):
+            p = np.asarray(r.prompt[:plen], np.int32)
+            toks[j, :len(p)] = p
+            slot_idx[j] = free[j]
+            rem_new[j] = max(r.max_new - 1, 1)
+            if r.eos_id is not None:
+                eos_new[j] = int(r.eos_id)
+        fn = eng._prefill_bucket(nb, plen)
+        t0 = time.perf_counter()
+        (self._pool, first, self._cur_tok, self._pos, self._active,
+         self._remaining, self._eos) = fn(
+            eng.params, jnp.asarray(toks), self._pool,
+            jnp.asarray(slot_idx), self._cur_tok, self._pos,
+            self._active, self._remaining, jnp.asarray(rem_new),
+            self._eos, jnp.asarray(eos_new))
+        first_h = np.asarray(jax.block_until_ready(first))
+        self.device_s += time.perf_counter() - t0
+        self.prefill_calls += 1
+        for j, r in enumerate(reqs):
+            r.generated.append(int(first_h[j]))
+            if r.eos_id is not None and first_h[j] == r.eos_id:
+                r.done = True            # EOS straight out of prefill
+                self._prefill_done.append(r)
+                continue
+            self.slots[slot_idx[j]] = r
+            self._active_host[slot_idx[j]] = True
+
+    # -- advance ------------------------------------------------------------
+    def advance(self) -> list[GenRequest]:
+        """Refill free slots, run one fused k-step window, harvest.
+        Returns the requests COMPLETED by this window."""
+        eng = self.engine
+        B = eng.n_slots
+        self._refill()
+        done_at_prefill, self._prefill_done = self._prefill_done, []
+        if not self._active_host.any():
+            return done_at_prefill
+        t0 = time.perf_counter()
+        (self._pool, self._cur_tok, self._pos, self._active,
+         self._remaining, toks, emitted) = eng._step_k(
+            eng.params, self._pool, self._cur_tok, self._pos,
+            self._active, self._remaining, self._eos)
+        jax.block_until_ready(toks)
+        self.device_s += time.perf_counter() - t0
+        # ONE host sync per window: [k,B] token/emission pulls
+        toks_h = np.asarray(toks)
+        emit_h = np.asarray(emitted)
+        active_h = np.array(self._active)        # writable host copy
+        self.host_syncs += 1
+        self.decode_steps += int(emit_h.any(axis=1).sum())
+        self.occupied_slot_steps += int(emit_h.sum())
+        completed: list[GenRequest] = list(done_at_prefill)
+        for s in range(B):
+            r = self.slots[s]
+            if r is None:
+                continue
+            r.generated.extend(int(x) for x in toks_h[emit_h[:, s], s])
+            if not active_h[s]:
+                r.done = True
+                completed.append(r)
+                self.slots[s] = None
+        self._active_host = active_h
+        return completed
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> dict:
+        B = self.engine.n_slots
+        return {
+            "mode": "fused",
+            "sync_every": self.engine.sync_every,
+            "decode_steps": self.decode_steps,
+            "occupied_slot_steps": self.occupied_slot_steps,
+            "occupancy": (self.occupied_slot_steps
+                          / (self.decode_steps * B)
+                          if self.decode_steps else 0.0),
+            "host_syncs": self.host_syncs,
+            "prefill_calls": self.prefill_calls,
+            "device_s": self.device_s,
         }

@@ -51,12 +51,15 @@ class ClassifierEngine:
             return distilbert.logits(cfg, params, tokens)
 
         exit_layer = self.exit_layer
+        # "auto" = Pallas kernel on TPU, jnp oracle elsewhere;
+        # use_pallas_entropy forces the kernel (interpret mode on CPU)
+        ent_impl = "pallas" if self.use_pallas_entropy else "auto"
 
         @jax.jit
         def proxy(params, tokens):
             lg = distilbert.early_exit_logits(cfg, params, tokens,
                                               exit_layer=exit_layer)
-            ent, maxp, amax = kops.entropy_stats(lg, impl="ref")
+            ent, maxp, amax = kops.entropy_stats(lg, impl=ent_impl)
             return lg, ent, maxp, amax
 
         self._full = full

@@ -57,7 +57,8 @@ def make_gated_classify_step(cfg: dict, *, exit_layer: int = 2,
         # 1-2: proxy + fused entropy (the L(x) hot-spot kernel)
         proxy_lg = distilbert.early_exit_logits(cfg, params, tokens,
                                                 exit_layer=exit_layer)
-        ent, maxp, proxy_pred = kops.entropy_stats(proxy_lg, impl="ref")
+        # "auto": the fused Pallas kernel on TPU, jnp oracle elsewhere
+        ent, maxp, proxy_pred = kops.entropy_stats(proxy_lg, impl="auto")
         n_classes = proxy_lg.shape[-1]
         L = ent / jnp.log(n_classes)          # normalised to [0,1]
 

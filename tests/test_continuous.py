@@ -1,5 +1,7 @@
 """Continuous batching: per-row decode positions + slot splicing must
-reproduce exactly what isolated lockstep generation produces."""
+reproduce exactly what isolated lockstep generation produces, and the
+in-graph fused loop must reproduce exactly what the legacy per-step
+host loop produces."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,7 +11,9 @@ from repro.configs import get_smoke_config
 from repro.core import AdmissionController, DecayingThreshold
 from repro.models import transformer as tfm
 from repro.serving.continuous import (ContinuousBatchingEngine,
-                                      GenRequest)
+                                      GenRequest, _leaf_batch_axis,
+                                      _splice, cache_batch_axes,
+                                      slot_write)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -82,6 +86,220 @@ def test_continuous_engine_end_to_end():
     assert all(len(r.generated) >= r.max_new for r in reqs)
     # more requests than slots => multiple refill waves, occupancy > 0.5
     assert stats["occupancy"] > 0.5
+
+
+def _seeded_workload(cfg, n=9, plen=8, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, plen) for _ in range(n)]
+    return lambda: [GenRequest(rid=i, prompt=prompts[i],
+                               max_new=4 + (i % 4)) for i in range(n)]
+
+
+def test_fused_loop_parity_with_legacy():
+    """The in-graph k-step loop must produce byte-identical greedy
+    token sequences vs the legacy per-step Python loop; at k=1 (same
+    refill cadence) the summary stats must match too."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    mk = _seeded_workload(cfg)
+
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=3, max_seq=64)
+    rl = mk()
+    sl = eng.serve(rl, prompt_len=8, legacy=True)
+    for k in (1, 4):
+        eng_f = ContinuousBatchingEngine(cfg, params, n_slots=3,
+                                         max_seq=64, sync_every=k)
+        rf = mk()
+        sf = eng_f.serve(rf, prompt_len=8)
+        assert [r.generated for r in rf] == [r.generated for r in rl], \
+            f"greedy tokens diverged at sync_every={k}"
+        assert all(r.done for r in rf)
+    # k=1: refill cadence identical to legacy -> identical stats
+    eng1 = ContinuousBatchingEngine(cfg, params, n_slots=3, max_seq=64,
+                                    sync_every=1)
+    s1 = eng1.serve(mk(), prompt_len=8)
+    for key in ("decode_steps", "occupied_slot_steps", "occupancy",
+                "tokens_generated", "n_admitted"):
+        assert s1[key] == sl[key], (key, s1[key], sl[key])
+
+
+def test_decode_window_compiles_once_across_refills():
+    """Shape-drift regression: the fused decode window must trace
+    exactly once no matter how many refill waves the workload needs."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                                   sync_every=4)
+    stats = eng.serve(_seeded_workload(cfg, n=7)(), prompt_len=8)
+    assert stats["prefill_calls"] >= 3          # several refill waves
+    assert eng.decode_compile_count == 1
+
+
+def test_fused_loop_respects_max_seq():
+    """Budgets larger than the pool allow must stop at max_seq-1, like
+    the legacy loop does."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    mk = lambda: [GenRequest(rid=0, prompt=np.arange(8) % cfg.vocab,
+                             max_new=100)]
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=16)
+    rl = mk()
+    eng.serve(rl, prompt_len=8, legacy=True)
+    eng_f = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=16,
+                                     sync_every=4)
+    rf = mk()
+    eng_f.serve(rf, prompt_len=8)
+    assert rf[0].generated == rl[0].generated
+    assert rf[0].done
+
+
+def test_eos_stops_generation_in_both_loops():
+    """A request with an eos_id must stop at the first emitted EOS —
+    identically in the fused window and the legacy loop."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    mk0 = _seeded_workload(cfg, n=4, seed=5)
+    probe = mk0()
+    ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64) \
+        .serve(probe, prompt_len=8)
+    # pick each request's 3rd emitted token as its EOS so every
+    # request stops early on a token we KNOW the model emits
+    def mk():
+        reqs = mk0()
+        for r, p in zip(reqs, probe):
+            r.max_new = 7
+            r.eos_id = p.generated[2]
+        return reqs
+    eng_l = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64)
+    rl = mk()
+    eng_l.serve(rl, prompt_len=8, legacy=True)
+    eng_f = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                                     sync_every=4)
+    rf = mk()
+    eng_f.serve(rf, prompt_len=8)
+    assert [r.generated for r in rf] == [r.generated for r in rl]
+    for r in rf:
+        assert r.done
+        # stopped AT the eos token, well before the max_new budget
+        assert r.generated[-1] == r.eos_id
+        assert len(r.generated) <= 3
+
+
+def test_eos_prefill_wave_does_not_drop_queue():
+    """If every request of a refill wave hits EOS straight out of
+    prefill, the slot must be retried with the next queued request —
+    not leave the rest of the queue stranded (legacy regression)."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    mk0 = _seeded_workload(cfg, n=3, seed=9)
+    probe = mk0()
+    ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64) \
+        .serve(probe, prompt_len=8)
+
+    def mk():
+        reqs = mk0()
+        # first two die at their prefill token; the third runs free
+        for r, p in zip(reqs[:2], probe[:2]):
+            r.eos_id = p.generated[0]
+        return reqs
+
+    rl = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64) \
+        .serve(rl, prompt_len=8, legacy=True)
+    rf = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                             sync_every=4).serve(rf, prompt_len=8)
+    assert all(r.done for r in rl) and all(r.done for r in rf)
+    assert [r.generated for r in rf] == [r.generated for r in rl]
+    assert len(rl[0].generated) == 1          # stopped at prefill
+    assert len(rl[2].generated) > 1           # still served
+
+
+def test_single_slot_pool_parity():
+    """n_slots == 1: the batch-1 pool is shape-identical to the row
+    cache, which the axis detector cannot see — both loops must still
+    serve correctly (legacy assigns the row, fused scatters)."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    mk = _seeded_workload(cfg, n=3, seed=11)
+    rl = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=1, max_seq=64) \
+        .serve(rl, prompt_len=8, legacy=True)
+    rf = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=1, max_seq=64,
+                             sync_every=4).serve(rf, prompt_len=8)
+    assert all(r.done for r in rl) and all(r.done for r in rf)
+    assert [r.generated for r in rf] == [r.generated for r in rl]
+    # against isolated lockstep generation: slot pool of one must
+    # equal a plain batch-1 prefill+decode
+    r0 = mk()[0]
+    cache = tfm.init_cache(cfg, 1, 64)
+    p = jnp.asarray(np.asarray(r0.prompt[:8], np.int32)[None])
+    logits, cache = tfm.prefill(cfg, params, p, cache)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = 8
+    while len(toks) < len(rl[0].generated):
+        logits, cache = tfm.decode_step(
+            cfg, params, jnp.asarray([[toks[-1]]], jnp.int32), cache,
+            pos)
+        toks.append(int(jnp.argmax(logits[0, 0])))
+        pos += 1
+    assert toks == rl[0].generated
+
+
+def test_admission_uses_request_arrival_times():
+    """The controller must be driven by the workload's arrival clock
+    (``arrival_t``), not a fake fixed-increment one."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, KEY)
+    ctrl = AdmissionController(
+        threshold=DecayingThreshold(0.2, 0.2, 1.0))
+    for v in np.linspace(0, 1, 32):
+        ctrl.cost.observe(v, 1.0, 0.0)
+    ctrl.meter.record(1.0)
+    rng = np.random.default_rng(3)
+    arrivals = [0.0, 1.5, 2.25, 7.75]
+    reqs = [GenRequest(rid=i, prompt=rng.integers(0, cfg.vocab, 8),
+                       max_new=3, arrival_t=arrivals[i])
+            for i in range(4)]
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                                   controller=ctrl, sync_every=2)
+    eng.serve(reqs, prompt_len=8)
+    assert [d.t for d in ctrl.history] == arrivals
+
+
+# ---------------------------------------------------------------------------
+# slot writes
+# ---------------------------------------------------------------------------
+
+def test_leaf_batch_axis_raises_on_unknown_layouts():
+    with pytest.raises(ValueError):
+        _leaf_batch_axis((4, 4), (5, 5))        # two differing axes
+    with pytest.raises(ValueError):
+        _leaf_batch_axis((4, 4), (4, 4, 4))     # rank change
+    assert _leaf_batch_axis((2, 7), (3, 7)) == 0
+    assert _leaf_batch_axis((5, 5), (5, 5)) == -1
+
+
+def test_slot_write_raises_on_mismatched_leaf():
+    """A cache row that doesn't fit the pool at the derived batch axis
+    must raise, not silently drop the prefilled row."""
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    axes = cache_batch_axes(cfg, 32)
+    pool = tfm.init_cache(cfg, 4, 32)
+    bad_rows = jax.tree_util.tree_map(
+        lambda x: (x[..., :-1] if hasattr(x, "ndim") and x.ndim >= 4
+                   else x),
+        tfm.init_cache(cfg, 2, 32))
+    with pytest.raises(ValueError, match="refusing to drop"):
+        slot_write(pool, bad_rows, jnp.array([0, 1]), axes)
+
+
+def test_legacy_splice_raises_on_ambiguous_leaf():
+    pool = {"x": jnp.zeros((4, 5))}
+    row = {"x": jnp.zeros((1, 3))}              # two differing axes
+    with pytest.raises(ValueError):
+        _splice(pool, row, 0)
 
 
 def test_continuous_engine_with_controller():
