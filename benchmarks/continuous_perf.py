@@ -1,29 +1,41 @@
-"""Continuous-decode hot-path benchmark — in-graph vs legacy loop.
+"""Continuous-decode hot-path benchmark — in-graph vs legacy loop,
+contiguous vs paged KV pool.
 
 The paper's thesis is that decode serving is the regime where energy ∝
 occupied-slot-steps, so the serving layer — not model FLOPs — sets
-joules/token (ML.ENERGY finds the same).  This benchmark measures
-exactly the serving-layer overhead PR 3 removed, on one seeded
-workload served three ways through the SAME params:
+joules/token (ML.ENERGY finds the same).  This benchmark measures the
+two serving-layer levers on one seeded workload served through the
+SAME params:
 
-  - ``legacy``   — per-step host loop: device→host argmax pull,
+  - ``legacy``    — per-step host loop: device→host argmax pull,
     per-slot Python bookkeeping, batch-1 prefill + tree splice.
-  - ``fused_k1`` — the in-graph loop syncing every step (isolates the
+  - ``fused_k1``  — the in-graph loop syncing every step (isolates the
     batched-prefill + on-device argmax win at the legacy refill
     cadence: occupancy/steps identical by construction).
-  - ``fused_k8`` — the production setting: 8 micro-steps fused per
+  - ``fused_k8``  — the production setting: 8 micro-steps fused per
     host sync, KV pool donated across the window.
+  - ``paged_k8``  — fused_k8 on the vLLM-style paged block pool at the
+    SAME slot count, block pool sized to the workload's per-request
+    budget (the parity row: tokens must be byte-identical).
+  - ``paged_packed`` — the capacity row: slot count scaled up to what
+    the paged layout fits inside the CONTIGUOUS pool's modelled KV HBM
+    budget.  Same requests, same tokens — more of them in flight, so
+    fewer refill waves and fewer modelled joules/token at a fixed HBM
+    budget.
 
-Reported per variant: steps/s, host-sync fraction (wall time outside
-the jit'd decode/prefill calls), slot occupancy, modelled
-joules/token (EnergyModel active power over the wall), plus a token-
-level parity check (greedy sequences must be identical).  Emits
+Reported per variant: steps/s, host-sync fraction, slot occupancy,
+modelled joules/token (EnergyModel active power over the wall), KV HBM
+bytes (``pool_hbm_bytes`` — the K/V rows paging shrinks, metadata
+reported separately), bytes/slot, slots/GB, plus a token-level parity
+check (greedy sequences must be identical across ALL variants).  Emits
 ``BENCH_continuous.json`` at the repo root (the perf-trajectory
 record) in addition to the standard ``results/benchmarks`` dump.
 
-``--smoke`` runs a tiny config and ASSERTS the in-graph loop beats
-legacy (CI gate): host-sync fraction below legacy, occupancy no worse
-(at k=1, where cadence matches), steps/s above legacy.
+``--smoke`` runs a tiny config and ASSERTS (CI gate): the in-graph
+loop beats legacy (host-sync fraction below, occupancy no worse at
+k=1, steps/s above), greedy tokens identical everywhere, and the paged
+layout fits >= 2x the contiguous slot count into the contiguous KV HBM
+budget while actually serving at that packed slot count.
 """
 from __future__ import annotations
 
@@ -41,20 +53,38 @@ N_REQUESTS = 24
 N_SLOTS = 4
 PROMPT_LEN = 8
 MAX_SEQ = 64
+KV_BLOCK = 8                  # paged rows: pool block size
 
-_VARIANTS = (
-    ("legacy", dict(legacy=True, sync_every=1)),
-    ("fused_k1", dict(legacy=False, sync_every=1)),
-    ("fused_k8", dict(legacy=False, sync_every=8)),
-)
+
+def _max_new(i: int) -> int:
+    """Per-request decode budget — the ONE definition both the
+    workload and the paged pool sizing derive from."""
+    return 8 + (i % 5)
 
 
 def _requests(cfg, n: int, seed: int = 0):
     from repro.serving.continuous import GenRequest
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, cfg.vocab, PROMPT_LEN) for _ in range(n)]
-    return [GenRequest(rid=i, prompt=prompts[i], max_new=8 + (i % 5),
+    return [GenRequest(rid=i, prompt=prompts[i], max_new=_max_new(i),
                        arrival_t=0.01 * i) for i in range(n)]
+
+
+def _paged_geometry(cfg, n: int, n_slots: int):
+    """(blocks_per_request, per-block KV bytes, packed slot count at
+    the contiguous pool's KV HBM budget) for an ``n``-request run."""
+    from repro.serving.continuous import (blocks_for_request,
+                                          pool_hbm_bytes)
+    bpr = blocks_for_request(PROMPT_LEN,
+                             max(_max_new(i) for i in range(n)),
+                             MAX_SEQ, KV_BLOCK)
+    pcfg = cfg.replace(kv_block_size=KV_BLOCK, kv_pool_blocks=2)
+    per_block = pool_hbm_bytes(pcfg, n_slots, MAX_SEQ)["kv_bytes"] // 2
+    contig_kv = pool_hbm_bytes(cfg, n_slots, MAX_SEQ)["kv_bytes"]
+    # the pool carries one reserved trash block on top of the
+    # per-request budgets; the packed pool must fit INSIDE the budget
+    packed_slots = (contig_kv - per_block) // (bpr * per_block)
+    return bpr, per_block, packed_slots
 
 
 def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
@@ -64,32 +94,51 @@ def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
     from repro.configs import get_smoke_config
     from repro.core.energy import EnergyModel
     from repro.models import transformer as tfm
-    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.continuous import (ContinuousBatchingEngine,
+                                          pool_hbm_bytes)
 
     cfg = get_smoke_config(ARCH).replace(remat=False)
     params = tfm.init_lm(cfg, jax.random.PRNGKey(0))
     emodel = EnergyModel()
+    bpr, per_block, packed_slots = _paged_geometry(cfg, n, n_slots)
+
+    def paged_cfg(slots):
+        return cfg.replace(kv_block_size=KV_BLOCK,
+                           kv_pool_blocks=slots * bpr + 1)
+
+    variants = (
+        ("legacy", cfg, n_slots, dict(legacy=True, sync_every=1)),
+        ("fused_k1", cfg, n_slots, dict(legacy=False, sync_every=1)),
+        ("fused_k8", cfg, n_slots, dict(legacy=False, sync_every=8)),
+        ("paged_k8", paged_cfg(n_slots), n_slots,
+         dict(legacy=False, sync_every=8)),
+        ("paged_packed", paged_cfg(packed_slots), packed_slots,
+         dict(legacy=False, sync_every=8)),
+    )
+
     rows = []
-    for name, kw in _VARIANTS:
-        eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
+    for name, vcfg, slots, kw in variants:
+        eng = ContinuousBatchingEngine(vcfg, params, n_slots=slots,
                                        max_seq=MAX_SEQ,
                                        sync_every=kw["sync_every"])
         # warm every jit cache (decode window + all prefill buckets the
         # timed run will hit) — the measured walltime must be steps,
         # not XLA compiles
-        eng.serve(_requests(cfg, n, seed=seed + 1),
+        eng.serve(_requests(vcfg, n, seed=seed + 1),
                   prompt_len=PROMPT_LEN, legacy=kw["legacy"])
-        reqs = _requests(cfg, n, seed=seed)
+        reqs = _requests(vcfg, n, seed=seed)
         t0 = time.perf_counter()
         stats = eng.serve(reqs, prompt_len=PROMPT_LEN,
                           legacy=kw["legacy"])
         wall = time.perf_counter() - t0
         tokens = stats["tokens_generated"]
+        hbm = pool_hbm_bytes(vcfg, slots, MAX_SEQ)
         rows.append({
             "variant": name,
+            "layout": "paged" if vcfg.paged_kv else "contiguous",
             "sync_every": kw["sync_every"],
             "n_requests": n,
-            "n_slots": n_slots,
+            "n_slots": slots,
             "decode_steps": stats["decode_steps"],
             "occupied_slot_steps": stats["occupied_slot_steps"],
             "occupancy": round(stats["occupancy"], 4),
@@ -102,6 +151,11 @@ def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
             "host_sync_frac": round(stats["host_sync_frac"], 4),
             "joules_per_token": round(
                 emodel.p_active * wall / max(tokens, 1), 4),
+            "kv_hbm_bytes": hbm["kv_bytes"],
+            "meta_hbm_bytes": hbm["meta_bytes"],
+            "kv_bytes_per_slot": hbm["kv_bytes"] // slots,
+            "slots_per_gb": round(slots / (hbm["kv_bytes"] / 2**30), 1),
+            "peak_blocks_in_use": stats.get("peak_blocks_in_use"),
             "decode_compiles": eng.decode_compile_count,
             "generated": [list(r.generated) for r in reqs],
         })
@@ -111,12 +165,15 @@ def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
 def check(rows) -> dict:
     by = {r["variant"]: r for r in rows}
     legacy, k1, k8 = by["legacy"], by["fused_k1"], by["fused_k8"]
+    paged, packed = by["paged_k8"], by["paged_packed"]
     parity = all(r["generated"] == legacy["generated"]
-                 for r in (k1, k8))
+                 for r in (k1, k8, paged, packed))
+    budget = legacy["kv_hbm_bytes"]           # contiguous KV budget
     out = {
         "greedy_tokens_identical": parity,
         "equal_token_output": (k1["tokens"] == legacy["tokens"]
-                               == k8["tokens"]),
+                               == k8["tokens"] == paged["tokens"]
+                               == packed["tokens"]),
         "steps_per_s_gain_x": round(
             k8["steps_per_s"] / max(legacy["steps_per_s"], 1e-9), 2),
         "host_sync_frac_legacy": legacy["host_sync_frac"],
@@ -131,7 +188,21 @@ def check(rows) -> dict:
         "joules_per_token_saving_pct": round(
             100.0 * (1 - k8["joules_per_token"]
                      / max(legacy["joules_per_token"], 1e-9)), 2),
-        "decode_compiled_once": k8["decode_compiles"] == 1,
+        "decode_compiled_once": (k8["decode_compiles"] == 1
+                                 and paged["decode_compiles"] == 1),
+        # paged capacity at the FIXED contiguous KV HBM budget
+        "kv_hbm_budget_bytes": budget,
+        "paged_slots_at_budget": packed["n_slots"],
+        "paged_fits_contig_budget": packed["kv_hbm_bytes"] <= budget,
+        "paged_slots_gain_x": round(
+            packed["n_slots"] / max(legacy["n_slots"], 1), 2),
+        "paged_slots_ge_contiguous": (
+            packed["n_slots"] >= legacy["n_slots"]),
+        "paged_slots_gain_ge_2x": (
+            packed["n_slots"] >= 2 * legacy["n_slots"]),
+        "paged_joules_per_token_saving_pct": round(
+            100.0 * (1 - packed["joules_per_token"]
+                     / max(k8["joules_per_token"], 1e-9)), 2),
     }
     slim = [{k: v for k, v in r.items() if k != "generated"}
             for r in rows]
@@ -155,7 +226,10 @@ def main(argv) -> int:
                                 "host_sync_below_legacy",
                                 "occupancy_no_worse_at_k1",
                                 "fused_beats_legacy_steps_per_s",
-                                "decode_compiled_once")
+                                "decode_compiled_once",
+                                "paged_fits_contig_budget",
+                                "paged_slots_ge_contiguous",
+                                "paged_slots_gain_ge_2x")
                     if not chk[k]]
         if failures:
             print(f"SMOKE FAIL: {failures}", file=sys.stderr)

@@ -50,6 +50,7 @@ _BENCHES = [
      lambda c: (f"steps_gain_x={c['steps_per_s_gain_x']};"
                 f"host_sync={c['host_sync_frac_fused']}"
                 f"(was {c['host_sync_frac_legacy']});"
+                f"paged_slots_x={c['paged_slots_gain_x']};"
                 f"parity={c['greedy_tokens_identical']}")),
 ]
 

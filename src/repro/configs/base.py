@@ -37,6 +37,18 @@ class ModelConfig:
                                     # repro.kernels dispatch ("auto":
                                     # Pallas on TPU, jnp oracle on CPU)
 
+    # paged KV pool (vLLM-style) for continuous decode.  0 = the
+    # contiguous per-slot layout (the parity oracle).  >0 = one shared
+    # block pool of kv_pool_blocks x kv_block_size rows per layer with
+    # a per-slot block table; slots map only the blocks their request
+    # budget needs, so short requests stop reserving worst-case HBM.
+    kv_block_size: int = 0          # rows per KV block (0 = contiguous)
+    kv_pool_blocks: int = 0         # physical blocks in the pool
+                                    # (0 = capacity parity with the
+                                    # contiguous pool at init_cache
+                                    # time; block 0 is the reserved
+                                    # trash block)
+
     # per-layer pattern for hybrids: tuple of block kinds, tiled over
     # n_layers.  Empty -> homogeneous (kind inferred from family).
     layer_pattern: Tuple[str, ...] = ()
@@ -92,6 +104,12 @@ class ModelConfig:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
         if self.family == "hybrid" and not self.layer_pattern:
             raise ValueError("hybrid arch needs layer_pattern")
+        if self.kv_pool_blocks > 0 and self.kv_block_size <= 0:
+            raise ValueError(
+                "kv_pool_blocks is set but kv_block_size is 0 — the "
+                "paged KV pool only engages when kv_block_size > 0, "
+                "so this config would silently serve the contiguous "
+                "layout; set kv_block_size too")
 
     # ---- derived ---------------------------------------------------------
     @property
@@ -114,6 +132,11 @@ class ModelConfig:
     @property
     def is_moe(self) -> bool:
         return self.n_experts > 0
+
+    @property
+    def paged_kv(self) -> bool:
+        """Decode KV caches live in a shared paged block pool."""
+        return self.kv_block_size > 0
 
     @property
     def sub_quadratic(self) -> bool:

@@ -9,6 +9,28 @@ replicas from load and energy-per-request trends, and a scenario suite
 (diurnal / flash-crowd / multi-tenant / adversarial flood) driven by
 an event-driven fleet simulator with fleet-level carbon accounting.
 
+Invariants of the layer (what the pieces may and may not touch):
+
+- **A replica is a whole server.**  Each :class:`Replica` wraps a full
+  ``repro.serving.api.Server`` with its OWN admission controller and
+  energy meter — fleet policies never reach inside a replica's
+  admission decisions or engine state; they only observe
+  (``pressure(now)``, energy EWMAs) and route.
+- **Pressure semantics.**  ``pressure(now)`` is a replica's
+  side-effect-free backlog signal (queued + in-flight work scaled by
+  modelled service rate).  The router and autoscaler may poll it at
+  any time; polling must never advance the replica's clock or queues.
+- **Routing is per-request, scaling is hysteretic.**  The
+  :class:`EnergyAwareRouter` picks the first acceptable basin by
+  utility/(marginal-energy x congestion) against tau(t) at each
+  arrival; the :class:`Autoscaler` drains/revives replicas only on
+  sustained pressure + marginal-joules trends (never on a single
+  sample) and logs every action for audit.
+- **One clock, one carbon ledger.**  ``FleetSimulator`` owns the
+  event clock and the fleet-level :class:`CarbonTracker`; replicas
+  report node-level active+idle energy into it and never meter carbon
+  themselves.
+
 Quickstart::
 
     from repro.fleet import (FleetSimulator, build_sim_fleet,

@@ -99,3 +99,53 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
     )(q[:, :, None, :], kp, vp, pp, cur_pos.astype(jnp.int32))
     return out[:, :, 0, :]
+
+
+def gather_block_views(k_pool: jax.Array, v_pool: jax.Array,
+                       block_table: jax.Array,
+                       n_ctx: int) -> tuple[jax.Array, jax.Array]:
+    """Gather each slot's mapped blocks into the contiguous logical
+    view: pool [NB, bs, K, hd] + table [B, MB] -> k/v
+    [B, n_ctx, K, hd] (BSHD, the gather's natural layout — the decode
+    kernels transpose to their BHSD at the call site).  The ONE
+    implementation of the block-table gather — the Pallas shim below,
+    the jnp ops dispatch AND the model layer's ``attn.paged_gather``
+    all go through it, so table semantics can never diverge between
+    paths."""
+    B = block_table.shape[0]
+    bs = k_pool.shape[1]
+    tb = block_table[:, :n_ctx // bs]                   # [B, MB]
+    k = k_pool[tb].reshape(B, n_ctx, *k_pool.shape[2:])
+    v = v_pool[tb].reshape(B, n_ctx, *v_pool.shape[2:])
+    return k, v
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "k_blk", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           kv_pos: jax.Array, cur_pos: jax.Array, *,
+                           window: int = 0, k_blk: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """Flash-decode over a paged block pool — block-table SHIM.
+
+    q [B,H,hd]; k_pool/v_pool [NB, bs, K, hd] (one physical pool);
+    block_table [B, MB] maps each slot's logical block to a pool
+    block; kv_pos [B, MB*bs] per-slot absolute positions (-1 = empty);
+    cur_pos [B] -> [B,H,hd].
+
+    The shim gathers each slot's mapped blocks into the contiguous
+    [B, K, S, hd] layout with one XLA gather, then runs the existing
+    flash-decode kernel — validity still comes from ``kv_pos``, so
+    trash-block rows are never attended.  A table-NATIVE kernel would
+    instead scalar-prefetch the table row (PrefetchScalarGridSpec) and
+    redirect each grid step's HBM->VMEM DMA through it, skipping the
+    materialised gather; the call signature here is already that
+    kernel's, so swapping it in is a drop-in.
+    """
+    k, v = gather_block_views(k_pool, v_pool, block_table,
+                              kv_pos.shape[1])
+    return decode_attention(q, k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), kv_pos, cur_pos,
+                            window=window, k_blk=k_blk,
+                            interpret=interpret)

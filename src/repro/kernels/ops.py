@@ -66,6 +66,28 @@ def decode_attention(q, k, v, kv_pos, cur_pos, *, window=0,
                                 interpret=not _on_tpu())
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_table, kv_pos,
+                           cur_pos, *, window=0, impl: str = "auto"):
+    """q [B,H,hd]; k/v pool [NB,bs,K,hd]; block_table [B,MB];
+    kv_pos [B,MB*bs]; cur_pos [B] -> [B,H,hd].
+
+    The paged serving hot path: one gather over the slot's block-table
+    row rebuilds the contiguous view, then the same dispatch as
+    :func:`decode_attention` (Pallas flash-decode on TPU, jnp oracle
+    elsewhere).  Validity is carried entirely by ``kv_pos`` — unmapped
+    table entries point at the trash block whose rows are never
+    valid."""
+    if not _use_kernel(impl):
+        k, v = _da.gather_block_views(k_pool, v_pool, block_table,
+                                      kv_pos.shape[1])
+        return _ref.decode_attention(q, k.transpose(0, 2, 1, 3),
+                                     v.transpose(0, 2, 1, 3),
+                                     kv_pos, cur_pos, window=window)
+    return _da.paged_decode_attention(q, k_pool, v_pool, block_table,
+                                      kv_pos, cur_pos, window=window,
+                                      interpret=not _on_tpu())
+
+
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, impl: str = "auto"):
     """Mamba-2 SSD chunked scan (attention-free archs' hot-spot)."""
     from repro.kernels import ssd_scan as _ssd

@@ -212,7 +212,10 @@ def serve_fleet(args) -> dict:
 
 
 def serve_generate(args) -> dict:
-    cfg = get_smoke_config(args.arch)
+    cfg = get_smoke_config(args.arch).replace(
+        attn_impl=args.attn_impl,
+        kv_block_size=args.kv_block_size,
+        kv_pool_blocks=args.kv_pool_blocks)
     params = tfm.init_lm(cfg, jax.random.PRNGKey(args.seed))
     engine = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
                                      max_seq=128)
@@ -242,7 +245,8 @@ def serve_generate(args) -> dict:
             break
     summary.update(
         arch=args.arch, path="continuous-decode",
-        controller=args.controller,
+        controller=args.controller, attn_impl=args.attn_impl,
+        kv_block_size=args.kv_block_size,
         tokens_generated=sum(len(r.output) for r in responses),
         sample=(responses[0].output[:8] if responses else []),
         **decode_stats)
@@ -275,6 +279,21 @@ def main():
                     choices=["direct", "batched", "dynamic-batch",
                              "gated", "gated-in-graph", "auto"],
                     default="auto")
+    ap.add_argument("--attn-impl",
+                    choices=["xla", "auto", "ref", "pallas"],
+                    default="xla",
+                    help="attention dispatch for --mode generate: "
+                         "'auto' routes attn layers through the "
+                         "repro.kernels flash/flash-decode kernels "
+                         "(Pallas on TPU, jnp oracle elsewhere); "
+                         "'xla' is the chunked-jnp default until the "
+                         "kernels are timed on real TPU")
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="generate mode: paged KV pool block size in "
+                         "rows (0 = contiguous per-slot cache)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="generate mode: physical blocks in the paged "
+                         "pool (0 = capacity parity with contiguous)")
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--window", type=float, default=0.01)
     ap.add_argument("--region", default="world_avg")

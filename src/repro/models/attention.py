@@ -316,6 +316,107 @@ def cache_write(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
                    length=jnp.max(start) + S_new)
 
 
+# ---------------------------------------------------------------------------
+# paged KV pool (vLLM-style): block pool + per-slot block table
+# ---------------------------------------------------------------------------
+#
+# The paged layout reuses the :class:`KVCache` container with a
+# different shape convention so cache pytrees stay structurally
+# identical to the contiguous layout (slot scatters are plain
+# ``tree_map``-free indexed writes either way):
+#
+#   k, v  [NB, bs, K, hd]   one physical pool of NB blocks of bs rows,
+#                           shared by every slot (block 0 is reserved
+#                           as the trash block — writes by retired
+#                           slots land there harmlessly)
+#   pos   [B, C]            per-slot LOGICAL validity/position array,
+#                           C = max_blocks_per_slot * bs (-1 = empty);
+#                           identical semantics to the contiguous pos
+#   length []               bookkeeping scalar, as contiguous
+#
+# A per-slot block table [B, MB] int32 (carried on the enclosing
+# ``transformer.Cache``) maps logical block j of slot b to a physical
+# pool block; unmapped entries point at the trash block and are
+# excluded by the pos validity mask, never by the table itself.
+
+
+def init_paged_kv_cache(batch: int, logical_len: int, n_kv: int,
+                        head_dim: int, *, n_blocks: int, block_size: int,
+                        dtype=jnp.bfloat16) -> KVCache:
+    """Pool-layout KVCache: ``n_blocks`` x ``block_size`` rows shared
+    by ``batch`` slots whose logical extent is ``logical_len`` rows."""
+    return KVCache(
+        k=jnp.zeros((n_blocks, block_size, n_kv, head_dim), dtype),
+        v=jnp.zeros((n_blocks, block_size, n_kv, head_dim), dtype),
+        pos=jnp.full((batch, logical_len), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def paged_cache_write(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                      pos, block_table: jax.Array,
+                      block_size: int) -> KVCache:
+    """Write ONE token per slot at its own absolute position.
+
+    k_new/v_new [B, 1, K, hd]; ``pos`` scalar or [B]; the physical row
+    is ``(block_table[b, pos_b // bs], pos_b % bs)``.  Slots whose
+    table row points at the trash block (retired slots still being
+    stepped inside a fused window) write there harmlessly; their pos
+    entry is per-slot and reset at the next prefill."""
+    B = k_new.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    posv = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    b = jnp.arange(B, dtype=jnp.int32)
+    blk = block_table[b, posv // block_size]            # [B]
+    off = posv % block_size
+    k = cache.k.at[blk, off].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[blk, off].set(v_new[:, 0].astype(cache.v.dtype))
+    p = cache.pos.at[b, posv].set(posv, mode="drop")
+    return KVCache(k=k, v=v, pos=p, length=jnp.max(posv) + 1)
+
+
+def paged_gather(cache: KVCache, block_table: jax.Array) -> KVCache:
+    """Materialise each slot's logical [B, C, K, hd] view of the pool
+    (gather over the block table).  The result is a CONTIGUOUS-layout
+    KVCache, so every downstream consumer (``decode_attend``, the
+    flash-decode kernel shim) runs unchanged on it.  The table
+    indexing itself is single-sourced in
+    ``repro.kernels.decode_attention.gather_block_views``."""
+    from repro.kernels.decode_attention import gather_block_views
+    C = cache.pos.shape[1]
+    k, v = gather_block_views(cache.k, cache.v, block_table, C)
+    return KVCache(k=k, v=v, pos=cache.pos, length=cache.length)
+
+
+def paged_decode_attend(q: jax.Array, cache: KVCache,
+                        block_table: jax.Array, *, pos: jax.Array,
+                        window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    """One-token attention over the slot's mapped blocks (jnp path).
+
+    Validity comes from the per-slot ``pos`` array exactly as in the
+    contiguous layout — unmapped blocks are never valid because their
+    logical rows were never written."""
+    return decode_attend(q, paged_gather(cache, block_table), pos=pos,
+                         window=window, scale=scale)
+
+
+def paged_decode_attend_kernel(q: jax.Array, cache: KVCache,
+                               block_table: jax.Array, *,
+                               pos: jax.Array, window: int = 0,
+                               impl: str = "auto") -> jax.Array:
+    """One-token paged attention through the block-table-aware
+    ``kops.paged_decode_attention`` shim (flash-decode kernel on TPU,
+    jnp oracle elsewhere)."""
+    from repro.kernels import ops as kops
+    B = q.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    cur = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    o = kops.paged_decode_attention(
+        q[:, 0], cache.k, cache.v, block_table, cache.pos, cur,
+        window=window, impl=impl)
+    return o[:, None]
+
+
 def decode_attend(q: jax.Array, cache: KVCache, *, pos: jax.Array,
                   window: int = 0, scale: float | None = None) -> jax.Array:
     """One-token attention against the cache.

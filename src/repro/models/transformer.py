@@ -173,10 +173,63 @@ class Cache(NamedTuple):
     layers: Any                       # stacked LayerCache or list
     cross: Any = None                 # encdec: (k, v) [L,B,Senc,K,hd]
     length: jax.Array | None = None   # [] int32 tokens consumed
+    block_table: Any = None           # paged pool only: [B, MB] int32
+                                      # slot -> physical block map
+                                      # (shared by every layer)
+
+
+def paged_geometry(cfg: ModelConfig, batch: int,
+                   max_seq: int) -> tuple[int, int, int]:
+    """(blocks_per_slot, logical_len, pool_blocks) for a paged cache.
+
+    ``pool_blocks`` honours ``cfg.kv_pool_blocks`` when set; the
+    default sizes the pool for capacity parity with the contiguous
+    layout (every slot can map its full logical extent) plus the
+    reserved trash block 0."""
+    bs = cfg.kv_block_size
+    if bs <= 0:
+        raise ValueError(
+            "paged cache geometry needs cfg.kv_block_size > 0 "
+            f"(got {bs}) — set it, or use the contiguous layout")
+    mb = -(-max_seq // bs)
+    nb = cfg.kv_pool_blocks or (batch * mb + 1)
+    return mb, mb * bs, nb
+
+
+def _check_paged_supported(cfg: ModelConfig) -> None:
+    kinds = set(cfg.block_kinds)
+    if kinds != {"attn"} or cfg.family == "encdec":
+        raise ValueError(
+            f"paged KV pool (kv_block_size={cfg.kv_block_size}) only "
+            f"supports homogeneous full-attention stacks; got block "
+            f"kinds {sorted(kinds)} (family={cfg.family!r}).  Windowed "
+            f"ring caches and recurrent states are constant-size per "
+            f"slot already — run them on the contiguous layout.")
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=jnp.bfloat16) -> Cache:
+               dtype=jnp.bfloat16, *, layout: str = "auto") -> Cache:
+    """Decode cache for ``batch`` slots of up to ``max_seq`` tokens.
+
+    ``layout='auto'`` follows ``cfg.kv_block_size`` (paged when > 0);
+    ``'contiguous'``/``'paged'`` force it — the continuous engine
+    forces contiguous ROW caches for prefill even when the pool it
+    scatters them into is paged."""
+    if layout not in ("auto", "contiguous", "paged"):
+        raise ValueError(f"unknown cache layout {layout!r}")
+    paged = (cfg.paged_kv if layout == "auto" else layout == "paged")
+    if paged:
+        _check_paged_supported(cfg)
+        mb, logical, nb = paged_geometry(cfg, batch, max_seq)
+        per = [LayerCache(kv=attn.init_paged_kv_cache(
+                   batch, logical, cfg.n_kv_heads, cfg.head_dim,
+                   n_blocks=nb, block_size=cfg.kv_block_size,
+                   dtype=dtype))
+               for _ in range(cfg.n_layers)]
+        layers = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+        return Cache(layers=layers, cross=None,
+                     length=jnp.zeros((), jnp.int32),
+                     block_table=jnp.zeros((batch, mb), jnp.int32))
     kinds = cfg.block_kinds
     if cfg.homogeneous:
         per = [init_layer_cache(cfg, kinds[0], batch, max_seq, dtype)
@@ -217,8 +270,14 @@ def _channel_mix(cfg: ModelConfig, p: dict, h: jax.Array):
 
 
 def _attn_mix(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
-              mode: str, lc: LayerCache, pos, prefix_len):
-    """Temporal mixing for attn/local_attn. Returns (y, new LayerCache)."""
+              mode: str, lc: LayerCache, pos, prefix_len,
+              block_table=None):
+    """Temporal mixing for attn/local_attn. Returns (y, new LayerCache).
+
+    ``block_table`` is non-None only on the paged decode path: the
+    layer's KV leaves are then pool-layout ([NB, bs, K, hd]) and both
+    the single-token write and the attention gather go through the
+    slot's block-table row."""
     window = cfg.window if kind == "local_attn" else 0
     rd = int(cfg.head_dim * cfg.rope_pct)
     # kernel dispatch (cfg.attn_impl != "xla"): the fused flash /
@@ -254,6 +313,17 @@ def _attn_mix(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
     posv = posv[None] if posv.ndim == 0 else posv[:, None]
     q = nn.apply_rope(q, posv, cfg.rope_theta, rotary_dim=rd)
     k = nn.apply_rope(k, posv, cfg.rope_theta, rotary_dim=rd)
+    if block_table is not None:
+        kv = attn.paged_cache_write(lc.kv, k, v, pos, block_table,
+                                    cfg.kv_block_size)
+        if use_kernel:
+            o = attn.paged_decode_attend_kernel(
+                q, kv, block_table, pos=pos, window=window,
+                impl=cfg.attn_impl)
+        else:
+            o = attn.paged_decode_attend(q, kv, block_table, pos=pos,
+                                         window=window)
+        return attn.out_proj(p, o), LayerCache(kv=kv, rec=lc.rec)
     kv = attn.cache_write(lc.kv, k, v, pos)
     if use_kernel:
         o = attn.decode_attend_kernel(q, kv, pos=pos, window=window,
@@ -292,12 +362,13 @@ def _rec_mix(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
 
 def apply_layer(cfg: ModelConfig, kind: str, p: dict, h: jax.Array, *,
                 mode: str, lc: LayerCache, pos=0, prefix_len=0,
-                xattn=None, cross_kv=None):
+                xattn=None, cross_kv=None, block_table=None):
     """One residual block: temporal mix + optional cross-attn + channel."""
     hn = nn.apply_norm(cfg.norm, p["norm1"], h)
     if kind in ("attn", "local_attn"):
         y, new_lc = _attn_mix(cfg, kind, p["mix"], hn, mode=mode, lc=lc,
-                              pos=pos, prefix_len=prefix_len)
+                              pos=pos, prefix_len=prefix_len,
+                              block_table=block_table)
     elif kind == "mla":
         y, new_lc = _mla_mix(cfg, p["mix"], hn, mode=mode, lc=lc, pos=pos)
     else:
@@ -325,12 +396,15 @@ def apply_layer(cfg: ModelConfig, kind: str, p: dict, h: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def _run_stack(cfg: ModelConfig, params: dict, h: jax.Array, *, mode: str,
-               cache_layers, pos=0, prefix_len=0, cross=None):
+               cache_layers, pos=0, prefix_len=0, cross=None,
+               block_table=None):
     """Run all layers; returns (h, new_cache_layers, aux_sum).
 
     ``mode='full'`` carries no cache (recurrent layers start from zero
     state built inside the layer body); prefill/decode thread the cache
-    through the scan as per-layer xs/ys.
+    through the scan as per-layer xs/ys.  ``block_table`` (paged
+    decode) is one [B, MB] map shared by every layer — it enters the
+    scan body as a captured constant, not a scanned-over leaf.
     """
     kinds = cfg.block_kinds
     remat = cfg.remat and mode == "full" and cfg.remat_policy != "none"
@@ -365,7 +439,8 @@ def _run_stack(cfg: ModelConfig, params: dict, h: jax.Array, *, mode: str,
             hh, new_lc, aux = apply_layer(cfg, kind, lp, hh, mode=mode,
                                           lc=lc, pos=pos,
                                           prefix_len=prefix_len,
-                                          xattn=xa, cross_kv=ckv)
+                                          xattn=xa, cross_kv=ckv,
+                                          block_table=block_table)
             return hh, (new_lc if mode != "full" else aux, aux)
 
         if remat:
@@ -392,7 +467,8 @@ def _run_stack(cfg: ModelConfig, params: dict, h: jax.Array, *, mode: str,
 
         def call(lp_, hh_, lc_, kind_=kind):
             return apply_layer(cfg, kind_, lp_, hh_, mode=mode, lc=lc_,
-                               pos=pos, prefix_len=prefix_len)
+                               pos=pos, prefix_len=prefix_len,
+                               block_table=block_table)
 
         if remat:
             call = ckpt(call)
@@ -488,7 +564,18 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: Cache,
             *, prefix_embeds: jax.Array | None = None,
             enc_embeds: jax.Array | None = None):
-    """Consume the prompt, fill the cache, return last-position logits."""
+    """Consume the prompt, fill the cache, return last-position logits.
+
+    Paged pools are decode-only: prefill a contiguous ROW cache
+    (``init_cache(..., layout='contiguous')``) and scatter its rows
+    into the pool blocks (``repro.serving.continuous.paged_slot_write``)
+    — that keeps the prefill jit free of per-token table indirection.
+    """
+    if cache.block_table is not None:
+        raise ValueError(
+            "prefill into a paged pool is not supported — prefill a "
+            "contiguous row cache and scatter it into the pool blocks "
+            "(see repro.serving.continuous.paged_slot_write)")
     h = embed(cfg, params, tokens)
     prefix_len = 0
     if prefix_embeds is not None:
@@ -513,9 +600,10 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
     h = embed(cfg, params, token)
     h, new_layers, _ = _run_stack(cfg, params, h, mode="decode",
                                   cache_layers=cache.layers, pos=pos,
-                                  cross=cache.cross)
+                                  cross=cache.cross,
+                                  block_table=cache.block_table)
     logits = unembed(cfg, params, h)
     pos_arr = jnp.asarray(pos, jnp.int32)
     length = (jnp.max(pos_arr) if pos_arr.ndim else pos_arr) + 1
     return logits, Cache(layers=new_layers, cross=cache.cross,
-                         length=length)
+                         length=length, block_table=cache.block_table)

@@ -30,7 +30,9 @@ from repro.serving.api import (ALL_PATHS, PATH_AUTO, PATH_CONTINUOUS,
                                canonical_path)
 from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
 from repro.serving.continuous import (ContinuousBatchingEngine,
-                                      DecodeSession, GenRequest)
+                                      DecodeSession, GenRequest,
+                                      blocks_for_request,
+                                      pool_hbm_bytes)
 from repro.serving.engine import (ClassifierEngine, GenerationEngine,
                                   bucket_size)
 from repro.serving.gated import (GateParams, make_gated_classify_step,
@@ -56,6 +58,7 @@ __all__ = [
     # building blocks + legacy surface
     "Batch", "DirectPath", "DynamicBatcher",
     "ContinuousBatchingEngine", "DecodeSession", "GenRequest",
+    "blocks_for_request", "pool_hbm_bytes",
     "ClassifierEngine", "GenerationEngine", "bucket_size",
     "GateParams", "make_gated_classify_step", "serve_gated",
     "ClosedLoopSimulator", "Oracle", "ServedRecord", "SimMetrics",

@@ -17,8 +17,30 @@
     function as a direct-path backend (ResNet benchmark rows, future
     multi-model routing).
 
-All adapters speak virtual time: simulated backends advance the clock
-with modelled latencies, live backends with measured walltimes.
+Invariants every adapter upholds (the ``EnginePort`` contract the
+``Server`` relies on):
+
+- **Virtual time.**  Completions carry ``t_start``/``t_finish`` on one
+  monotone clock: simulated backends advance it with modelled
+  latencies, live backends with measured walltimes (compiles are
+  warmed untimed — a measured span is always a step, never an XLA
+  trace).
+- **Admission stays outside the engine.**  No adapter owns an
+  admission controller; the server's middleware decides, and the only
+  exception — ``GatedEngineAdapter`` — still takes its (tau, e_norm,
+  c_norm) snapshot FROM the middleware and feeds the device-made mask
+  back to it.  Engines never drop requests on their own.
+- **Queue/slot ownership.**  An adapter owns its backlog between
+  ``submit`` and the ``Completion`` that returns each request; every
+  submitted request appears in exactly one completion (or a skip
+  minted by the server).  ``ContinuousEngineAdapter`` delegates slot
+  and KV-block ownership entirely to the ``DecodeSession`` — it never
+  touches the pool, only ``push``es requests and ``advance``s windows
+  (each ``step``/arrival interleaves one fused decode window with the
+  arrival stream).
+- **Pressure/load.**  ``load()`` is a cheap, side-effect-free snapshot
+  (queue depth + batch fill) the router/autoscaler may poll at any
+  time; it must not advance engine state.
 """
 from __future__ import annotations
 

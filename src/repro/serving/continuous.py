@@ -3,27 +3,45 @@
 Fixed pool of B slots over one shared KV cache; every decode step
 advances ALL active slots (each at its own absolute position — the
 per-row `pos` vector path through the unified transformer), finished
-slots are refilled from the queue.  The admission controller plugs in
-at enqueue time exactly as in the dual-path scheduler.
+slots are refilled from the queue.  Decode is the serving regime where
+energy ∝ occupied-slot-steps, so slot occupancy — not model FLOPs —
+sets joules/request; the admission controller (enqueue-time, same
+middleware surface as every other path) prunes low-value requests
+before they ever occupy a slot.
 
-Why it matters for the paper: decode is the serving regime where
-energy ∝ occupied-slot-steps; continuous batching keeps slot occupancy
-(and thus joules/request) near optimal, and the controller prunes the
-low-value share of the stream before it ever occupies a slot.
+Invariants this module maintains (who may touch what):
 
-The hot path is IN-GRAPH (§Perf PR 3): one jit'd
-``jax.lax.scan`` advances ``sync_every`` micro-steps carrying
-(pool, cur_tok, pos, active, remaining) as on-device arrays — argmax,
-done-masking and position bookkeeping never leave the device, and the
-KV pool is donated (``donate_argnums``) so steps update the cache in
-place instead of copying it.  The host syncs once per window to
-harvest tokens, complete finished requests and refill; refills prefill
-up to ``n_free`` prompts in ONE bucketed call whose rows are scattered
-straight into the pool slots.  The legacy per-step loop (device→host
-argmax pull + per-slot Python loop + batch-1 prefill + leaf-wise tree
-splice) is kept as ``serve(..., legacy=True)`` — it is the parity
-baseline for tests and the "before" row of
-``benchmarks/continuous_perf.py``.
+- **Slot ownership.**  A slot belongs to exactly one ``GenRequest``
+  from the prefill that seats it until the host sync that harvests its
+  completion; only ``DecodeSession`` assigns or clears slots.  Between
+  host syncs ALL slot state (KV pool, ``cur_tok``, ``pos``, ``active``,
+  ``remaining``) lives on device and nothing outside the fused window
+  may write it.
+- **Hot path is in-graph.**  One jit'd ``lax.scan`` advances
+  ``sync_every`` micro-steps with the KV pool donated
+  (``donate_argnums``) so the cache updates in place; the host syncs
+  once per window to harvest tokens and refill.  Refills prefill up to
+  ``n_free`` prompts in ONE bucketed contiguous row cache whose rows
+  are scattered straight into pool slots inside the same jit.
+- **Block ownership (paged pool, ``cfg.kv_block_size > 0``).**  KV
+  rows live in one shared pool of ``kv_pool_blocks`` x
+  ``kv_block_size`` rows per layer; a request owns the physical blocks
+  listed in its slot's block-table row from allocation at prefill
+  until the host sync that completes it.  ``DecodeSession`` is the
+  ONLY allocator: blocks are reserved for the request's whole budget
+  (``prompt + max_new`` rows, so a window can never run out
+  mid-decode), freed at completion, and a queued request WAITS when
+  the pool can't cover its budget — it is never dropped.  Block 0 is
+  the reserved trash block: retired slots still being stepped inside a
+  window write there harmlessly, and are excluded from attention by
+  the per-slot ``pos`` validity mask, never by the table itself.
+  The contiguous layout (``kv_block_size == 0``) remains the parity
+  oracle — byte-identical greedy tokens, enforced by tests and the
+  ``continuous_perf`` smoke gate.
+- **Legacy loop.**  The pre-fused per-step host loop survives only as
+  ``serve(..., legacy=True)`` — the parity baseline and the "before"
+  row of ``benchmarks/continuous_perf.py``.  It is contiguous-only and
+  refuses paged configs.
 """
 from __future__ import annotations
 
@@ -85,8 +103,10 @@ def cache_batch_axes(cfg: ModelConfig, max_seq: int):
     lists, MLA/recurrent states and the scalar length bookkeeping are
     all classified exactly instead of by the old guess-the-axis
     heuristic."""
-    s2 = jax.eval_shape(lambda: tfm.init_cache(cfg, 2, max_seq))
-    s3 = jax.eval_shape(lambda: tfm.init_cache(cfg, 3, max_seq))
+    s2 = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, 2, max_seq, layout="contiguous"))
+    s3 = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, 3, max_seq, layout="contiguous"))
     return jax.tree_util.tree_map(
         lambda a, b: _leaf_batch_axis(a.shape, b.shape), s2, s3)
 
@@ -122,21 +142,34 @@ def _splice(pool_cache, row_cache, slot: int):
     row's; equal-shaped leaves carry no batch dim (length bookkeeping)
     and pass through.  More than one differing axis means the layout
     is unknown — raise rather than silently dropping the row (the old
-    heuristic returned the pool unchanged).  NOTE: a batch-1 pool is
-    indistinguishable from the row (every leaf equal-shaped), so the
-    caller must special-case n_slots == 1 (the row IS the pool)."""
+    heuristic returned the pool unchanged).  A batch-1 pool is
+    indistinguishable from the row (EVERY leaf equal-shaped, so no
+    batch axis is ever found) — that case raises too, instead of
+    silently returning the pool unchanged: the row IS the pool, so the
+    caller must assign it directly rather than splice."""
+    spliced = 0
+
     def leaf_splice(pool, row):
+        nonlocal spliced
         if not hasattr(pool, "ndim"):
             return pool
         ax = _leaf_batch_axis(tuple(row.shape), tuple(pool.shape))
         if ax < 0:
             return pool
+        spliced += 1
         idx = [slice(None)] * pool.ndim
         idx[ax] = slot
         return pool.at[tuple(idx)].set(
             jnp.squeeze(row, axis=ax).astype(pool.dtype))
 
-    return jax.tree_util.tree_map(leaf_splice, pool_cache, row_cache)
+    out = jax.tree_util.tree_map(leaf_splice, pool_cache, row_cache)
+    if not spliced:
+        raise ValueError(
+            "_splice found no leaf with a batch axis — the pool is "
+            "batch-1 (shape-identical to the row), which a splice "
+            "cannot express.  Assign the row cache AS the pool instead "
+            "(n_slots == 1 special case).")
+    return out
 
 
 def _bucket(n: int) -> int:
@@ -144,6 +177,88 @@ def _bucket(n: int) -> int:
     never below ``n`` (a dropped prefill row would lose a request)."""
     from repro.serving.engine import bucket_size
     return max(bucket_size(n), n)
+
+
+# ---------------------------------------------------------------------------
+# paged pool: block-granular prefill scatter + sizing helpers
+# ---------------------------------------------------------------------------
+
+def paged_slot_write(pool, rows, slot_idx, table_rows, *,
+                     block_size: int, n_pref_blocks: int):
+    """Scatter a contiguous prefill ROW cache into paged pool blocks.
+
+    ``pool`` is a paged ``tfm.Cache`` (homogeneous all-attn: stacked
+    pool-layout KV leaves); ``rows`` a contiguous row cache of batch
+    ``nb`` whose first ``n_pref_blocks * block_size`` rows hold the
+    prefilled prompt.  ``table_rows`` [nb, MB] is each row's FULL
+    block-table row (prefill + decode-budget blocks, trash-padded);
+    the kv scatter is BLOCK-granular — one indexed write per leaf, no
+    per-row indirection.  Out-of-range ``slot_idx`` / table entries
+    (bucket-padding rows) are dropped.  The per-slot ``pos`` row is
+    rewritten wholesale (valid prompt prefix, -1 beyond), which also
+    retires any stale validity left by the slot's previous owner."""
+    pkv = pool.layers.kv
+    rkv = rows.layers.kv
+    P = n_pref_blocks * block_size
+    tb = table_rows[:, :n_pref_blocks]                  # [nb, npb]
+
+    def blkify(x):   # [L, nb, P, K, hd] -> [L, nb, npb, bs, K, hd]
+        return x[:, :, :P].reshape(
+            x.shape[0], x.shape[1], n_pref_blocks, block_size,
+            *x.shape[3:])
+
+    k = pkv.k.at[:, tb].set(blkify(rkv.k).astype(pkv.k.dtype),
+                            mode="drop")
+    v = pkv.v.at[:, tb].set(blkify(rkv.v).astype(pkv.v.dtype),
+                            mode="drop")
+    C = pkv.pos.shape[-1]
+    rpos = jnp.pad(rkv.pos[:, :, :P], ((0, 0), (0, 0), (0, C - P)),
+                   constant_values=-1)
+    pos = pkv.pos.at[:, slot_idx].set(rpos, mode="drop")
+    layers = pool.layers._replace(
+        kv=pkv._replace(k=k, v=v, pos=pos))
+    table = pool.block_table.at[slot_idx].set(table_rows, mode="drop")
+    return pool._replace(layers=layers, block_table=table)
+
+
+def blocks_for_request(plen: int, max_new: int, max_seq: int,
+                       block_size: int) -> int:
+    """Physical blocks a request needs for its WHOLE lifetime.
+
+    Rows written = padded prompt rows + one row per decode step, plus
+    the frozen-position row a retired slot keeps rewriting inside a
+    fused window (hence ``max(max_new, 2)``), clamped by the engine's
+    ``pos < max_seq - 1`` stop.  Reserving this up front is what makes
+    pool exhaustion a QUEUE-time condition: an admitted request can
+    never run out of blocks mid-decode."""
+    rows = min(plen + max(max_new, 2), max_seq)
+    return -(-rows // block_size)
+
+
+def pool_hbm_bytes(cfg: ModelConfig, n_slots: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> dict:
+    """Modelled HBM footprint of the decode cache (no allocation).
+
+    Returns ``kv_bytes`` (the K/V rows themselves — the part paging
+    shrinks), ``meta_bytes`` (position/validity vectors, block table,
+    length bookkeeping) and their sum.  Layout follows
+    ``cfg.kv_block_size``."""
+    import numpy as _np
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, n_slots, max_seq, dtype))
+
+    def nbytes(tree) -> int:
+        return int(sum(
+            _np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree_util.tree_leaves(tree)))
+
+    total = nbytes(cache)
+    try:
+        kv = nbytes((cache.layers.kv.k, cache.layers.kv.v))
+    except AttributeError:      # heterogeneous / recurrent layouts
+        kv = total
+    return {"kv_bytes": kv, "meta_bytes": total - kv,
+            "total_bytes": total}
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +286,16 @@ class ContinuousBatchingEngine:
         max_seq = self.max_seq
         k = max(int(self.sync_every), 1)
         self.sync_every = k
+        # slot-scatter axes serve the CONTIGUOUS layout only (legacy
+        # splice + fused slot_write); the paged pool has its own
+        # block-granular scatter, so derive them from the contiguous
+        # layout even when the engine itself is paged.
         self._axes = cache_batch_axes(cfg, max_seq)
+        self.paged = cfg.paged_kv
+        if self.paged:
+            (self.blocks_per_slot, self.logical_len,
+             self.pool_blocks) = tfm.paged_geometry(cfg, self.n_slots,
+                                                    max_seq)
 
         # legacy per-step path (parity baseline + before/after bench)
         @jax.jit
@@ -260,6 +384,47 @@ class ContinuousBatchingEngine:
         self._prefill_b[key] = fn
         return fn
 
+    def _prefill_bucket_paged(self, nb: int, plen: int) -> Callable:
+        """Paged twin of :meth:`_prefill_bucket`: prefill ``nb``
+        prompts into a contiguous ROW cache sized to the prompt's
+        block multiple, then block-scatter rows + block-table rows
+        into the pool and flip the per-slot decode state, all in one
+        jit.  ``table_rows`` [nb, MB] carries each request's full
+        block assignment (host-allocated)."""
+        key = ("paged", nb, plen)
+        fn = self._prefill_b.get(key)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+        cfg_bs = cfg.kv_block_size
+        npb = -(-plen // cfg_bs)
+        row_len = npb * cfg_bs
+
+        def prefill_p(params, tokens, pool, slot_idx, table_rows,
+                      cur_tok, pos, active, remaining, rem_new, eos,
+                      eos_new):
+            rows = tfm.init_cache(cfg, nb, row_len,
+                                  layout="contiguous")
+            logits, rows = tfm.prefill(cfg, params, tokens, rows)
+            first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            pool = paged_slot_write(pool, rows, slot_idx, table_rows,
+                                    block_size=cfg_bs,
+                                    n_pref_blocks=npb)
+            cur_tok = cur_tok.at[slot_idx, 0].set(first, mode="drop")
+            pos = pos.at[slot_idx].set(
+                jnp.full((nb,), plen, jnp.int32), mode="drop")
+            active = active.at[slot_idx].set(first != eos_new,
+                                             mode="drop")
+            remaining = remaining.at[slot_idx].set(rem_new, mode="drop")
+            eos = eos.at[slot_idx].set(eos_new, mode="drop")
+            return pool, first, cur_tok, pos, active, remaining, eos
+
+        fn = jax.jit(prefill_p,
+                     donate_argnums=(2, 5, 6, 7, 8, 10) if self.donate
+                     else ())
+        self._prefill_b[key] = fn
+        return fn
+
     # -- admission ----------------------------------------------------------
     def _admit(self, requests: list[GenRequest]) -> list[GenRequest]:
         """Run the controller over the stream.  Each request is decided
@@ -295,6 +460,11 @@ class ContinuousBatchingEngine:
         each prefill bucket compiles once.  ``legacy=True`` runs the
         old host-driven per-step loop (parity/benchmark baseline)."""
         wall0 = time.perf_counter()
+        if legacy and self.paged:
+            raise ValueError(
+                "legacy=True serves the contiguous layout only; the "
+                "paged pool's parity oracle is a contiguous engine "
+                "(cfg.kv_block_size == 0)")
         queue = self._admit(list(requests))
         # batch mode pads every prompt to ONE static prefill length
         # (legacy semantics; incremental sessions pad per refill wave)
@@ -442,12 +612,24 @@ class DecodeSession:
         self._eos = jnp.full((B,), -1, jnp.int32)
         self._active_host = np.zeros(B, bool)
         self._prefill_done: list[GenRequest] = []
+        # paged pool: host-side block allocator.  The session is the
+        # ONLY allocator; the device only ever sees the table it is
+        # handed.  Block 0 is the trash block and never allocated.
+        if engine.paged:
+            self._free_blocks = list(range(1, engine.pool_blocks))
+            self._slot_blocks: dict[int, list[int]] = {}
+            self._table_h = np.zeros((B, engine.blocks_per_slot),
+                                     np.int32)
+            self._table_dirty = False
         # counters
         self.decode_steps = 0
         self.occupied_slot_steps = 0
         self.host_syncs = 0
         self.prefill_calls = 0
         self.device_s = 0.0
+        self.blocks_allocated = 0
+        self.blocks_freed = 0
+        self.peak_blocks_in_use = 0
 
     # -- state --------------------------------------------------------------
     @property
@@ -473,6 +655,9 @@ class DecodeSession:
         take = min(len(free), len(self.queue))
         if take == 0:
             return
+        if eng.paged:
+            self._refill_paged(free, take)
+            return
         reqs = [self.queue.pop(0) for _ in range(take)]
         # a fixed prompt_len pins ONE prefill shape (compile-once);
         # without it each wave pads to its own longest prompt —
@@ -480,7 +665,7 @@ class DecodeSession:
         # stays logarithmic — and a long prompt arriving mid-stream
         # is never silently truncated to an earlier wave's length
         plen = self.prompt_len or min(
-            _bucket(max((len(r.prompt) for r in reqs), default=8)),
+            _bucket(max(max(len(r.prompt) for r in reqs), 1)),
             eng.max_seq - 1)
         nb = _bucket(take)
         toks = np.zeros((nb, plen), np.int32)
@@ -505,14 +690,128 @@ class DecodeSession:
         first_h = np.asarray(jax.block_until_ready(first))
         self.device_s += time.perf_counter() - t0
         self.prefill_calls += 1
+        self._seat_prefilled(reqs, slot_idx, first_h)
+
+    def _seat_prefilled(self, reqs, slots_for, first_h, *,
+                        on_prefill_eos=None) -> None:
+        """Shared post-prefill seating (both layouts): append each
+        request's first token, seat it in its slot — or, when that
+        token IS its EOS, complete it straight away (``on_prefill_eos``
+        lets the paged layout free the never-used blocks)."""
         for j, r in enumerate(reqs):
+            s = slots_for[j]
             r.generated.append(int(first_h[j]))
             if r.eos_id is not None and first_h[j] == r.eos_id:
                 r.done = True            # EOS straight out of prefill
                 self._prefill_done.append(r)
+                if on_prefill_eos is not None:
+                    on_prefill_eos(s)
                 continue
-            self.slots[slot_idx[j]] = r
-            self._active_host[slot_idx[j]] = True
+            self.slots[s] = r
+            self._active_host[s] = True
+
+    def _free_slot_blocks(self, s: int) -> None:
+        """Return slot ``s``'s blocks to the pool and retire its table
+        row to the trash block (applied to the device table before the
+        next fused window runs)."""
+        blocks = self._slot_blocks.pop(s, [])
+        self._free_blocks.extend(blocks)
+        self.blocks_freed += len(blocks)
+        self._table_h[s] = 0
+        self._table_dirty = True
+
+    def _refill_paged(self, free: list[int], take: int) -> None:
+        """Paged refill: reserve each request's WHOLE block budget
+        before seating it.  FIFO — the head of the queue waits (is
+        never dropped or overtaken) when the pool can't cover its
+        budget yet; frees from completing requests unblock it.
+
+        The wave (and its shared padded prompt length) is decided as a
+        PURE computation first; blocks are popped only once the wave
+        is final, so an error path can never strand a popped block.
+        The wave's plen grows only with members actually taken — a
+        long prompt deeper in the queue can defer its own admission
+        but never inflates an earlier request's budget past the pool
+        (the hard can-never-be-served error is judged at the request's
+        OWN minimal padding, not the wave's)."""
+        eng = self.engine
+        B = eng.n_slots
+        bs = eng.cfg.kv_block_size
+        allocatable = eng.pool_blocks - 1           # block 0 = trash
+        wave: list[GenRequest] = []
+        needs: list[int] = []
+        plen_wave = self.prompt_len or 0
+        for r in self.queue[:take]:
+            solo_plen = self.prompt_len or min(
+                _bucket(max(len(r.prompt), 1)), eng.max_seq - 1)
+            solo_need = blocks_for_request(solo_plen, r.max_new,
+                                           eng.max_seq, bs)
+            if solo_need > allocatable:
+                raise ValueError(
+                    f"request rid={r.rid} needs {solo_need} KV blocks "
+                    f"(prompt {solo_plen} + max_new {r.max_new} rows "
+                    f"at block_size {bs}) but the pool has only "
+                    f"{allocatable} allocatable blocks — it can never "
+                    f"be served; raise kv_pool_blocks or shrink the "
+                    f"request budget")
+            new_plen = max(plen_wave, solo_plen)
+            # a longer prompt re-pads the whole wave: re-budget every
+            # member at the grown plen before committing to it
+            new_needs = [blocks_for_request(new_plen, x.max_new,
+                                            eng.max_seq, bs)
+                         for x in wave] + [
+                blocks_for_request(new_plen, r.max_new, eng.max_seq,
+                                   bs)]
+            if sum(new_needs) > len(self._free_blocks):
+                break                    # pool exhausted: queue waits
+            wave.append(r)
+            needs = new_needs
+            plen_wave = new_plen
+        if not wave:
+            return
+        plen = plen_wave
+        assigned = [[self._free_blocks.pop() for _ in range(n)]
+                    for n in needs]
+        reqs = [self.queue.pop(0) for _ in wave]
+        nb = _bucket(len(reqs))
+        mb = eng.blocks_per_slot
+        toks = np.zeros((nb, plen), np.int32)
+        slot_idx = np.full((nb,), B, np.int32)       # OOB pad: dropped
+        # pad rows' table entries are OOB too, so their kv-scatter rows
+        # are dropped; real rows are trash-padded past their budget
+        table_rows = np.full((nb, mb), eng.pool_blocks, np.int32)
+        rem_new = np.ones((nb,), np.int32)
+        eos_new = np.full((nb,), -1, np.int32)
+        for j, r in enumerate(reqs):
+            p = np.asarray(r.prompt[:plen], np.int32)
+            toks[j, :len(p)] = p
+            slot_idx[j] = free[j]
+            row = np.zeros((mb,), np.int32)
+            row[:len(assigned[j])] = assigned[j]
+            table_rows[j] = row
+            rem_new[j] = max(r.max_new - 1, 1)
+            if r.eos_id is not None:
+                eos_new[j] = int(r.eos_id)
+        self.blocks_allocated += sum(len(a) for a in assigned)
+        self.peak_blocks_in_use = max(
+            self.peak_blocks_in_use,
+            allocatable - len(self._free_blocks))
+        fn = eng._prefill_bucket_paged(nb, plen)
+        t0 = time.perf_counter()
+        (self._pool, first, self._cur_tok, self._pos, self._active,
+         self._remaining, self._eos) = fn(
+            eng.params, jnp.asarray(toks), self._pool,
+            jnp.asarray(slot_idx), jnp.asarray(table_rows),
+            self._cur_tok, self._pos, self._active, self._remaining,
+            jnp.asarray(rem_new), self._eos, jnp.asarray(eos_new))
+        first_h = np.asarray(jax.block_until_ready(first))
+        self.device_s += time.perf_counter() - t0
+        self.prefill_calls += 1
+        for j in range(len(reqs)):
+            self._table_h[free[j]] = table_rows[j]
+            self._slot_blocks[free[j]] = assigned[j]
+        self._seat_prefilled(reqs, free, first_h,
+                             on_prefill_eos=self._free_slot_blocks)
 
     # -- advance ------------------------------------------------------------
     def advance(self) -> list[GenRequest]:
@@ -524,6 +823,13 @@ class DecodeSession:
         done_at_prefill, self._prefill_done = self._prefill_done, []
         if not self._active_host.any():
             return done_at_prefill
+        if eng.paged and self._table_dirty:
+            # retired slots' rows now point at the trash block; the
+            # window must never write a freed (possibly reallocated)
+            # block, so the mirror is applied BEFORE every window
+            self._pool = self._pool._replace(
+                block_table=jnp.asarray(self._table_h))
+            self._table_dirty = False
         t0 = time.perf_counter()
         (self._pool, self._cur_tok, self._pos, self._active,
          self._remaining, toks, emitted) = eng._step_k(
@@ -548,15 +854,18 @@ class DecodeSession:
                 r.done = True
                 completed.append(r)
                 self.slots[s] = None
+                if eng.paged:
+                    self._free_slot_blocks(s)
         self._active_host = active_h
         return completed
 
     # -- reporting ----------------------------------------------------------
     def stats(self) -> dict:
-        B = self.engine.n_slots
-        return {
-            "mode": "fused",
-            "sync_every": self.engine.sync_every,
+        eng = self.engine
+        B = eng.n_slots
+        out = {
+            "mode": "paged" if eng.paged else "fused",
+            "sync_every": eng.sync_every,
             "decode_steps": self.decode_steps,
             "occupied_slot_steps": self.occupied_slot_steps,
             "occupancy": (self.occupied_slot_steps
@@ -566,3 +875,12 @@ class DecodeSession:
             "prefill_calls": self.prefill_calls,
             "device_s": self.device_s,
         }
+        if eng.paged:
+            out.update(
+                kv_block_size=eng.cfg.kv_block_size,
+                pool_blocks=eng.pool_blocks,
+                blocks_allocated=self.blocks_allocated,
+                blocks_freed=self.blocks_freed,
+                peak_blocks_in_use=self.peak_blocks_in_use,
+                free_blocks=len(self._free_blocks))
+        return out

@@ -302,6 +302,269 @@ def test_legacy_splice_raises_on_ambiguous_leaf():
         _splice(pool, row, 0)
 
 
+# ---------------------------------------------------------------------------
+# paged KV pool
+# ---------------------------------------------------------------------------
+
+def _smoke_cfg():
+    return get_smoke_config("stablelm-3b").replace(remat=False)
+
+
+def _paged(cfg, **kw):
+    return cfg.replace(kv_block_size=8, **kw)
+
+
+def test_paged_parity_with_contiguous_across_refills():
+    """The paged pool must produce byte-identical greedy tokens to the
+    contiguous parity oracle over multiple refill waves."""
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    mk = _seeded_workload(cfg, n=9)
+    rc = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=3, max_seq=64,
+                             sync_every=4).serve(rc, prompt_len=8)
+    rp = mk()
+    stats = ContinuousBatchingEngine(_paged(cfg), params, n_slots=3,
+                                     max_seq=64, sync_every=4) \
+        .serve(rp, prompt_len=8)
+    assert [r.generated for r in rp] == [r.generated for r in rc]
+    assert all(r.done for r in rp)
+    assert stats["mode"] == "paged"
+    assert stats["prefill_calls"] >= 3           # several refill waves
+
+
+def test_paged_parity_with_eos_waves():
+    """EOS early-stops — mid-decode and straight out of prefill — must
+    free blocks and keep token parity with the contiguous oracle."""
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    mk0 = _seeded_workload(cfg, n=4, seed=5)
+    probe = mk0()
+    ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64) \
+        .serve(probe, prompt_len=8)
+
+    def mk():
+        reqs = mk0()
+        for r, p in zip(reqs, probe):
+            r.max_new = 7
+        reqs[0].eos_id = probe[0].generated[0]   # dies at prefill
+        reqs[1].eos_id = probe[1].generated[2]   # dies mid-decode
+        return reqs
+
+    rc = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                             sync_every=4).serve(rc, prompt_len=8)
+    rp = mk()
+    eng = ContinuousBatchingEngine(_paged(cfg), params, n_slots=2,
+                                   max_seq=64, sync_every=4)
+    stats = eng.serve(rp, prompt_len=8)
+    assert [r.generated for r in rp] == [r.generated for r in rc]
+    assert all(r.done for r in rp)
+    assert stats["blocks_allocated"] == stats["blocks_freed"]
+
+
+def test_paged_block_accounting_across_windows():
+    """Every block is free or owned by exactly one slot after every
+    window; the ledger balances when the session drains."""
+    cfg = _paged(_smoke_cfg())
+    params = tfm.init_lm(cfg, KEY)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                                   sync_every=2)
+    sess = eng.start_session(8)
+    for r in _seeded_workload(cfg, n=7)():
+        sess.push(r)
+    allocatable = eng.pool_blocks - 1
+    windows = 0
+    while not sess.idle:
+        sess.advance()
+        windows += 1
+        owned = [b for bl in sess._slot_blocks.values() for b in bl]
+        assert len(owned) == len(set(owned))          # unique owners
+        assert 0 not in owned                         # trash reserved
+        assert set(owned).isdisjoint(sess._free_blocks)
+        assert len(owned) + len(sess._free_blocks) == allocatable
+    assert windows > 2
+    assert sess.blocks_allocated == sess.blocks_freed > 0
+    assert len(sess._free_blocks) == allocatable
+    assert sess.peak_blocks_in_use <= allocatable
+
+
+def test_paged_pool_exhaustion_queue_waits():
+    """A pool too small for all slots serialises admission: requests
+    WAIT in the queue (never dropped) and tokens stay byte-identical
+    to the contiguous oracle."""
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    mk = _seeded_workload(cfg, n=5, seed=3)
+    rc = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=3, max_seq=64,
+                             sync_every=2).serve(rc, prompt_len=8)
+    # each request needs 2 blocks (8 prompt + <8 new rows @ bs=8);
+    # 3 allocatable blocks fit only ONE request at a time
+    pcfg = _paged(cfg, kv_pool_blocks=4)
+    eng = ContinuousBatchingEngine(pcfg, params, n_slots=3, max_seq=64,
+                                   sync_every=2)
+    sess = eng.start_session(8)
+    rp = mk()
+    for r in rp:
+        sess.push(r)
+    while not sess.idle:
+        sess.advance()
+        assert sess.n_active <= 1        # pool admits one at a time
+    assert all(r.done for r in rp)       # queue waited, nothing lost
+    assert [r.generated for r in rp] == [r.generated for r in rc]
+
+
+def test_paged_request_too_big_raises():
+    """A request whose budget exceeds the WHOLE pool can never be
+    served — that is a config error, not a queue wait."""
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    eng = ContinuousBatchingEngine(_paged(cfg, kv_pool_blocks=2),
+                                   params, n_slots=2, max_seq=64)
+    reqs = [GenRequest(rid=0, prompt=np.arange(8) % cfg.vocab,
+                       max_new=8)]
+    with pytest.raises(ValueError, match="never be served"):
+        eng.serve(reqs, prompt_len=8)
+
+
+def test_paged_long_prompt_does_not_inflate_earlier_budget():
+    """A long prompt deeper in the queue must not re-pad an earlier
+    short request past the pool: the short one serves in its own wave
+    at its own padding, the long one follows when blocks free up."""
+    cfg = _paged(_smoke_cfg(), kv_pool_blocks=13)   # 12 allocatable
+    params = tfm.init_lm(cfg, KEY)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=128,
+                                   sync_every=2)
+    sess = eng.start_session(None)                  # dynamic plen
+    rng = np.random.default_rng(0)
+    short = GenRequest(rid=0, prompt=rng.integers(0, cfg.vocab, 8),
+                       max_new=4)                   # solo: 2 blocks
+    long_ = GenRequest(rid=1, prompt=rng.integers(0, cfg.vocab, 40),
+                       max_new=4)                   # solo: 9 blocks
+    sess.push(short)
+    sess.push(long_)
+    # co-padding both to the long prompt's bucket would cost 9 blocks
+    # EACH (18 > 12) — the wave must instead split, not raise
+    while not sess.idle:
+        sess.advance()
+    assert short.done and long_.done
+    assert len(short.generated) >= 4 and len(long_.generated) >= 4
+    assert sess.blocks_allocated == sess.blocks_freed
+    assert len(sess._free_blocks) == 12
+
+
+def test_paged_unservable_request_raise_leaves_state_clean():
+    """The can-never-be-served error must fire BEFORE any block is
+    popped: no leaked blocks, no half-admitted wave, queue intact."""
+    cfg = _paged(_smoke_cfg(), kv_pool_blocks=4)    # 3 allocatable
+    params = tfm.init_lm(cfg, KEY)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                                   sync_every=2)
+    sess = eng.start_session(8)
+    rng = np.random.default_rng(1)
+    ok = GenRequest(rid=0, prompt=rng.integers(0, cfg.vocab, 8),
+                    max_new=4)                      # needs 2 blocks
+    too_big = GenRequest(rid=1, prompt=rng.integers(0, cfg.vocab, 8),
+                         max_new=60)                # needs > 3 blocks
+    sess.push(ok)
+    sess.push(too_big)
+    with pytest.raises(ValueError, match="never be served"):
+        sess.advance()
+    assert len(sess._free_blocks) == 3              # nothing stranded
+    assert sess._slot_blocks == {}
+    assert sess.n_queued == 2                       # queue untouched
+
+
+def test_paged_decode_window_compiles_once():
+    """Shape-drift regression for the paged scan: one trace no matter
+    how many refill waves (block tables ride the cache pytree with a
+    static shape)."""
+    cfg = _paged(_smoke_cfg())
+    params = tfm.init_lm(cfg, KEY)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                                   sync_every=4)
+    stats = eng.serve(_seeded_workload(cfg, n=7)(), prompt_len=8)
+    assert stats["prefill_calls"] >= 3
+    assert eng.decode_compile_count == 1
+
+
+def test_paged_legacy_loop_refuses():
+    cfg = _paged(_smoke_cfg())
+    params = tfm.init_lm(cfg, KEY)
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64)
+    with pytest.raises(ValueError, match="contiguous"):
+        eng.serve(_seeded_workload(cfg, n=2)(), prompt_len=8,
+                  legacy=True)
+
+
+def test_paged_prefill_into_pool_raises():
+    """tfm.prefill must refuse a paged pool — prefill goes through a
+    contiguous row cache + block scatter, never table indirection."""
+    cfg = _paged(_smoke_cfg())
+    params = tfm.init_lm(cfg, KEY)
+    pool = tfm.init_cache(cfg, 2, 32)
+    toks = jnp.zeros((2, 8), jnp.int32)
+    with pytest.raises(ValueError, match="paged pool"):
+        tfm.prefill(cfg, params, toks, pool)
+
+
+def test_paged_rejects_unsupported_layouts():
+    """Windowed / recurrent stacks keep constant-size state per slot —
+    the paged pool refuses them instead of silently mislaying rows."""
+    cfg = _paged(_smoke_cfg(), window=16)       # -> local_attn kinds
+    with pytest.raises(ValueError, match="paged KV pool"):
+        tfm.init_cache(cfg, 2, 64)
+
+
+def test_paged_misconfigurations_rejected():
+    """Half-configured paging must be loud: a pool size without a
+    block size would silently serve contiguous, and forcing
+    layout='paged' on a contiguous config has no geometry."""
+    with pytest.raises(ValueError, match="kv_block_size"):
+        _smoke_cfg().replace(kv_pool_blocks=8)
+    with pytest.raises(ValueError, match="kv_block_size"):
+        tfm.init_cache(_smoke_cfg(), 2, 64, layout="paged")
+
+
+def test_splice_batch1_pool_raises():
+    """The n_slots == 1 caveat is now a hard error at the call
+    boundary: a batch-1 pool has no identifiable batch axis."""
+    cfg = _smoke_cfg()
+    pool = tfm.init_cache(cfg, 1, 32)
+    row = tfm.init_cache(cfg, 1, 32)
+    with pytest.raises(ValueError, match="batch-1"):
+        _splice(pool, row, 0)
+
+
+def test_paged_decode_attend_kernel_path_matches_jnp():
+    """The block-table kernel shim (kops dispatch) must agree with the
+    pure-jnp gather path on a scattered block layout."""
+    from repro.models import attention as attn
+    B, K, H, hd, bs, mb = 2, 2, 4, 16, 8, 3
+    C = mb * bs
+    nb = 1 + B * mb
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    cache = attn.init_paged_kv_cache(B, C, K, hd, n_blocks=nb,
+                                     block_size=bs, dtype=jnp.float32)
+    rng = np.random.default_rng(2)
+    perm = rng.permutation(np.arange(1, nb)).reshape(B, mb)
+    table = jnp.asarray(perm, jnp.int32)
+    k_pool = jax.random.normal(ks[0], cache.k.shape)
+    v_pool = jax.random.normal(ks[1], cache.v.shape)
+    pos = jnp.broadcast_to(jnp.arange(C), (B, C))
+    pos = pos.at[:, C - 5:].set(-1)              # unwritten tail
+    cache = cache._replace(k=k_pool, v=v_pool, pos=pos)
+    q = jax.random.normal(ks[2], (B, 1, H, hd))
+    cur = jnp.array([C - 6, C - 8], jnp.int32)
+    o_jnp = attn.paged_decode_attend(q, cache, table, pos=cur)
+    o_ker = attn.paged_decode_attend_kernel(q, cache, table, pos=cur,
+                                            impl="ref")
+    np.testing.assert_allclose(np.asarray(o_jnp, np.float32),
+                               np.asarray(o_ker, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_continuous_engine_with_controller():
     cfg = get_smoke_config("stablelm-3b").replace(remat=False)
     params = tfm.init_lm(cfg, KEY)

@@ -153,6 +153,46 @@ def test_decode_attention_ring_buffer():
                                rtol=3e-5, atol=3e-5)
 
 
+def test_paged_decode_attention_shim_matches_contiguous():
+    """The block-table shim must reproduce the contiguous kernel
+    bit-for-bit in math terms: scatter a contiguous cache into
+    shuffled pool blocks and compare both the Pallas shim and the ops
+    ref dispatch against the contiguous reference."""
+    B, H, K, hd, bs, mb = 2, 4, 2, 16, 8, 4
+    C = mb * bs
+    NB = 1 + B * mb                      # block 0 = trash
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, K, C, hd))
+    v = jax.random.normal(ks[2], (B, K, C, hd))
+    kv_pos = jnp.broadcast_to(jnp.arange(C), (B, C))
+    kv_pos = kv_pos.at[:, C - 6:].set(-1)          # unwritten tail
+    cur = jnp.full((B,), C - 1)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(np.arange(1, NB))
+    table = np.zeros((B, mb), np.int32)
+    k_pool = np.zeros((NB, bs, K, hd), np.float32)
+    v_pool = np.zeros((NB, bs, K, hd), np.float32)
+    for b in range(B):
+        for j in range(mb):
+            blk = int(perm[b * mb + j])
+            table[b, j] = blk
+            sl = np.s_[b, :, j * bs:(j + 1) * bs]
+            k_pool[blk] = np.asarray(k[sl]).transpose(1, 0, 2)
+            v_pool[blk] = np.asarray(v[sl]).transpose(1, 0, 2)
+    orf = ref.decode_attention(q, k, v, kv_pos, cur)
+    o_shim = dak.paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(table), kv_pos, cur, k_blk=16)
+    o_ops = ops.paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(table), kv_pos, cur, impl="ref")
+    np.testing.assert_allclose(np.array(o_shim), np.array(orf),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.array(o_ops), np.array(orf),
+                               rtol=3e-5, atol=3e-5)
+
+
 # ---------------------------------------------------------------------------
 # ops dispatch layer
 # ---------------------------------------------------------------------------
