@@ -12,6 +12,13 @@ Sweeps steady-state QPS and reports, per load level:
     -> whether the energy-aware router *tracks* the boundary it is
     supposed to discover at runtime.
 
+Since PR 5 the virtual-time replicas wrap the REAL scheduling
+primitives (``DirectPath``/``DynamicBatcher`` incl. ``preferred_sizes``
+and the gated/continuous cores), so this sweep and the Table-2
+benchmark measure ONE batching model; the unified-layer rerun kept the
+crossover at 320 qps within noise of the PR-2 baseline.  The live-
+engine counterpart is ``benchmarks/fleet_live.py``.
+
 Emits ``BENCH_fleet.json`` at the repo root (perf-trajectory record)
 in addition to the standard ``results/benchmarks`` dump made by
 ``benchmarks/run.py``.

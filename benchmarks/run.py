@@ -12,8 +12,8 @@ import time
 
 from benchmarks import (continuous_perf, controller_dynamics,
                         fig3_throughput, fig4_tradeoff, fig5_landscape,
-                        fleet_boundary, perf_variants, roofline,
-                        rule_ablation, table2_dual_path,
+                        fleet_boundary, fleet_live, perf_variants,
+                        roofline, rule_ablation, table2_dual_path,
                         table3_ablation)
 
 OUT = os.environ.get("BENCH_OUT", "results/benchmarks")
@@ -46,6 +46,10 @@ _BENCHES = [
     ("fleet_boundary", fleet_boundary,
      lambda c: (f"crossover_qps={c['crossover_qps']};"
                 f"ea_vs_rr={c['energy_vs_rr_saving_pct']}%")),
+    ("fleet_live", fleet_live,
+     lambda c: (f"scenarios={len(c['scenarios_completed'])};"
+                f"served_once={c['all_served_once']};"
+                f"acc={c['mean_accuracy']}")),
     ("continuous_perf", continuous_perf,
      lambda c: (f"steps_gain_x={c['steps_per_s_gain_x']};"
                 f"host_sync={c['host_sync_frac_fused']}"

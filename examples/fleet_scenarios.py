@@ -4,9 +4,11 @@ decision, in one screenful.
 
     PYTHONPATH=src python examples/fleet_scenarios.py
 
-Everything is virtual-time (oracle-backed replicas), so the full
+Everything is virtual-time (oracle-backed replicas wrapping the SAME
+scheduling primitives the live adapters run on), so the full
 4-scenario x 3-policy grid over 1.5k requests each runs in seconds
-and is exactly reproducible.
+and is exactly reproducible.  For the same machinery over REAL jit'd
+engines, see ``examples/live_fleet.py`` / ``serve --fleet-live``.
 """
 import sys
 

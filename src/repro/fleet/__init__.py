@@ -18,8 +18,16 @@ Invariants of the layer (what the pieces may and may not touch):
   (``pressure(now)``, energy EWMAs) and route.
 - **Pressure semantics.**  ``pressure(now)`` is a replica's
   side-effect-free backlog signal (queued + in-flight work scaled by
-  modelled service rate).  The router and autoscaler may poll it at
+  modelled service rate) and is part of the ``EnginePort`` protocol
+  itself — every engine (oracle, sim, live adapter) reports it
+  uniformly, with a ``LoadState``-derived default for engines that
+  predate the extension.  The router and autoscaler may poll it at
   any time; polling must never advance the replica's clock or queues.
+- **One batching model.**  The sim engines wrap the REAL scheduling
+  primitives (``DirectPath``/``DynamicBatcher`` and the
+  ``BatchQueue``/``ServiceLine``/``SlotClock``/gate cores) — the fleet
+  never re-implements window/size flush or free-at serialisation, so
+  fleet sweeps and the Table-2 benchmark measure one scheduler.
 - **Routing is per-request, scaling is hysteretic.**  The
   :class:`EnergyAwareRouter` picks the first acceptable basin by
   utility/(marginal-energy x congestion) against tau(t) at each
@@ -46,8 +54,10 @@ Quickstart::
 or from the CLI: ``python -m repro.launch.serve --fleet``.
 """
 from repro.fleet.autoscaler import Autoscaler
-from repro.fleet.pool import (FleetReport, FleetSimulator, ReplicaPool,
-                              build_sim_fleet)
+from repro.fleet.pool import (LIVE_REPLICA_KINDS, FleetReport,
+                              FleetSimulator, ReplicaPool,
+                              build_live_fleet, build_sim_fleet,
+                              make_live_replica)
 from repro.fleet.replica import (ACTIVE, REPLICA_KINDS, STOPPED,
                                  Replica, SimBatchEngine,
                                  SimContinuousEngine, SimDirectEngine,
@@ -56,13 +66,15 @@ from repro.fleet.router import (ROUTERS, EnergyAwareRouter,
                                 LeastLoadedRouter, RoundRobinRouter,
                                 Router, StaticRouter, make_router)
 from repro.fleet.scenarios import (DEFAULT_TENANTS, SCENARIOS, Scenario,
-                                   diurnal, flash_crowd,
+                                   diurnal, flash_crowd, from_trace,
                                    low_confidence_flood, make_scenario,
-                                   multi_tenant, steady)
+                                   multi_tenant, steady, with_payloads)
 
 __all__ = [
     # pool / simulator
-    "FleetReport", "FleetSimulator", "ReplicaPool", "build_sim_fleet",
+    "FleetReport", "FleetSimulator", "ReplicaPool",
+    "LIVE_REPLICA_KINDS", "build_live_fleet", "build_sim_fleet",
+    "make_live_replica",
     # replicas
     "ACTIVE", "STOPPED", "REPLICA_KINDS", "Replica",
     "SimBatchEngine", "SimContinuousEngine", "SimDirectEngine",
@@ -74,6 +86,6 @@ __all__ = [
     "Autoscaler",
     # scenarios
     "DEFAULT_TENANTS", "SCENARIOS", "Scenario", "diurnal",
-    "flash_crowd", "low_confidence_flood", "make_scenario",
-    "multi_tenant", "steady",
+    "flash_crowd", "from_trace", "low_confidence_flood",
+    "make_scenario", "multi_tenant", "steady", "with_payloads",
 ]

@@ -31,8 +31,15 @@ from repro.fleet.autoscaler import Autoscaler
 from repro.fleet.replica import (REPLICA_KINDS, STOPPED, Replica,
                                  make_sim_replica)
 from repro.fleet.router import EnergyAwareRouter, Router
+from repro.serving.api import (PATH_DIRECT, PATH_DYNAMIC_BATCH,
+                               PATH_GATED, AdmissionMiddleware, Server,
+                               ServerConfig)
 from repro.serving.simulator import Oracle
 from repro.telemetry.carbon import CarbonTracker
+
+# live replicas serve the classifier paths; continuous-decode stays a
+# generation workload (serve --mode generate), not a fleet-classify kind
+LIVE_REPLICA_KINDS = (PATH_DIRECT, PATH_DYNAMIC_BATCH, PATH_GATED)
 
 
 @dataclass
@@ -105,6 +112,110 @@ def build_sim_fleet(oracle: Oracle, kinds=REPLICA_KINDS[:3], *,
             f"{kind}-{i}", kind, oracle, controller=ctrl,
             max_batch=max_batch, queue_window_s=queue_window_s,
             n_slots=n_slots))
+    return ReplicaPool(replicas)
+
+
+def make_live_replica(name: str, kind: str, cfg: dict, params: dict, *,
+                      engine=None, controller=None, max_batch: int = 8,
+                      queue_window_s: float = 0.02, exit_layer: int = 1,
+                      energy_prior_j: float = 1.0,
+                      energy_model=None) -> Replica:
+    """One fleet node over a LIVE execution backend (real jit'd model,
+    measured walltimes) — same ``Replica`` surface as the virtual-time
+    nodes, so routers/autoscalers/scenarios cannot tell them apart.
+
+    ``engine`` (a ``ClassifierEngine``) may be shared across the
+    classifier-backed replicas of a pool: the jit caches are stateless
+    per call, and each adapter keeps its own queue and free-at horizon
+    (its own node clock).  The gated kind compiles its own fused step.
+    """
+    from repro.core.controller import AdmissionController
+    from repro.core.energy import EnergyModel
+    from repro.serving.adapters import (ClassifierEngineAdapter,
+                                        GatedEngineAdapter)
+    from repro.serving.engine import ClassifierEngine
+
+    if kind not in LIVE_REPLICA_KINDS:
+        raise ValueError(f"unknown live replica kind {kind!r}; "
+                         f"expected one of {LIVE_REPLICA_KINDS}")
+    em = energy_model or EnergyModel()
+    if controller is None:
+        controller = AdmissionController(enabled=False,
+                                         log_history=False)
+
+    if kind == PATH_GATED:
+        port = GatedEngineAdapter(cfg, params, batch=max_batch,
+                                  exit_layer=exit_layer,
+                                  queue_window_s=queue_window_s)
+    else:
+        if engine is None:
+            engine = ClassifierEngine(cfg, params,
+                                      exit_layer=exit_layer)
+        port = ClassifierEngineAdapter(
+            engine, max_batch=max_batch,
+            queue_window_s=(queue_window_s
+                            if kind == PATH_DYNAMIC_BATCH else 0.0))
+    server = Server(port, ServerConfig(path=kind, energy_model=em),
+                    middleware=[AdmissionMiddleware(controller)])
+    return Replica(name=name, kind=kind, server=server,
+                   controller=controller,
+                   energy_prior_j=energy_prior_j, energy_model=em)
+
+
+def build_live_fleet(cfg: dict, params: dict,
+                     kinds=LIVE_REPLICA_KINDS, *,
+                     controller_factory=None, max_batch: int = 8,
+                     queue_window_s: float = 0.02, exit_layer: int = 1,
+                     seq_len: int = 32, calibrate: bool = True,
+                     engine=None) -> ReplicaPool:
+    """The ROADMAP's live-engine fleet: a small heterogeneous pool over
+    the real ``ClassifierEngineAdapter``/``GatedEngineAdapter``
+    backends (measured walltimes advance the virtual clock), driven by
+    the same ``FleetSimulator``/scenario suite as the sim fleet.
+
+    One ``ClassifierEngine`` is shared by the classifier-backed
+    replicas (jit compiles once per bucket fleet-wide); pass
+    ``engine`` to share it across POOLS too (callers building several
+    pools over the same model skip recompiling every bucket).  With
+    ``calibrate`` the router's cold-start energy priors come from
+    measured per-bucket step times instead of a flat guess — the same
+    honest-at-half-fill shape ``make_sim_replica`` uses.
+    """
+    from repro.core.energy import EnergyModel
+    from repro.serving.engine import ClassifierEngine
+
+    for k in kinds:
+        if k not in LIVE_REPLICA_KINDS:
+            raise ValueError(f"unknown live replica kind {k!r}; "
+                             f"expected one of {LIVE_REPLICA_KINDS}")
+    em = EnergyModel()
+    # the shared classifier engine backs only the direct/dynamic-batch
+    # replicas (the gated kind compiles its own fused step) — don't
+    # build or calibrate it for a gated-only pool
+    if engine is None and set(kinds) - {PATH_GATED}:
+        engine = ClassifierEngine(cfg, params, exit_layer=exit_layer)
+    priors = {k: 1.0 for k in LIVE_REPLICA_KINDS}
+    if calibrate and engine is not None:
+        half = max(max_batch // 2, 1)
+        times = engine.calibrate(seq_len=seq_len,
+                                 buckets=(1, half, max_batch))
+        priors[PATH_DIRECT] = em.p_active * times[1]
+        priors[PATH_DYNAMIC_BATCH] = em.p_active * times[half] / half
+        # only the gate's capacity bucket (default B//2) pays
+        # full-model compute; the in-graph proxy pass rides in the
+        # same fused step, so per request the gate starts ~half the
+        # dynamic-batch cost until its own EWMA takes over
+        priors[PATH_GATED] = em.p_active * times[half] / half / 2
+
+    replicas = []
+    for i, kind in enumerate(kinds):
+        ctrl = (controller_factory(kind, i)
+                if controller_factory is not None else None)
+        replicas.append(make_live_replica(
+            f"{kind}-{i}", kind, cfg, params, engine=engine,
+            controller=ctrl, max_batch=max_batch,
+            queue_window_s=queue_window_s, exit_layer=exit_layer,
+            energy_prior_j=priors[kind], energy_model=em))
     return ReplicaPool(replicas)
 
 

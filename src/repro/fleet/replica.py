@@ -9,30 +9,36 @@ the per-replica marginal-energy signal (the controller's
 traffic has been observed).
 
 The module also provides the four *virtual-time* simulation engines a
-heterogeneous fleet is built from — one per execution-path character:
+heterogeneous fleet is built from — one per execution-path character.
+None of them model scheduling themselves: they wrap the REAL
+scheduling primitives the serving layer runs on (the way
+``OracleEngine`` does), so the fleet sweep and the Table-2 benchmark
+share one batching model:
 
   - :class:`SimDirectEngine`      ORT/FastAPI-style: serial, low fixed
-                                  cost, pays full marginal compute per
-                                  request.
-  - :class:`SimBatchEngine`       Triton-style managed batching: high
-                                  fixed (orchestration) cost amortised
-                                  across the fused batch.
-  - :class:`SimGatedEngine`       in-graph admission: the controller
-                                  snapshot gates each fused batch and
-                                  only admitted requests pay marginal
-                                  compute (skips answered by the proxy).
-  - :class:`SimContinuousEngine`  slot-pool decode: concurrent slots,
-                                  small marginal cost, per-request
-                                  startup overhead.
+                                  cost — a ``serving.batcher.DirectPath``.
+  - :class:`SimBatchEngine`       Triton-style managed batching with
+                                  ``preferred_sizes`` fidelity — a
+                                  ``serving.batcher.DynamicBatcher``.
+  - :class:`SimGatedEngine`       in-graph admission — the shared
+                                  ``BatchQueue``/``ServiceLine`` cores
+                                  plus the gate math extracted from
+                                  ``serving.gated`` (``gate_objective``/
+                                  ``gate_admit``); only admitted
+                                  requests pay marginal compute.
+  - :class:`SimContinuousEngine`  slot-pool decode — the
+                                  ``serving.continuous.SlotClock``
+                                  virtual-time core of the decode pool.
 
-All four speak the :class:`~repro.serving.api.EnginePort` protocol plus
-one fleet extension — ``pressure(now)`` — the seconds of queued/backlog
-work, which is the congestion signal the router and autoscaler use
-(``LoadState.queue_depth`` alone misses a serial backend's backlog).
-Behaviour (predictions, proxy predictions, entropy) comes from a
-precomputed :class:`~repro.serving.simulator.Oracle`, so fleet sweeps
-over tens of thousands of requests run in milliseconds and are exactly
-reproducible.
+All four speak the full :class:`~repro.serving.api.EnginePort`
+protocol — including ``pressure(now)``, the uniform backlog-seconds
+congestion signal the router and autoscaler read (``LoadState.
+queue_depth`` alone misses a serial backend's backlog).  Behaviour
+(predictions, proxy predictions, entropy) comes from a precomputed
+:class:`~repro.serving.simulator.Oracle`, so fleet sweeps over tens of
+thousands of requests run in milliseconds and are exactly
+reproducible.  For a fleet over the LIVE engines instead, see
+``repro.fleet.pool.build_live_fleet``.
 """
 from __future__ import annotations
 
@@ -48,6 +54,10 @@ from repro.serving.api import (PATH_CONTINUOUS, PATH_DIRECT,
                                AdmissionMiddleware, Completion,
                                EngineCapabilities, LoadState, Server,
                                ServerConfig, TriageResult)
+from repro.serving.batcher import (BatchQueue, DirectPath,
+                                   DynamicBatcher, ServiceLine)
+from repro.serving.continuous import SlotClock
+from repro.serving.gated import GateParams, gate_admit, gate_objective
 from repro.serving.simulator import Oracle
 
 # lifecycle states (drain is synchronous in virtual time, so there is
@@ -89,26 +99,31 @@ class _SimEngineBase:
 
 @dataclass
 class SimDirectEngine(_SimEngineBase):
-    """Serial per-request execution (FastAPI+ORT analogue).
+    """Serial per-request execution (FastAPI+ORT analogue) over the
+    real ``DirectPath`` scheduler.
 
-    No queue — arrivals serialise behind ``server_free_at`` — so the
-    congestion signal is the backlog *time*, not a queue depth.
+    No queue — arrivals serialise behind the path's ``ServiceLine`` —
+    so the congestion signal is the backlog *time*, not a queue depth.
     ``load()`` converts that backlog into an equivalent queue depth at
     the last observed clock so the admission controller's C(x) leg
     still sees saturation.
     """
-    _free_at: float = field(default=0.0, init=False)
+    _core: DirectPath = field(init=False, repr=False)
     _now: float = field(default=0.0, init=False)
 
+    def __post_init__(self):
+        self._core = DirectPath(self.latency)
+
     def warmup(self, ctx) -> None:
-        self._free_at = self._now = 0.0
+        self._core.reset()
+        self._now = 0.0
 
     def capabilities(self) -> EngineCapabilities:
         return EngineCapabilities(name="sim-direct", kind="classify",
                                   paths=(PATH_DIRECT,))
 
     def pressure(self, now: float) -> float:
-        return max(self._free_at - now, 0.0)
+        return self._core.backlog(now)
 
     def load(self) -> LoadState:
         step = max(self.latency.step_time(1), 1e-9)
@@ -121,12 +136,10 @@ class SimDirectEngine(_SimEngineBase):
 
     def submit(self, req, path, now, ctx) -> list[Completion]:
         self._now = max(self._now, now)
-        start = max(now, self._free_at)
-        finish = start + self.latency.step_time(1)
-        self._free_at = finish
+        b = self._core.serve(req, now)
         return [Completion([req],
                            [int(self.oracle.full_pred[req.rid])],
-                           PATH_DIRECT, start, finish)]
+                           PATH_DIRECT, b.t_start, b.t_finish)]
 
     def drain(self, now, ctx) -> list[Completion]:
         self._now = max(self._now, now)
@@ -134,96 +147,92 @@ class SimDirectEngine(_SimEngineBase):
 
 
 @dataclass
-class _SimQueuedEngine(_SimEngineBase):
-    """Shared window/size batching machinery: requests queue until
-    ``max_batch`` or ``queue_window_s`` since the oldest arrival;
-    subclasses define what one flush does."""
+class SimBatchEngine(_SimEngineBase):
+    """Managed dynamic batching (Triton analogue) over the real
+    ``DynamicBatcher``: the fused batch pays one fixed orchestration
+    cost plus per-item marginal compute, and timeout flushes round
+    down to Triton-style ``preferred_sizes`` (default: powers of two
+    up to ``max_batch``; pass ``()`` to disable)."""
     max_batch: int = 32
     queue_window_s: float = 0.02
+    preferred_sizes: tuple | None = None
 
-    _queue: list = field(default_factory=list, init=False)
-    _free_at: float = field(default=0.0, init=False)
+    _core: DynamicBatcher = field(init=False, repr=False)
+
+    def __post_init__(self):
+        if self.preferred_sizes is None:
+            self.preferred_sizes = tuple(
+                p for p in (4, 8, 16, 32, 64, 128)
+                if p <= self.max_batch)
+        self._core = DynamicBatcher(self.latency,
+                                    max_batch_size=self.max_batch,
+                                    queue_window_s=self.queue_window_s,
+                                    preferred_sizes=self.preferred_sizes)
 
     def warmup(self, ctx) -> None:
-        self._queue.clear()
-        self._free_at = 0.0
-
-    def pressure(self, now: float) -> float:
-        backlog = max(self._free_at - now, 0.0)
-        if self._queue:
-            backlog += self.latency.step_time(len(self._queue))
-        return backlog
-
-    def load(self) -> LoadState:
-        return LoadState(queue_depth=len(self._queue),
-                         batch_fill=len(self._queue)
-                         / max(self.max_batch, 1))
-
-    def submit(self, req, path, now, ctx) -> list[Completion]:
-        out = self.step(now, ctx)
-        self._queue.append(req)
-        if len(self._queue) >= self.max_batch:
-            out.extend(self._flush(now, ctx))
-        return out
-
-    def step(self, now, ctx) -> list[Completion]:
-        out = []
-        while self._queue:
-            deadline = self._queue[0].arrival_s + self.queue_window_s
-            if deadline <= now:
-                out.extend(self._flush(deadline, ctx))
-            else:
-                break
-        return out
-
-    def drain(self, now, ctx) -> list[Completion]:
-        out = []
-        while self._queue:
-            out.extend(self._flush(
-                max(now, self._queue[0].arrival_s + self.queue_window_s),
-                ctx))
-        return out
-
-    def _flush(self, t: float, ctx) -> list[Completion]:
-        raise NotImplementedError
-
-
-@dataclass
-class SimBatchEngine(_SimQueuedEngine):
-    """Managed dynamic batching (Triton analogue): the fused batch pays
-    one fixed orchestration cost plus per-item marginal compute."""
+        self._core.reset()
 
     def capabilities(self) -> EngineCapabilities:
         return EngineCapabilities(name="sim-batch", kind="classify",
                                   paths=(PATH_DYNAMIC_BATCH,))
 
-    def _flush(self, t: float, ctx) -> list[Completion]:
-        reqs, self._queue = (self._queue[:self.max_batch],
-                             self._queue[self.max_batch:])
-        start = max(t, self._free_at)
-        finish = start + self.latency.step_time(len(reqs))
-        self._free_at = finish
-        return [Completion(
-            reqs, [int(self.oracle.full_pred[r.rid]) for r in reqs],
-            PATH_DYNAMIC_BATCH, start, finish)]
+    def pressure(self, now: float) -> float:
+        return self._core.backlog(now)
+
+    def load(self) -> LoadState:
+        return LoadState(queue_depth=self._core.queue_depth,
+                         batch_fill=self._core.fill)
+
+    def _completion(self, b) -> Completion:
+        return Completion(
+            b.requests,
+            [int(self.oracle.full_pred[r.rid]) for r in b.requests],
+            PATH_DYNAMIC_BATCH, b.t_start, b.t_finish)
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        return [self._completion(b) for b in self._core.submit(req, now)]
+
+    def step(self, now, ctx) -> list[Completion]:
+        return [self._completion(b) for b in self._core.poll(now)]
+
+    def drain(self, now, ctx) -> list[Completion]:
+        return [self._completion(b) for b in self._core.drain(now)]
 
 
 @dataclass
-class SimGatedEngine(_SimQueuedEngine):
+class SimGatedEngine(_SimEngineBase):
     """In-graph admission (the TPU-native gated step, virtual time).
 
-    Batches like the dynamic batcher, but each flush reads the
-    controller snapshot ``(tau, e_norm, c_norm)`` through
-    ``ctx.snapshot`` and gates per request on
-    ``J = (L_n + e_norm + c_norm) / 3 <= tau`` — the same structure as
-    ``core.controller.gate_batch``.  Only admitted requests pay
-    marginal compute (skips are answered by the proxy prediction), so
-    the batch walltime — and the joules the admission middleware feeds
-    back into the EWMA — shrinks with the skip rate.
+    Queues through the shared ``BatchQueue`` window/size policy and
+    serialises on a ``ServiceLine`` — the same cores ``DynamicBatcher``
+    is built from (no preferred-size rounding: the gate prices per
+    admitted request, not per batch shape).  Each formed batch reads
+    the controller snapshot ``(tau, e_norm, c_norm)`` through
+    ``ctx.snapshot`` and gates per request with the SAME
+    ``gate_objective``/``gate_admit`` math the jit'd
+    ``make_gated_classify_step`` fuses on device.  Only admitted
+    requests pay marginal compute (skips are answered by the proxy
+    prediction), so the batch walltime — and the joules the admission
+    middleware feeds back into the EWMA — shrinks with the skip rate.
     """
     max_batch: int = 16
+    queue_window_s: float = 0.02
     l_scale: float = float(np.log(2.0))     # binary-entropy normaliser
     rule: str = "le"                        # mirror GateParams.rule
+
+    _window: BatchQueue = field(init=False, repr=False)
+    _line: ServiceLine = field(init=False, repr=False)
+    _gate: GateParams = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self._window = BatchQueue(max_batch_size=self.max_batch,
+                                  queue_window_s=self.queue_window_s)
+        self._line = ServiceLine()
+        self._gate = GateParams(rule=self.rule)
+
+    def warmup(self, ctx) -> None:
+        self._window.reset()
+        self._line.reset()
 
     def capabilities(self) -> EngineCapabilities:
         return EngineCapabilities(name="sim-gated", kind="classify",
@@ -233,36 +242,54 @@ class SimGatedEngine(_SimQueuedEngine):
     def triage(self, req, now, ctx) -> TriageResult:
         return TriageResult(L=None)        # the gate runs in-graph
 
-    def _flush(self, t: float, ctx) -> list[Completion]:
-        reqs, self._queue = (self._queue[:self.max_batch],
-                             self._queue[self.max_batch:])
+    def pressure(self, now: float) -> float:
+        backlog = self._line.backlog(now)
+        if self._window.queue:
+            backlog += self.latency.step_time(len(self._window.queue))
+        return backlog
+
+    def load(self) -> LoadState:
+        return LoadState(queue_depth=self._window.queue_depth,
+                         batch_fill=self._window.fill)
+
+    def submit(self, req, path, now, ctx) -> list[Completion]:
+        return [self._execute(b, ctx)
+                for b in self._window.submit(req, now)]
+
+    def step(self, now, ctx) -> list[Completion]:
+        return [self._execute(b, ctx) for b in self._window.poll(now)]
+
+    def drain(self, now, ctx) -> list[Completion]:
+        return [self._execute(b, ctx) for b in self._window.drain(now)]
+
+    def _execute(self, b, ctx) -> Completion:
+        reqs, t = b.requests, b.t_formed
         tau, e_norm, c_norm = ctx.snapshot(t)
         ent = np.array([float(self.oracle.entropy[r.rid]) for r in reqs])
         l_n = np.clip(ent / max(self.l_scale, 1e-9), 0.0, 1.0)
-        J = (l_n + e_norm + c_norm) / 3.0
-        admit = (J <= tau) if self.rule == "le" else (J >= tau)
+        J = gate_objective(l_n, e_norm, c_norm, self._gate)
+        admit = gate_admit(J, tau, self._gate.rule)
         n_admit = int(admit.sum())
         outputs = [int(self.oracle.full_pred[r.rid]) if a
                    else int(self.oracle.proxy_pred[r.rid])
                    for r, a in zip(reqs, admit)]
-        start = max(t, self._free_at)
         # fixed cost covers the in-graph proxy pass over the whole
         # batch; only the admitted bucket pays full-model compute
-        finish = start + (self.latency.t_fixed_s
-                          + n_admit * self.latency.t_tok_s)
-        self._free_at = finish
-        return [Completion(
+        start, finish = self._line.reserve(
+            t, self.latency.t_fixed_s + n_admit * self.latency.t_tok_s)
+        return Completion(
             requests=reqs, outputs=outputs, path=PATH_GATED,
             t_start=start, t_finish=finish,
             admit_mask=[bool(a) for a in admit],
             extras={"tau": float(tau), "e_norm": float(e_norm),
                     "c_norm": float(c_norm)},
-            per_request=[{"entropy": float(e)} for e in ent])]
+            per_request=[{"entropy": float(e)} for e in ent])
 
 
 @dataclass
 class SimContinuousEngine(_SimEngineBase):
-    """Slot-pool decode (vLLM-style continuous batching, virtual time).
+    """Slot-pool decode (vLLM-style continuous batching, virtual time)
+    over the ``SlotClock`` core extracted from ``serving.continuous``.
 
     ``n_slots`` requests run concurrently; each pays a startup fixed
     cost plus ``service_tokens`` marginal steps.  Busy time sums over
@@ -272,14 +299,14 @@ class SimContinuousEngine(_SimEngineBase):
     n_slots: int = 8
     service_tokens: int = 16
 
-    _slot_free: list = field(default_factory=list, init=False)
+    _slots: SlotClock = field(init=False, repr=False)
     _now: float = field(default=0.0, init=False)
 
     def __post_init__(self):
-        self._slot_free = [0.0] * self.n_slots
+        self._slots = SlotClock(self.n_slots)
 
     def warmup(self, ctx) -> None:
-        self._slot_free = [0.0] * self.n_slots
+        self._slots.reset()
         self._now = 0.0
 
     def capabilities(self) -> EngineCapabilities:
@@ -287,11 +314,11 @@ class SimContinuousEngine(_SimEngineBase):
                                   paths=(PATH_CONTINUOUS,))
 
     def pressure(self, now: float) -> float:
-        return max(min(self._slot_free) - now, 0.0)
+        return self._slots.pressure(now)
 
     def load(self) -> LoadState:
         # occupancy at the last observed clock: slots still serving
-        busy = sum(f > self._now for f in self._slot_free)
+        busy = self._slots.busy(self._now)
         return LoadState(queue_depth=busy,
                          batch_fill=busy / max(self.n_slots, 1))
 
@@ -301,15 +328,13 @@ class SimContinuousEngine(_SimEngineBase):
 
     def submit(self, req, path, now, ctx) -> list[Completion]:
         self._now = max(self._now, now)
-        i = int(np.argmin(self._slot_free))
-        start = max(now, self._slot_free[i])
-        finish = start + (self.latency.t_fixed_s
-                          + self.service_tokens * self.latency.t_tok_s)
-        self._slot_free[i] = finish
+        slot, start, finish = self._slots.reserve(
+            now, self.latency.t_fixed_s
+            + self.service_tokens * self.latency.t_tok_s)
         return [Completion([req],
                            [int(self.oracle.full_pred[req.rid])],
                            PATH_CONTINUOUS, start, finish,
-                           extras={"slot": i})]
+                           extras={"slot": slot})]
 
     def drain(self, now, ctx) -> list[Completion]:
         self._now = max(self._now, now)
@@ -383,11 +408,10 @@ class Replica:
         return self.server.engine.load()
 
     def pressure(self, now: float) -> float:
-        """Seconds of backlog/queued work at ``now``."""
-        eng = self.server.engine
-        if hasattr(eng, "pressure"):
-            return float(eng.pressure(now))
-        return 0.01 * eng.load().queue_depth
+        """Seconds of backlog/queued work at ``now`` — the uniform
+        ``EnginePort.pressure`` signal (``LoadState``-derived default
+        for engines that predate the protocol extension)."""
+        return self.server.pressure(now)
 
     def joules_per_request(self) -> float:
         """Marginal-energy signal: the controller's EnergyMeter EWMA,

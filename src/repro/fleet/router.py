@@ -7,7 +7,10 @@ routable replica as
 
 with marginal energy from the replica's closed-loop EnergyMeter EWMA
 (analytic prior before traffic) and congestion from the replica's
-backlog pressure relative to the request's SLO.  Replicas are then
+backlog pressure relative to the request's SLO.  Pressure is the
+protocol-level ``EnginePort.pressure(now)`` signal, so the same
+policies route oracle-backed sim replicas and live-engine replicas
+(``build_live_fleet``) without knowing which they hold.  Replicas are
 visited in score order and the request lands in the FIRST ACCEPTABLE
 BASIN — acceptable meaning the replica's own controller snapshot
 satisfies ``J <= tau(t)`` — following the paper's protein-folding

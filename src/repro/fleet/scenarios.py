@@ -21,11 +21,21 @@ replicas execute against.  Deterministic per seed.
                              whose proxy answers are coin flips —
                              admission controllers must spend energy or
                              accuracy, never both saved.
+
+Two loaders extend the same surface beyond the synthetic builders:
+:func:`from_trace` replays a recorded arrival/entropy trace (JSON or
+CSV) as a ``Scenario``, and :func:`with_payloads` attaches real
+per-request payloads (token ids) so a scenario's traffic shape can
+drive the LIVE engines (``repro.fleet.pool.build_live_fleet``) instead
+of the oracle-backed virtual-time replicas.
 """
 from __future__ import annotations
 
+import csv
+import json
 import math
-from dataclasses import dataclass
+import os
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -203,6 +213,150 @@ def low_confidence_flood(n: int = 2000, *, qps: float = 80.0,
         oracle=oracle,
         description=(f"{qps} qps, x{flood_x} high-entropy flood at "
                      f"t={flood_at_s}s for {flood_len_s}s"))
+
+
+# ---------------------------------------------------------------------------
+# trace replay + live payloads
+# ---------------------------------------------------------------------------
+
+_TRACE_FIELDS = ("arrival_s", "entropy", "label", "tenant", "slo_s")
+
+
+def _require_binary_labels(labels: np.ndarray, where: str) -> None:
+    """The whole scenario/oracle surface is a two-class task (synthetic
+    proxies are derived as ``1 - label`` flips) — reject anything else
+    at the boundary instead of silently producing invalid predictions
+    and garbage accuracy."""
+    bad = np.setdiff1d(np.unique(labels), (0, 1))
+    if bad.size:
+        raise ValueError(
+            f"{where}: labels must be binary (0/1) — the oracle "
+            f"synthesises proxy predictions as label flips — got "
+            f"values {bad.tolist()}")
+
+
+def _trace_records(path: str) -> tuple[list[dict], dict]:
+    """Read trace records from JSON (a list, or ``{"name":..,
+    "slo_s":.., "requests": [...]}``) or CSV (header row; ``arrival_s``
+    required, the rest optional)."""
+    ext = os.path.splitext(path)[1].lower()
+    meta: dict = {}
+    if ext == ".csv":
+        with open(path, newline="") as f:
+            rows = list(csv.DictReader(f))
+    else:
+        with open(path) as f:
+            doc = json.load(f)
+        if isinstance(doc, dict):
+            rows = doc.get("requests", [])
+            meta = {k: v for k, v in doc.items() if k != "requests"}
+        else:
+            rows = doc
+    if not rows:
+        raise ValueError(f"trace {path!r} contains no requests")
+    out = []
+    for i, r in enumerate(rows):
+        if "arrival_s" not in r or r["arrival_s"] in ("", None):
+            raise ValueError(
+                f"trace {path!r} record {i} has no arrival_s: {r}")
+        rec = {"arrival_s": float(r["arrival_s"])}
+        for k in _TRACE_FIELDS[1:]:
+            v = r.get(k)
+            if v not in ("", None):
+                rec[k] = (str(v) if k == "tenant" else float(v))
+        out.append(rec)
+    return out, meta
+
+
+def from_trace(path: str, *, name: str | None = None,
+               proxy_acc: float = 0.85, seed: int = 0,
+               slo_s: float | None = None) -> Scenario:
+    """Replay a recorded arrival/entropy trace through the same
+    :class:`Scenario` surface the synthetic builders fill, so
+    production traces and the paper's workloads run under identical
+    routing/scaling/admission policies.
+
+    Accepts JSON (a list of records, or ``{"name", "slo_s",
+    "requests": [...]}``) and CSV (header row).  Per record only
+    ``arrival_s`` is required; ``entropy``, ``label``, ``tenant`` and
+    ``slo_s`` are honoured when present and drawn deterministically
+    (per ``seed``, like the synthetic builders) when absent.  Arrivals
+    are sorted; the synthesised ``Oracle`` keeps ``proxy_acc`` proxy
+    agreement against the (recorded or drawn) labels.
+    """
+    records, meta = _trace_records(path)
+    records.sort(key=lambda r: r["arrival_s"])
+    n = len(records)
+    rng = np.random.default_rng(seed + 7)
+
+    labels = np.array([int(r["label"]) if "label" in r
+                       else int(rng.integers(0, 2)) for r in records])
+    _require_binary_labels(labels, f"trace {path!r}")
+    ent = np.array([float(r["entropy"]) if "entropy" in r
+                    else float(rng.uniform(0.0, 0.7)) for r in records])
+    flip = rng.random(n) < (1 - proxy_acc)
+    proxy = np.where(flip, 1 - labels, labels)
+    oracle = Oracle(full_pred=labels.copy(), proxy_pred=proxy,
+                    entropy=ent, labels=labels,
+                    proxy_latency=LatencyModel(0.0002, 0.0))
+
+    requests = []
+    for i, r in enumerate(records):
+        md = {k: r[k] for k in ("tenant", "slo_s") if k in r}
+        requests.append(InferRequest(
+            rid=i, arrival_s=r["arrival_s"], label=int(labels[i]),
+            entropy_hint=float(ent[i]), metadata=md))
+    sc_name = name or meta.get("name") or os.path.splitext(
+        os.path.basename(path))[0]
+    return Scenario(
+        name=str(sc_name), requests=requests, oracle=oracle,
+        description=f"trace replay of {os.path.basename(path)} "
+                    f"({n} requests)",
+        slo_s=float(slo_s if slo_s is not None
+                    else meta.get("slo_s", 0.25)))
+
+
+def with_payloads(scenario: Scenario, payloads,
+                  labels=None) -> Scenario:
+    """Clone a scenario's trace with real per-request payloads (token
+    ids) so the same arrival/entropy shape can drive LIVE engines.
+    ``labels`` (optional) replace the synthetic labels with the
+    dataset's, so fleet accuracy measures the real model — the oracle
+    is REBUILT onto the new labels (same per-request proxy-flip
+    pattern, same entropies), so running the returned scenario through
+    virtual-time replicas stays self-consistent too."""
+    if len(payloads) < scenario.n:
+        raise ValueError(
+            f"need >= {scenario.n} payloads for scenario "
+            f"{scenario.name!r}, got {len(payloads)}")
+    oracle = scenario.oracle
+    if labels is not None:
+        if len(labels) < scenario.n:
+            raise ValueError(
+                f"need >= {scenario.n} labels for scenario "
+                f"{scenario.name!r}, got {len(labels)}")
+        new = np.asarray(labels[:scenario.n]).astype(
+            oracle.labels.dtype if oracle.labels is not None else int)
+        _require_binary_labels(new, f"with_payloads({scenario.name!r})")
+        # carry the scenario's proxy-disagreement pattern onto the new
+        # labels (a flood's coin-flip proxy stays a coin flip)
+        flip = (oracle.proxy_pred != oracle.labels
+                if oracle.labels is not None
+                else np.zeros(scenario.n, bool))
+        oracle = Oracle(full_pred=new.copy(),
+                        proxy_pred=np.where(flip, 1 - new, new),
+                        entropy=oracle.entropy.copy(), labels=new,
+                        proxy_latency=oracle.proxy_latency)
+    requests = [
+        replace(r, payload=payloads[i],
+                label=(int(labels[i]) if labels is not None
+                       else r.label),
+                metadata=dict(r.metadata))
+        for i, r in enumerate(scenario.requests)]
+    return Scenario(
+        name=scenario.name, requests=requests, oracle=oracle,
+        description=f"{scenario.description} (live payloads)",
+        slo_s=scenario.slo_s)
 
 
 SCENARIOS = {

@@ -24,6 +24,13 @@ decision:
         --scenario diurnal --policy round-robin --no-autoscale
     PYTHONPATH=src python -m repro.launch.serve --fleet \
         --fleet-kinds direct,direct,dynamic-batch,continuous-decode
+
+``--fleet-live`` swaps the oracle-backed virtual-time replicas for the
+LIVE engine adapters (real jit'd models, measured walltimes) — the
+same router/autoscaler/scenario machinery over real execution:
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet-live \
+        --requests 200 --max-batch 8 --policy energy-aware
 """
 from __future__ import annotations
 
@@ -156,16 +163,20 @@ def serve_classifier(args) -> dict:
 
 
 def serve_fleet(args) -> dict:
-    """Run a traffic scenario over a heterogeneous replica fleet."""
+    """Run a traffic scenario over a heterogeneous replica fleet —
+    oracle-backed virtual-time replicas by default, the LIVE engines
+    (real jit'd models, measured walltimes) with ``--fleet-live``."""
     from repro.fleet import (Autoscaler, FleetSimulator,
-                             REPLICA_KINDS, build_sim_fleet,
-                             make_router, make_scenario)
+                             LIVE_REPLICA_KINDS, REPLICA_KINDS,
+                             build_live_fleet, build_sim_fleet,
+                             make_router, make_scenario, with_payloads)
 
     kinds = tuple(k.strip() for k in args.fleet_kinds.split(","))
+    valid = LIVE_REPLICA_KINDS if args.fleet_live else REPLICA_KINDS
     for k in kinds:
-        if k not in REPLICA_KINDS:
+        if k not in valid:
             raise SystemExit(f"unknown replica kind {k!r}; choose from "
-                             f"{REPLICA_KINDS}")
+                             f"{valid}")
 
     scenario = make_scenario(args.scenario, args.requests,
                              qps=args.qps, seed=args.seed)
@@ -175,11 +186,21 @@ def serve_fleet(args) -> dict:
         return make_controller(args.controller, weights=args.weights,
                                target_rate=args.target_rate)
 
-    pool = build_sim_fleet(scenario.oracle, kinds=kinds,
-                           controller_factory=controllers,
-                           max_batch=args.max_batch,
-                           queue_window_s=args.window,
-                           n_slots=args.slots)
+    if args.fleet_live:
+        cfg, params, data = build_classifier(seed=args.seed)
+        toks, labels, _ = data.sample(args.requests)
+        scenario = with_payloads(scenario, toks, labels=labels)
+        pool = build_live_fleet(cfg, params, kinds=kinds,
+                                controller_factory=controllers,
+                                max_batch=args.max_batch,
+                                queue_window_s=args.window,
+                                seq_len=toks.shape[1])
+    else:
+        pool = build_sim_fleet(scenario.oracle, kinds=kinds,
+                               controller_factory=controllers,
+                               max_batch=args.max_batch,
+                               queue_window_s=args.window,
+                               n_slots=args.slots)
     carbon = CarbonTracker(region=args.region)
     sim = FleetSimulator(
         pool, make_router(args.policy),
@@ -188,7 +209,8 @@ def serve_fleet(args) -> dict:
     report = sim.run(scenario.requests)
 
     tracker = Tracker(root=args.runs)
-    run = tracker.start_run(f"fleet-{scenario.name}-{args.policy}")
+    mode = "fleet-live" if args.fleet_live else "fleet"
+    run = tracker.start_run(f"{mode}-{scenario.name}-{args.policy}")
     run.log_params(**{k: str(v) for k, v in vars(args).items()})
     run.log_metrics(0, **{k: v for k, v in report.summary.items()
                           if isinstance(v, (int, float))})
@@ -202,6 +224,7 @@ def serve_fleet(args) -> dict:
     out = {"scenario": scenario.name,
            "description": scenario.description,
            "policy": args.policy,
+           "live": bool(args.fleet_live),
            "autoscale": bool(args.autoscale),
            **report.summary,
            "per_replica": report.per_replica,
@@ -302,6 +325,12 @@ def main():
     # fleet mode
     ap.add_argument("--fleet", action="store_true",
                     help="serve through the multi-replica fleet layer")
+    ap.add_argument("--fleet-live", action="store_true",
+                    help="fleet over the LIVE engine adapters (real "
+                         "jit'd models, measured walltimes) instead of "
+                         "oracle-backed virtual-time replicas; implies "
+                         "--fleet (kinds limited to the classifier "
+                         "paths)")
     ap.add_argument("--scenario", default="flash-crowd",
                     choices=["steady", "flash-crowd", "diurnal",
                              "multi-tenant", "low-confidence-flood"])
@@ -314,6 +343,8 @@ def main():
     ap.add_argument("--no-autoscale", dest="autoscale",
                     action="store_false", default=True)
     args = ap.parse_args()
+    if args.fleet_live:
+        args.fleet = True
     if args.qps is None:
         args.qps = 40.0 if args.fleet else 150.0
 

@@ -27,16 +27,18 @@ from repro.serving.api import (ALL_PATHS, PATH_AUTO, PATH_CONTINUOUS,
                                InferRequest, InferResponse, LoadState,
                                Server, ServerConfig, ServingMiddleware,
                                TelemetryMiddleware, TriageResult,
-                               canonical_path)
-from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
+                               canonical_path, engine_pressure,
+                               load_pressure)
+from repro.serving.batcher import (Batch, BatchQueue, DirectPath,
+                                   DynamicBatcher, ServiceLine)
 from repro.serving.continuous import (ContinuousBatchingEngine,
                                       DecodeSession, GenRequest,
-                                      blocks_for_request,
+                                      SlotClock, blocks_for_request,
                                       pool_hbm_bytes)
 from repro.serving.engine import (ClassifierEngine, GenerationEngine,
                                   bucket_size)
-from repro.serving.gated import (GateParams, make_gated_classify_step,
-                                 serve_gated)
+from repro.serving.gated import (GateParams, gate_admit, gate_objective,
+                                 make_gated_classify_step, serve_gated)
 from repro.serving.simulator import (ClosedLoopSimulator, Oracle,
                                      ServedRecord, SimMetrics)
 from repro.serving.workload import (Request, bursty_arrivals,
@@ -51,16 +53,17 @@ __all__ = [
     "AdmissionMiddleware", "Completion", "EngineCapabilities",
     "EnginePort", "InferRequest", "InferResponse", "LoadState",
     "Server", "ServerConfig", "ServingMiddleware", "TelemetryMiddleware",
-    "TriageResult", "canonical_path",
+    "TriageResult", "canonical_path", "engine_pressure", "load_pressure",
     # adapters
     "CallableEngineAdapter", "ClassifierEngineAdapter",
     "ContinuousEngineAdapter", "GatedEngineAdapter", "OracleEngine",
     # building blocks + legacy surface
-    "Batch", "DirectPath", "DynamicBatcher",
+    "Batch", "BatchQueue", "DirectPath", "DynamicBatcher", "ServiceLine",
     "ContinuousBatchingEngine", "DecodeSession", "GenRequest",
-    "blocks_for_request", "pool_hbm_bytes",
+    "SlotClock", "blocks_for_request", "pool_hbm_bytes",
     "ClassifierEngine", "GenerationEngine", "bucket_size",
-    "GateParams", "make_gated_classify_step", "serve_gated",
+    "GateParams", "gate_admit", "gate_objective",
+    "make_gated_classify_step", "serve_gated",
     "ClosedLoopSimulator", "Oracle", "ServedRecord", "SimMetrics",
     "Request", "bursty_arrivals", "closed_loop_arrivals",
     "nonhomogeneous_arrivals", "poisson_arrivals",

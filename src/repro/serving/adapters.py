@@ -39,8 +39,13 @@ Invariants every adapter upholds (the ``EnginePort`` contract the
   (each ``step``/arrival interleaves one fused decode window with the
   arrival stream).
 - **Pressure/load.**  ``load()`` is a cheap, side-effect-free snapshot
-  (queue depth + batch fill) the router/autoscaler may poll at any
-  time; it must not advance engine state.
+  (queue depth + batch fill) and ``pressure(now)`` the uniform
+  backlog-seconds signal of the ``EnginePort`` protocol; the
+  router/autoscaler may poll both at any time and neither may advance
+  engine state.  Adapters with a free-at horizon report real backlog
+  seconds (committed walltime still ahead of ``now`` plus a
+  ``load_pressure`` estimate for the unserved queue); the rest fall
+  back to the ``LoadState``-derived default.
 """
 from __future__ import annotations
 
@@ -54,8 +59,10 @@ import numpy as np
 
 from repro.serving.api import (PATH_CONTINUOUS, PATH_DIRECT,
                                PATH_DYNAMIC_BATCH, PATH_GATED, Completion,
-                               EngineCapabilities, LoadState, TriageResult)
-from repro.serving.batcher import Batch, DirectPath, DynamicBatcher
+                               EngineCapabilities, LoadState, TriageResult,
+                               load_pressure)
+from repro.serving.batcher import (Batch, BatchQueue, DirectPath,
+                                   DynamicBatcher, ServiceLine)
 from repro.serving.continuous import ContinuousBatchingEngine, GenRequest
 from repro.serving.engine import ClassifierEngine
 from repro.serving.gated import GateParams, make_gated_classify_step
@@ -78,11 +85,17 @@ class OracleEngine:
                                   paths=(PATH_DIRECT, PATH_DYNAMIC_BATCH))
 
     def warmup(self, ctx) -> None:
-        pass
+        self.direct.reset()
+        self.batched.reset()
 
     def load(self) -> LoadState:
         return LoadState(queue_depth=self.batched.queue_depth,
                          batch_fill=self.batched.fill)
+
+    def pressure(self, now: float) -> float:
+        # both lines back one node: committed work on either path plus
+        # a modelled step over whatever the batcher still queues
+        return self.direct.backlog(now) + self.batched.backlog(now)
 
     def triage(self, req, now, ctx) -> TriageResult:
         lat = self.oracle.proxy_latency
@@ -120,22 +133,35 @@ class OracleEngine:
 
 @dataclass
 class ClassifierEngineAdapter:
-    """Real jit'd execution; measured walltimes advance the clock."""
+    """Real jit'd execution; measured walltimes advance the clock.
+
+    Queueing/flush policy is the shared ``BatchQueue`` core and the
+    node clock a ``ServiceLine`` — the SAME primitives the simulated
+    engines wrap — so the only thing live about this adapter is that
+    batch durations are measured, not modelled."""
     engine: ClassifierEngine
     max_batch: int = 32
-    queue_window_s: float = 0.0       # 0 = flush on size / drain only
+    queue_window_s: float = 0.0       # <=0: flush on size / drain only
     triage_enabled: bool = True
 
-    _queue: list = field(default_factory=list, init=False)
-    _free_at: float = field(default=0.0, init=False)
+    _window: BatchQueue = field(init=False, repr=False)
+    _line: ServiceLine = field(init=False, repr=False)
     _warm: set = field(default_factory=set, init=False)
+
+    def __post_init__(self):
+        self._window = BatchQueue(max_batch_size=self.max_batch,
+                                  queue_window_s=self.queue_window_s)
+        self._line = ServiceLine()
 
     def capabilities(self) -> EngineCapabilities:
         return EngineCapabilities(name="classifier", kind="classify",
                                   paths=(PATH_DIRECT, PATH_DYNAMIC_BATCH))
 
     def warmup(self, ctx) -> None:
-        pass                   # compiled lazily per bucket (see _prime)
+        # compiled lazily per bucket (see _prime) — but a fresh session
+        # starts with a clean queue and clock so a pool can be re-run
+        self._window.reset()
+        self._line.reset()
 
     def _prime(self, kind: str, toks: np.ndarray) -> None:
         """Run the jit'd call once untimed so the first *measured*
@@ -151,9 +177,13 @@ class ClassifierEngineAdapter:
             self.engine.classify(toks)
 
     def load(self) -> LoadState:
-        return LoadState(queue_depth=len(self._queue),
-                         batch_fill=len(self._queue)
-                         / max(self.max_batch, 1))
+        return LoadState(queue_depth=self._window.queue_depth,
+                         batch_fill=self._window.fill)
+
+    def pressure(self, now: float) -> float:
+        # measured-walltime horizon + nominal estimate for the queue
+        # (live walltimes are only known after execution)
+        return self._line.backlog(now) + load_pressure(self.load())
 
     def triage(self, req, now, ctx) -> TriageResult:
         if not self.triage_enabled:
@@ -169,44 +199,24 @@ class ClassifierEngineAdapter:
             toks = np.asarray(req.payload)[None]
             self._prime("full", toks)
             preds, dt = self.engine.classify(toks)
-            start = max(now, self._free_at)
-            finish = start + dt
-            self._free_at = finish
+            start, finish = self._line.reserve(now, dt)
             return [Completion([req], [int(preds[0])], PATH_DIRECT,
                                start, finish)]
-        self._queue.append(req)
-        if len(self._queue) >= self.max_batch:
-            return self._flush(now)
-        return []
+        return [self._execute(b) for b in self._window.submit(req, now)]
 
     def step(self, now, ctx) -> list[Completion]:
-        out = []
-        while self._queue and self.queue_window_s > 0:
-            deadline = (self._queue[0].arrival_s + self.queue_window_s)
-            if deadline <= now:
-                out.extend(self._flush(deadline))
-            else:
-                break
-        return out
+        return [self._execute(b) for b in self._window.poll(now)]
 
     def drain(self, now, ctx) -> list[Completion]:
-        out = []
-        while self._queue:
-            t = max(now, self._queue[0].arrival_s + self.queue_window_s)
-            out.extend(self._flush(t))
-        return out
+        return [self._execute(b) for b in self._window.drain(now)]
 
-    def _flush(self, t: float) -> list[Completion]:
-        reqs, self._queue = (self._queue[:self.max_batch],
-                             self._queue[self.max_batch:])
-        toks = np.stack([np.asarray(r.payload) for r in reqs])
+    def _execute(self, b) -> Completion:
+        toks = np.stack([np.asarray(r.payload) for r in b.requests])
         self._prime("full", toks)
         preds, dt = self.engine.classify(toks)
-        start = max(t, self._free_at)
-        finish = start + dt
-        self._free_at = finish
-        return [Completion(reqs, [int(p) for p in preds],
-                           PATH_DYNAMIC_BATCH, start, finish)]
+        start, finish = self._line.reserve(b.t_formed, dt)
+        return Completion(b.requests, [int(p) for p in preds],
+                          PATH_DYNAMIC_BATCH, start, finish)
 
 
 # ---------------------------------------------------------------------------
@@ -225,17 +235,24 @@ class GatedEngineAdapter:
     batch: int = 64
     capacity: int | None = None
     exit_layer: int = 2
+    queue_window_s: float = 0.0       # 0 = flush on size / drain only
     gate: GateParams = field(default_factory=GateParams)
 
     _step: Callable = field(init=False, repr=False)
-    _queue: list = field(default_factory=list, init=False)
-    _free_at: float = field(default=0.0, init=False)
+    _window: BatchQueue = field(init=False, repr=False)
+    _line: ServiceLine = field(init=False, repr=False)
     _warm: bool = field(default=False, init=False)
 
     def __post_init__(self):
         self._step = make_gated_classify_step(
             {**self.cfg}, exit_layer=self.exit_layer,
             capacity=self.capacity, gate=self.gate)
+        # the SAME window/size policy + free-at serialisation the sim
+        # gated engine wraps; a partial batch runs (padded to static
+        # shape) once the oldest queued request's window expires
+        self._window = BatchQueue(max_batch_size=self.batch,
+                                  queue_window_s=self.queue_window_s)
+        self._line = ServiceLine()
 
     def capabilities(self) -> EngineCapabilities:
         return EngineCapabilities(name="gated", kind="classify",
@@ -243,33 +260,33 @@ class GatedEngineAdapter:
                                   in_graph_admission=True)
 
     def warmup(self, ctx) -> None:
-        pass
+        # fresh session, warm jit: the compile flag survives on purpose
+        self._window.reset()
+        self._line.reset()
 
     def load(self) -> LoadState:
-        return LoadState(queue_depth=len(self._queue),
-                         batch_fill=len(self._queue) / max(self.batch, 1))
+        return LoadState(queue_depth=self._window.queue_depth,
+                         batch_fill=self._window.fill)
+
+    def pressure(self, now: float) -> float:
+        return self._line.backlog(now) + load_pressure(self.load())
 
     def triage(self, req, now, ctx) -> TriageResult:
         return TriageResult(L=None)    # proxy pass happens in-graph
 
     def submit(self, req, path, now, ctx) -> list[Completion]:
-        self._queue.append(req)
-        if len(self._queue) >= self.batch:
-            return self._flush(now, ctx)
-        return []
+        return [self._execute(b, ctx)
+                for b in self._window.submit(req, now)]
 
     def step(self, now, ctx) -> list[Completion]:
-        return []
+        return [self._execute(b, ctx) for b in self._window.poll(now)]
 
     def drain(self, now, ctx) -> list[Completion]:
-        out = []
-        while self._queue:
-            out.extend(self._flush(now, ctx))
-        return out
+        return [self._execute(b, ctx)
+                for b in self._window.drain(now)]
 
-    def _flush(self, t: float, ctx) -> list[Completion]:
-        reqs, self._queue = (self._queue[:self.batch],
-                             self._queue[self.batch:])
+    def _execute(self, b: Batch, ctx) -> Completion:
+        reqs, t = b.requests, b.t_formed
         n = len(reqs)
         chunk = np.stack([np.asarray(r.payload) for r in reqs])
         if n < self.batch:             # static-shape pad
@@ -289,17 +306,15 @@ class GatedEngineAdapter:
             self._step(self.params, jnp.asarray(chunk), tau, e_norm,
                        c_norm, n))
         dt = time.perf_counter() - t0
-        start = max(t, self._free_at)
-        finish = start + dt
-        self._free_at = finish
-        return [Completion(
+        start, finish = self._line.reserve(t, dt)
+        return Completion(
             requests=reqs,
             outputs=[int(p) for p in np.asarray(pred[:n])],
             path=PATH_GATED, t_start=start, t_finish=finish,
             admit_mask=[bool(a) for a in np.asarray(admit[:n])],
             extras={"tau": tau, "e_norm": e_norm, "c_norm": c_norm},
             per_request=[{"entropy": float(e)}
-                         for e in np.asarray(ent[:n])])]
+                         for e in np.asarray(ent[:n])])
 
 
 # ---------------------------------------------------------------------------
@@ -333,7 +348,12 @@ class ContinuousEngineAdapter:
                                   paths=(PATH_CONTINUOUS,))
 
     def warmup(self, ctx) -> None:
-        pass
+        # a fresh session opens a fresh DecodeSession lazily; the
+        # engine's jit caches stay warm
+        self._session = None
+        self._by_rid.clear()
+        self._free_at = 0.0
+        self._pending_dt = 0.0
 
     def _ensure_session(self):
         if self._session is None:
@@ -347,6 +367,12 @@ class ContinuousEngineAdapter:
             queue_depth=self._session.n_queued,
             batch_fill=self._session.n_active
             / max(self.engine.n_slots, 1))
+
+    def pressure(self, now: float) -> float:
+        # requests waiting for a slot are the congestion that matters
+        # on the decode pool; in-flight slots turn over every window
+        return (max(self._free_at - now, 0.0)
+                + load_pressure(self.load()))
 
     def triage(self, req, now, ctx) -> TriageResult:
         hint = getattr(req, "entropy_hint", None)
@@ -421,10 +447,13 @@ class CallableEngineAdapter:
                                   paths=(PATH_DIRECT,))
 
     def warmup(self, ctx) -> None:
-        pass
+        self._free_at = 0.0
 
     def load(self) -> LoadState:
         return LoadState()
+
+    def pressure(self, now: float) -> float:
+        return max(self._free_at - now, 0.0)
 
     def triage(self, req, now, ctx) -> TriageResult:
         return TriageResult(L=None)

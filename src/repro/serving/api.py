@@ -146,6 +146,30 @@ class LoadState:
     batch_fill: float = 0.0
 
 
+# nominal per-request service time for the LoadState-derived pressure
+# default — engines that know their service model report real backlog
+# seconds instead
+DEFAULT_SERVICE_S = 0.01
+
+
+def load_pressure(load: LoadState,
+                  service_s: float = DEFAULT_SERVICE_S) -> float:
+    """The ``LoadState``-derived ``pressure(now)`` default: queued
+    requests scaled by a nominal service time.  Engines whose backends
+    expose a free-at horizon (a ``ServiceLine``/``SlotClock`` core)
+    report the real backlog seconds instead."""
+    return float(load.queue_depth) * service_s
+
+
+def engine_pressure(engine, now: float) -> float:
+    """``engine.pressure(now)`` with the ``LoadState``-derived default
+    for engines that predate the protocol extension."""
+    fn = getattr(engine, "pressure", None)
+    if callable(fn):
+        return float(fn(now))
+    return load_pressure(engine.load())
+
+
 @runtime_checkable
 class EnginePort(Protocol):
     """What a backend must provide to serve behind :class:`Server`.
@@ -153,6 +177,14 @@ class EnginePort(Protocol):
     ``submit``/``step``/``drain`` return completed :class:`Completion`s
     (possibly none — e.g. a batcher absorbing the request); the server
     owns everything around them (triage routing, admission, telemetry).
+
+    ``pressure(now)`` is the uniform congestion signal the fleet
+    router/autoscaler/admission read: seconds of queued + in-flight
+    work at ``now``.  It must be side-effect-free (polling never
+    advances clocks or queues).  Engines without a service model may
+    return the :func:`load_pressure` default; callers integrating
+    third-party engines should go through :func:`engine_pressure`,
+    which supplies that default for them.
     """
 
     def capabilities(self) -> EngineCapabilities: ...
@@ -171,6 +203,8 @@ class EnginePort(Protocol):
               ctx: "ServerContext") -> list[Completion]: ...
 
     def load(self) -> LoadState: ...
+
+    def pressure(self, now: float) -> float: ...
 
 
 # -- middleware -------------------------------------------------------------
@@ -551,6 +585,12 @@ class Server:
                 self.log.add(resp)
             for mw in self.middleware:
                 mw.on_completion(comp, resps, ctx)
+
+    # -- signals ------------------------------------------------------------
+    def pressure(self, now: float) -> float:
+        """The engine's backlog seconds at ``now`` (the fleet's uniform
+        congestion signal); side-effect-free."""
+        return engine_pressure(self.engine, now)
 
     # -- reporting ----------------------------------------------------------
     @property

@@ -72,6 +72,44 @@ class GenRequest:
     admitted: bool = True
 
 
+@dataclass
+class SlotClock:
+    """The virtual-time core of the slot-pool decode model.
+
+    ``n_slots`` independent free-at lines — the modelled analogue of
+    :class:`DecodeSession`'s slot bank, where a request occupies one
+    decode slot for its whole service and new work lands in the
+    earliest-free slot.  The fleet's ``SimContinuousEngine`` wraps this
+    instead of re-modelling slot serialisation, so the sim's occupancy
+    and pressure semantics mirror the live engine's: ``pressure(now)``
+    is how long a NEW arrival would wait for a slot (zero while any
+    slot is free), ``busy(now)`` is the live-occupancy count the
+    adapter reports as batch fill.  Side-effect-free to poll."""
+    n_slots: int = 8
+    free_at: list[float] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.free_at:
+            self.free_at = [0.0] * self.n_slots
+
+    def reserve(self, now: float, dur: float) -> tuple[int, float, float]:
+        """Seat ``dur`` seconds of decode in the earliest-free slot."""
+        i = min(range(self.n_slots), key=lambda s: self.free_at[s])
+        start = max(now, self.free_at[i])
+        finish = start + dur
+        self.free_at[i] = finish
+        return i, start, finish
+
+    def pressure(self, now: float) -> float:
+        return max(min(self.free_at) - now, 0.0)
+
+    def busy(self, now: float) -> int:
+        return sum(f > now for f in self.free_at)
+
+    def reset(self) -> None:
+        self.free_at = [0.0] * self.n_slots
+
+
 # ---------------------------------------------------------------------------
 # slot writes: batched rows -> pool slots
 # ---------------------------------------------------------------------------

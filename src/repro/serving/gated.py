@@ -36,6 +36,26 @@ class GateParams:
     rule: str = "le"
 
 
+def gate_objective(L_norm, e_norm, c_norm, gate: GateParams = GateParams()):
+    """The gate's cost ``J(x) = (αL + βE + γC) / (α+β+γ)``.
+
+    Array-agnostic on purpose — the in-graph jit step evaluates it on
+    ``jnp`` arrays while the fleet's virtual-time gated engine
+    evaluates the SAME expression on ``np`` arrays, so the sim and the
+    live gate can never drift apart."""
+    den = gate.alpha + gate.beta + gate.gamma
+    return (gate.alpha * L_norm + gate.beta * e_norm
+            + gate.gamma * c_norm) / den
+
+
+def gate_admit(J, tau, rule: str = "le"):
+    """Admission direction: ``rule='le'`` admits low-cost requests
+    (the repo default); ``'ge'`` is the paper's literal Eq. 2 reading
+    (see ``core.controller``).  Array-agnostic like
+    :func:`gate_objective`."""
+    return (J <= tau) if rule == "le" else (J >= tau)
+
+
 def make_gated_classify_step(cfg: dict, *, exit_layer: int = 2,
                              capacity: int | None = None,
                              gate: GateParams = GateParams()
@@ -62,11 +82,10 @@ def make_gated_classify_step(cfg: dict, *, exit_layer: int = 2,
         n_classes = proxy_lg.shape[-1]
         L = ent / jnp.log(n_classes)          # normalised to [0,1]
 
-        # 3: vectorised J(x) vs tau
-        den = gate.alpha + gate.beta + gate.gamma
-        J = (gate.alpha * L + gate.beta * e_norm
-             + gate.gamma * c_norm) / den
-        admit = (J <= tau) if gate.rule == "le" else (J >= tau)
+        # 3: vectorised J(x) vs tau (the shared gate core — the fleet's
+        # virtual-time gated engine runs the same two functions on np)
+        J = gate_objective(L, e_norm, c_norm, gate)
+        admit = gate_admit(J, tau, gate.rule)
         if n_valid is not None:
             # partial batch: zero-pad rows look confident (low J) and
             # would steal capacity from real requests — mask them out

@@ -172,6 +172,29 @@ def test_gated_path_round_trip(model):
                for r in responses)
 
 
+def test_gated_adapter_flushes_on_queue_window(model):
+    """With ``queue_window_s > 0`` a PARTIAL gated batch runs (padded
+    to static shape) once the oldest request's window expires — the
+    same BatchQueue policy the sim gated engine uses — instead of
+    waiting for a full batch or the end-of-run drain."""
+    cfg, params, data = model
+    toks, labels, _ = data.sample(4)
+    server = Server(
+        GatedEngineAdapter(cfg, params, batch=16, exit_layer=1,
+                           queue_window_s=0.02),
+        ServerConfig(path="gated"))
+    server.start()
+    for i in range(4):      # far below batch=16
+        assert server.push(InferRequest(
+            rid=i, arrival_s=0.001 * i, payload=toks[i],
+            label=int(labels[i]))) == []
+    out = server.poke(0.5)  # window long expired -> partial flush
+    assert sorted(r.rid for r in out) == list(range(4))
+    assert all(r.path == PATH_GATED for r in out)
+    # drain finds nothing left: finish reports the same 4 responses
+    assert sorted(r.rid for r in server.finish(0.5)) == list(range(4))
+
+
 def test_continuous_path_round_trip():
     from repro.configs import get_smoke_config
     from repro.models import transformer as tfm

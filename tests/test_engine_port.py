@@ -1,0 +1,182 @@
+"""EnginePort conformance — every engine (oracle, the four sim
+engines, the live adapters) through ONE protocol checklist, so future
+engines can't drift from the contract the Server/fleet rely on:
+
+  - ``capabilities()`` is well-formed and stable;
+  - ``isinstance(engine, EnginePort)`` (the protocol is the surface);
+  - a fresh session carries no backlog (``warmup`` resets state);
+  - ``triage`` returns a ``TriageResult`` with sane L / cost;
+  - ``load()``/``pressure(now)`` are side-effect-free snapshots;
+  - the full ``Server`` lifecycle answers every request exactly once,
+    never before it arrived, and drains to zero pressure.
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import LatencyModel
+from repro.fleet.replica import (SimBatchEngine, SimContinuousEngine,
+                                 SimDirectEngine, SimGatedEngine)
+from repro.serving import (ALL_PATHS, CallableEngineAdapter,
+                           ClassifierEngineAdapter,
+                           ContinuousEngineAdapter, DirectPath,
+                           DynamicBatcher, EnginePort, InferRequest,
+                           Oracle, OracleEngine, Server, ServerConfig,
+                           TriageResult)
+
+N_REQ = 8
+LAT = LatencyModel(0.005, 0.001)
+
+
+def _oracle(n=N_REQ, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 2, n)
+    return Oracle(full_pred=labels.copy(),
+                  proxy_pred=labels.copy(),
+                  entropy=rng.uniform(0, 0.6, n), labels=labels,
+                  proxy_latency=LatencyModel(0.0002, 0.0))
+
+
+def _plain_requests(**kw):
+    return [InferRequest(rid=i, arrival_s=0.01 * i, **kw)
+            for i in range(N_REQ)]
+
+
+@pytest.fixture(scope="module")
+def classifier():
+    from repro.models import distilbert
+    cfg = distilbert.config(n_layers=2, d_model=32, n_heads=2,
+                            d_ff=64, vocab=120, max_pos=16)
+    params = distilbert.init(cfg, jax.random.PRNGKey(0))
+    toks = np.random.default_rng(0).integers(
+        0, 120, size=(N_REQ, 12)).astype(np.int32)
+    return cfg, params, toks
+
+
+@pytest.fixture(scope="module")
+def lm():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _case(name, classifier, lm):
+    """-> (engine, requests, server_path) for one conformance case."""
+    oracle = _oracle()
+    if name == "oracle":
+        return (OracleEngine(oracle, DirectPath(LAT),
+                             DynamicBatcher(LAT, max_batch_size=4,
+                                            queue_window_s=0.01)),
+                _plain_requests(), "auto")
+    if name == "sim-direct":
+        return SimDirectEngine(oracle, LAT), _plain_requests(), "direct"
+    if name == "sim-batch":
+        return (SimBatchEngine(oracle, LAT, max_batch=4,
+                               queue_window_s=0.01),
+                _plain_requests(), "dynamic-batch")
+    if name == "sim-gated":
+        return (SimGatedEngine(oracle, LAT, max_batch=4,
+                               queue_window_s=0.01),
+                _plain_requests(), "gated-in-graph")
+    if name == "sim-continuous":
+        return (SimContinuousEngine(oracle, LAT, n_slots=2),
+                _plain_requests(), "continuous-decode")
+    if name == "live-classifier":
+        from repro.serving.engine import ClassifierEngine
+        cfg, params, toks = classifier
+        eng = ClassifierEngineAdapter(
+            ClassifierEngine(cfg, params, exit_layer=1),
+            max_batch=4, queue_window_s=0.01)
+        reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
+                             payload=toks[i]) for i in range(N_REQ)]
+        return eng, reqs, "auto"
+    if name == "live-gated":
+        from repro.serving.adapters import GatedEngineAdapter
+        cfg, params, toks = classifier
+        eng = GatedEngineAdapter(cfg, params, batch=4, exit_layer=1)
+        reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
+                             payload=toks[i]) for i in range(N_REQ)]
+        return eng, reqs, "gated-in-graph"
+    if name == "live-continuous":
+        from repro.serving.continuous import ContinuousBatchingEngine
+        cfg, params = lm
+        eng = ContinuousEngineAdapter(
+            ContinuousBatchingEngine(cfg, params, n_slots=2,
+                                     max_seq=32),
+            prompt_len=8)
+        rng = np.random.default_rng(1)
+        reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
+                             payload=rng.integers(
+                                 0, cfg.vocab, 8).astype(np.int32),
+                             kind="generate", max_new=3)
+                for i in range(N_REQ)]
+        return eng, reqs, "continuous-decode"
+    if name == "callable":
+        fn = jax.jit(lambda x: x)
+        reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
+                             payload=np.float32(i))
+                for i in range(N_REQ)]
+        return CallableEngineAdapter(fn), reqs, "direct"
+    raise AssertionError(name)
+
+
+ENGINES = ("oracle", "sim-direct", "sim-batch", "sim-gated",
+           "sim-continuous", "live-classifier", "live-gated",
+           "live-continuous", "callable")
+
+
+@pytest.mark.parametrize("name", ENGINES)
+def test_engine_port_conformance(name, classifier, lm):
+    engine, requests, path = _case(name, classifier, lm)
+
+    # -- protocol surface ---------------------------------------------------
+    assert isinstance(engine, EnginePort)
+    caps = engine.capabilities()
+    assert caps.name
+    assert caps.kind in ("classify", "generate")
+    assert caps.paths and set(caps.paths) <= set(ALL_PATHS)
+    c2 = engine.capabilities()
+    assert (c2.name, c2.paths) == (caps.name, caps.paths)
+
+    # -- fresh session ------------------------------------------------------
+    server = Server(engine, ServerConfig(path=path))
+    server.start()
+    ctx = server.ctx
+    assert engine.pressure(0.0) == pytest.approx(0.0)
+    assert engine.load().queue_depth == 0
+
+    # -- triage contract ----------------------------------------------------
+    tri = engine.triage(requests[0], requests[0].arrival_s, ctx)
+    assert isinstance(tri, TriageResult)
+    assert tri.L is None or np.isfinite(float(tri.L))
+    assert tri.cost_s >= 0.0
+
+    # -- load/pressure are side-effect-free snapshots -----------------------
+    l1, l2 = engine.load(), engine.load()
+    assert (l1.queue_depth, l1.batch_fill) == (l2.queue_depth,
+                                               l2.batch_fill)
+    now = requests[-1].arrival_s
+    p1, p2 = engine.pressure(now), engine.pressure(now)
+    assert p1 == p2 >= 0.0
+
+    # -- full lifecycle: conservation + causality ---------------------------
+    for r in requests:
+        server.push(r)
+    out = server.finish()
+    assert sorted(r.rid for r in out) == [r.rid for r in requests]
+    for r in out:
+        assert r.t_finish >= r.arrival_s - 1e-9
+        assert r.path in ALL_PATHS + ("skip",)
+
+    # -- drained: pressure decays to zero past the horizon ------------------
+    # (load() may still report in-flight work — it snapshots at the
+    # engine's LAST OBSERVED clock, not at an arbitrary future time)
+    horizon = max(r.t_finish for r in out) + 100.0
+    assert engine.pressure(horizon) == pytest.approx(0.0)

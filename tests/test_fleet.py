@@ -13,10 +13,14 @@ from repro.core import AdmissionController, DecayingThreshold
 from repro.fleet import (ACTIVE, Autoscaler, EnergyAwareRouter,
                          FleetSimulator, LeastLoadedRouter, ReplicaPool,
                          RoundRobinRouter, SCENARIOS, STOPPED,
-                         StaticRouter, build_sim_fleet, make_router,
-                         make_scenario, make_sim_replica)
+                         StaticRouter, build_live_fleet, build_sim_fleet,
+                         from_trace, make_router, make_scenario,
+                         make_sim_replica, with_payloads)
 from repro.fleet.scenarios import (diurnal, flash_crowd,
                                    low_confidence_flood, multi_tenant)
+
+TRACE_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                             "trace_small.json")
 
 KINDS3 = ("direct", "dynamic-batch", "gated-in-graph")
 
@@ -47,6 +51,82 @@ def test_scenario_builders(name):
     assert [r.arrival_s for r in sc2.requests] == ts
     np.testing.assert_array_equal(sc.oracle.full_pred,
                                   sc2.oracle.full_pred)
+
+
+def test_from_trace_json_fixture():
+    sc = from_trace(TRACE_FIXTURE, seed=0)
+    assert sc.name == "recorded-burst"
+    assert sc.n == 14
+    assert sc.slo_s == pytest.approx(0.2)
+    ts = [r.arrival_s for r in sc.requests]
+    assert ts == sorted(ts)
+    # recorded fields are honoured verbatim
+    assert sc.requests[0].entropy_hint == pytest.approx(0.12)
+    assert sc.requests[0].label == 1
+    assert sc.requests[0].metadata == {"tenant": "interactive",
+                                       "slo_s": 0.1}
+    # missing entropy/label are drawn deterministically per seed
+    sc2 = from_trace(TRACE_FIXTURE, seed=0)
+    assert ([r.entropy_hint for r in sc.requests]
+            == [r.entropy_hint for r in sc2.requests])
+    np.testing.assert_array_equal(sc.oracle.labels, sc2.oracle.labels)
+    # a replayed trace runs under the same fleet machinery as any
+    # synthetic scenario
+    rep, _ = _run(sc, RoundRobinRouter())
+    assert sorted(r.rid for r in rep.responses) == list(range(sc.n))
+
+
+def test_from_trace_csv_sorts_and_fills(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("arrival_s,entropy,label\n"
+                 "0.0,0.5,1\n"
+                 "0.1,,0\n"
+                 "0.05,0.2,\n")
+    sc = from_trace(str(p))
+    assert sc.name == "trace"
+    assert [r.arrival_s for r in sc.requests] == [0.0, 0.05, 0.1]
+    assert sc.requests[1].entropy_hint == pytest.approx(0.2)
+    assert all(r.entropy_hint is not None for r in sc.requests)
+
+
+def test_from_trace_rejects_bad_traces(tmp_path):
+    empty = tmp_path / "empty.json"
+    empty.write_text("[]")
+    with pytest.raises(ValueError):
+        from_trace(str(empty))
+    missing = tmp_path / "missing.json"
+    missing.write_text('[{"entropy": 0.4}]')
+    with pytest.raises(ValueError):
+        from_trace(str(missing))
+    # the oracle surface is a two-class task: non-binary recorded
+    # labels must fail loudly, not produce garbage proxy predictions
+    multiclass = tmp_path / "multiclass.json"
+    multiclass.write_text('[{"arrival_s": 0.0, "label": 3}]')
+    with pytest.raises(ValueError, match="binary"):
+        from_trace(str(multiclass))
+
+
+def test_with_payloads_attaches_and_overrides_labels():
+    sc = make_scenario("steady", 20, seed=1)
+    toks = np.arange(20 * 4).reshape(20, 4).astype(np.int32)
+    labels = np.ones(20, np.int64)
+    live = with_payloads(sc, toks, labels=labels)
+    assert live.n == sc.n
+    assert all(r.payload is not None for r in live.requests)
+    assert all(r.label == 1 for r in live.requests)
+    # the oracle follows the override (sim execution stays consistent:
+    # full_pred answers the SAME labels accuracy is scored against)
+    np.testing.assert_array_equal(live.oracle.labels, labels)
+    np.testing.assert_array_equal(live.oracle.full_pred, labels)
+    # the source scenario is untouched
+    assert all(r.payload is None for r in sc.requests)
+    assert live.oracle is not sc.oracle
+    with pytest.raises(ValueError):
+        with_payloads(sc, toks[:5])
+    with pytest.raises(ValueError):
+        with_payloads(sc, toks, labels=labels[:5])
+    with pytest.raises(ValueError, match="binary"):
+        with_payloads(sc, toks, labels=np.full(20, 2))
 
 
 def test_multi_tenant_metadata_and_shares():
@@ -244,3 +324,41 @@ def test_carbon_accounting_in_fleet_report():
     assert rep.carbon["co2_kg"] > 0
     assert rep.summary["energy_j"] == pytest.approx(
         rep.carbon["energy_j"], rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# the live-engine fleet
+# ---------------------------------------------------------------------------
+
+def test_live_fleet_serves_scenario_on_real_engines():
+    """The ROADMAP's live-engine fleet: the same scenario/router/
+    simulator machinery over REAL jit'd backends, with conservation
+    intact and the pool re-runnable (fresh sessions, warm jits)."""
+    import jax
+
+    from repro.models import distilbert
+
+    cfg = distilbert.config(n_layers=2, d_model=32, n_heads=2,
+                            d_ff=64, vocab=120, max_pos=16)
+    params = distilbert.init(cfg, jax.random.PRNGKey(0))
+    sc = flash_crowd(40, qps=60.0, seed=0)
+    toks = np.random.default_rng(0).integers(
+        0, 120, size=(40, 12)).astype(np.int32)
+    live = with_payloads(sc, toks)
+    pool = build_live_fleet(cfg, params, max_batch=4, calibrate=False)
+
+    rep = FleetSimulator(pool, RoundRobinRouter()).run(live.requests)
+    assert sorted(r.rid for r in rep.responses) == list(range(40))
+    assert {r.path for r in rep.responses} == {
+        "direct", "dynamic-batch", "gated-in-graph"}
+    assert rep.summary["energy_j"] > 0
+
+    # re-running the SAME pool must not leak the previous session's
+    # queues or clocks (adapters reset in warmup)
+    rep2 = FleetSimulator(pool, RoundRobinRouter()).run(live.requests)
+    assert sorted(r.rid for r in rep2.responses) == list(range(40))
+
+
+def test_live_fleet_rejects_non_live_kind():
+    with pytest.raises(ValueError):
+        build_live_fleet({}, {}, kinds=("continuous-decode",))

@@ -70,6 +70,40 @@ def test_batcher_serialises_server():
     assert out[1].t_start >= out[0].t_finish   # no overlap on one server
 
 
+def test_batcher_timeout_flush_rounds_to_preferred_size():
+    """Triton's preferred_batch_size semantics on a timeout flush: the
+    batch rounds DOWN to the largest preferred size, and the
+    sub-preferred stragglers stay queued, re-flushing in arrival order
+    at their own (deadline-paced, serialised) flushes."""
+    b = DynamicBatcher(LatencyModel(0.01, 0.001), max_batch_size=32,
+                       queue_window_s=0.05,
+                       preferred_sizes=(4, 8, 16, 32))
+    for i in range(11):
+        assert b.submit(Request(i, arrival_s=0.001 * i),
+                        now=0.001 * i) == []
+    flushed = b.poll(now=0.06)
+    # 11 queued -> rounds to 8; the 3 stragglers (below the smallest
+    # preferred size) flush whole on their own expired window
+    assert [x.size for x in flushed] == [8, 3]
+    assert [r.rid for x in flushed for r in x.requests] == list(range(11))
+    first, second = flushed
+    assert second.t_formed > first.t_formed       # straggler deadline
+    assert second.t_start >= first.t_finish       # one server, in order
+    assert b.queue_depth == 0
+
+
+def test_batcher_full_flush_never_rounds():
+    """Size-triggered flushes take the whole max_batch_size batch —
+    preferred-size rounding applies only to timeout flushes."""
+    b = DynamicBatcher(LatencyModel(0.01, 0.001), max_batch_size=8,
+                       queue_window_s=10.0, preferred_sizes=(4, 8))
+    out = []
+    for i in range(8):
+        out += b.submit(Request(i, arrival_s=0.0), now=0.0)
+    assert [x.size for x in out] == [8]
+    assert b.queue_depth == 0
+
+
 # ---------------------------------------------------------------------------
 # DES conservation + behaviour
 # ---------------------------------------------------------------------------
