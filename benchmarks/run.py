@@ -11,10 +11,10 @@ import os
 import time
 
 from benchmarks import (continuous_perf, controller_dynamics,
-                        fig3_throughput, fig4_tradeoff, fig5_landscape,
-                        fleet_boundary, fleet_live, perf_variants,
-                        roofline, rule_ablation, table2_dual_path,
-                        table3_ablation)
+                        disagg_boundary, fig3_throughput, fig4_tradeoff,
+                        fig5_landscape, fleet_boundary, fleet_live,
+                        perf_variants, roofline, rule_ablation,
+                        table2_dual_path, table3_ablation)
 
 OUT = os.environ.get("BENCH_OUT", "results/benchmarks")
 
@@ -56,6 +56,9 @@ _BENCHES = [
                 f"(was {c['host_sync_frac_legacy']});"
                 f"paged_slots_x={c['paged_slots_gain_x']};"
                 f"parity={c['greedy_tokens_identical']}")),
+    ("disagg_boundary", disagg_boundary,
+     lambda c: (f"parity={c['token_parity']};"
+                f"wins_at={','.join(c['disagg_wins_at']) or 'none'}")),
 ]
 
 

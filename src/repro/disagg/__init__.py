@@ -1,0 +1,25 @@
+"""Disaggregated (split-phase) LM serving — prefill/decode as
+separate replica pools over one weight copy.
+
+Start at :class:`DisaggEngine` (the prefill -> insert -> generate
+three-step API), :class:`DisaggEngineAdapter` (the ``EnginePort``
+face the unified ``Server`` drives), and :class:`DisaggSimulator`
+(the two-pool fleet with phase-aware routing, a modelled
+``TransferQueue`` link, and an ``Autoscaler`` per phase)."""
+from repro.disagg.adapter import DisaggEngineAdapter
+from repro.disagg.engine import (DisaggEngine, PrefillEngine,
+                                 PrefillResult)
+from repro.disagg.fleet import (DecodeWorker, DisaggPool, DisaggReport,
+                                DisaggSimulator, PhaseAwareRouter,
+                                PhasePool, PrefillWorker,
+                                build_disagg_fleet)
+from repro.disagg.transfer import Transfer, TransferQueue
+
+__all__ = [
+    "DisaggEngine", "PrefillEngine", "PrefillResult",
+    "DisaggEngineAdapter",
+    "Transfer", "TransferQueue",
+    "DecodeWorker", "DisaggPool", "DisaggReport", "DisaggSimulator",
+    "PhaseAwareRouter", "PhasePool", "PrefillWorker",
+    "build_disagg_fleet",
+]

@@ -1,0 +1,177 @@
+"""Split-phase LM generation — the JetStream-style three-step API.
+
+Pooled continuous batching runs prefill and decode on ONE device
+line, so a long-prompt arrival stalls every in-flight decode slot
+behind its prefill.  Disaggregation splits the phases:
+
+  - ``prefill(request) -> PrefillResult``  — compute-bound: consume
+    the prompt into a batch-1 contiguous ROW cache, emit the first
+    greedy token.  Runs on a prefill worker.
+  - ``insert(PrefillResult, session)``     — the hand-off: scatter the
+    row cache into the decode pool's slot (contiguous ``slot_write``)
+    or its block-table pages (``paged_slot_write``), both via
+    ``DecodeSession.insert_prefilled``.
+  - ``generate(session)``                  — HBM-bound: the existing
+    fused ``lax.scan`` decode window (``DecodeSession.advance``),
+    untouched.
+
+Parity invariant: the tokens a request decodes depend only on its
+padded prompt length (padding IS attended; ``pos`` starts at
+``plen``), never on which phase topology produced the KV.  A
+``PrefillResult`` built at the same ``plen`` the pooled path would
+pad to therefore yields byte-identical greedy tokens — the CI-gated
+oracle in ``tests/test_disagg.py`` and
+``benchmarks/disagg_boundary.py``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.serving.continuous import (ContinuousBatchingEngine,
+                                      DecodeSession, GenRequest, _bucket)
+
+
+@dataclass
+class PrefillResult:
+    """One prefilled request, ready to cross the phase boundary:
+    the batch-1 row cache (device), the first greedy token (host),
+    and the padded prompt length the rows were built at (the decode
+    pool must seat the request at exactly this position for parity
+    with the pooled path)."""
+    request: GenRequest
+    rows: Any                      # contiguous Cache, batch 1
+    first_token: int
+    plen: int
+    kv_bytes: int                  # logical prompt-KV payload size
+
+
+class PrefillEngine:
+    """The compute-bound half: batch-1 prompt consumption into a row
+    cache shaped for the decode pool's insert path.
+
+    Contiguous pools take rows at the pool's FULL ``max_seq`` extent
+    (one compile serves every prompt length — ``slot_write`` copies
+    whole rows); paged pools take rows at the prompt's block multiple
+    (``paged_slot_write`` scatters only the prefix blocks), so the jit
+    cache is keyed by block count."""
+
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.paged = cfg.paged_kv
+        self._jits: dict = {}
+        self._kv_bytes: dict[int, int] = {}
+        self.prefill_calls = 0
+        self.device_s = 0.0
+
+    def _row_len(self, plen: int) -> int:
+        if not self.paged:
+            return self.max_seq
+        bs = self.cfg.kv_block_size
+        return (-(-plen // bs)) * bs
+
+    def _prefill1(self, plen: int):
+        rlen = self._row_len(plen)
+        key = (plen, rlen)
+        fn = self._jits.get(key)
+        if fn is not None:
+            return fn
+        cfg = self.cfg
+
+        def prefill1(params, tokens):
+            rows = tfm.init_cache(cfg, 1, rlen, layout="contiguous")
+            logits, rows = tfm.prefill(cfg, params, tokens, rows)
+            first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            return rows, first
+
+        fn = jax.jit(prefill1)
+        self._jits[key] = fn
+        return fn
+
+    def pad_len(self, prompt_tokens: int,
+                prompt_len: int | None = None) -> int:
+        """The padded prompt length this request prefills at — the
+        SAME rule the pooled ``DecodeSession._refill`` applies, so the
+        two topologies stay token-identical."""
+        if prompt_len is not None:
+            return prompt_len
+        return min(_bucket(max(prompt_tokens, 1)), self.max_seq - 1)
+
+    def kv_bytes(self, plen: int) -> int:
+        """Logical bytes of prompt KV crossing the phase boundary —
+        the k/v rows for ``plen`` positions, NOT the (padded) physical
+        row extent.  Computed once per plen from cache shapes."""
+        n = self._kv_bytes.get(plen)
+        if n is not None:
+            return n
+        shapes = jax.eval_shape(
+            lambda: tfm.init_cache(self.cfg, 1, plen,
+                                   layout="contiguous"))
+        n = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(shapes)
+                if hasattr(x, "shape") and x.shape)
+        self._kv_bytes[plen] = n
+        return n
+
+    def prefill(self, r: GenRequest, *,
+                prompt_len: int | None = None) -> PrefillResult:
+        plen = self.pad_len(len(r.prompt), prompt_len)
+        toks = np.zeros((1, plen), np.int32)
+        p = np.asarray(r.prompt[:plen], np.int32)
+        toks[0, :len(p)] = p
+        fn = self._prefill1(plen)
+        t0 = time.perf_counter()
+        rows, first = fn(self.params, jnp.asarray(toks))
+        first_h = int(np.asarray(jax.block_until_ready(first))[0])
+        self.device_s += time.perf_counter() - t0
+        self.prefill_calls += 1
+        return PrefillResult(request=r, rows=rows, first_token=first_h,
+                             plen=plen, kv_bytes=self.kv_bytes(plen))
+
+
+@dataclass
+class DisaggEngine:
+    """Facade binding the two halves: the split-phase engine API.
+
+    ``prefill`` runs on the :class:`PrefillEngine`; ``insert`` lands a
+    :class:`PrefillResult` in a :class:`DecodeSession` (seated on the
+    session's next ``advance``); ``generate`` runs one fused decode
+    window.  Sessions come from ``start_session`` — the decode pool's
+    slot/block ownership rules are entirely the session's."""
+    decode: ContinuousBatchingEngine
+    prefill_engine: PrefillEngine
+
+    @classmethod
+    def build(cls, cfg: ModelConfig, params: dict, *,
+              n_slots: int = 4, max_seq: int = 64,
+              sync_every: int = 8) -> "DisaggEngine":
+        decode = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
+                                          max_seq=max_seq,
+                                          sync_every=sync_every)
+        return cls(decode=decode,
+                   prefill_engine=PrefillEngine(cfg, params,
+                                                max_seq=max_seq))
+
+    def prefill(self, r: GenRequest, *,
+                prompt_len: int | None = None) -> PrefillResult:
+        return self.prefill_engine.prefill(r, prompt_len=prompt_len)
+
+    def insert(self, pr: PrefillResult, session: DecodeSession) -> None:
+        session.insert_prefilled(pr.request, pr.rows, pr.first_token,
+                                 pr.plen)
+
+    def generate(self, session: DecodeSession) -> list[GenRequest]:
+        return session.advance()
+
+    def start_session(self) -> DecodeSession:
+        return DecodeSession(self.decode)

@@ -1,0 +1,411 @@
+"""Separate prefill and decode replica pools over the split-phase
+engine — the closed-loop fleet layer of disaggregated serving.
+
+Topology: N prefill workers and M decode workers share ONE set of
+weights (one :class:`PrefillEngine`, one
+:class:`ContinuousBatchingEngine` — each worker owns its own
+``ServiceLine``/``DecodeSession``, modelling N+M devices without
+holding N+M parameter copies).  A :class:`TransferQueue` links the
+phases.  Routing happens twice per request — once into a prefill
+basin, once (at send time) into a decode basin — through a
+:class:`PhaseAwareRouter` whose congestion term multiplies queue
+backlog by the phase's RESOURCE pressure: always 0 for prefill (it
+holds no state between requests), slot/block occupancy for decode
+(from the worker's ``DecodeSession``).  That asymmetry is the point:
+prefill basins saturate on compute backlog, decode basins on KV
+residency, and the router sees each phase's true bottleneck.
+
+Each phase gets its OWN :class:`Autoscaler` (via :class:`PhasePool`
+views), so a prompt burst revives prefill workers while long decode
+drains revive decode workers — the paper's closed-loop energy/latency
+trade-off, applied per phase.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.energy import EnergyModel
+from repro.disagg.engine import PrefillEngine, PrefillResult
+from repro.disagg.transfer import Transfer, TransferQueue
+from repro.fleet.autoscaler import Autoscaler
+from repro.fleet.replica import ACTIVE, STOPPED
+from repro.fleet.router import EnergyAwareRouter
+from repro.serving.batcher import ServiceLine
+from repro.serving.continuous import (ContinuousBatchingEngine,
+                                      DecodeSession, GenRequest)
+
+
+class _PhaseWorker:
+    """State shared by both worker kinds: one ServiceLine, activity
+    accounting, and the closed-loop joules/request EWMA the router and
+    autoscaler read.  ``controller`` stays None — phase admission is
+    the front-end server's job, not the pool's — so the router's
+    basin test accepts every worker and score order decides."""
+
+    def __init__(self, name: str, *, utility: float = 1.0,
+                 energy_prior_j: float = 1.0,
+                 energy_model: EnergyModel | None = None,
+                 ewma: float = 0.3):
+        self.name = name
+        self.state = ACTIVE
+        self.utility = utility
+        self.controller = None
+        self.energy_model = energy_model or EnergyModel()
+        self.line = ServiceLine()
+        self.busy_s = 0.0
+        self.active_s = 0.0
+        self.n_served = 0
+        self._jpr = float(energy_prior_j)
+        self._ewma = ewma
+
+    @property
+    def routable(self) -> bool:
+        return self.state == ACTIVE
+
+    def tick(self, dt: float) -> None:
+        if self.state == ACTIVE:
+            self.active_s += dt
+
+    def _record(self, dur: float) -> None:
+        self.busy_s += dur
+        self.n_served += 1
+        j = self.energy_model.p_active * dur
+        self._jpr += self._ewma * (j - self._jpr)
+
+    def joules_per_request(self) -> float:
+        return self._jpr
+
+    def energy_j(self) -> float:
+        m = self.energy_model
+        idle = max(self.active_s - self.busy_s, 0.0)
+        return m.p_active * self.busy_s + m.p_idle * idle
+
+    def pressure(self, now: float) -> float:
+        return self.line.backlog(now)
+
+    def resource_pressure(self, now: float) -> float:
+        return 0.0
+
+    def drain(self, now: float) -> None:
+        self.state = STOPPED
+
+    def revive(self) -> None:
+        self.state = ACTIVE
+
+
+class PrefillWorker(_PhaseWorker):
+    """One compute-bound device: serialises prompt prefills on its
+    line.  Stateless between requests — its resource pressure is
+    always zero; backlog seconds are its only congestion signal."""
+
+    def __init__(self, name: str, engine: PrefillEngine, **kw):
+        super().__init__(name, **kw)
+        self.engine = engine
+
+    def prefill(self, r: GenRequest, now: float, *,
+                prompt_len: int | None = None
+                ) -> tuple[PrefillResult, float, float]:
+        t0 = time.perf_counter()
+        pr = self.engine.prefill(r, prompt_len=prompt_len)
+        dt = time.perf_counter() - t0
+        start, finish = self.line.reserve(now, dt)
+        self._record(dt)
+        return pr, start, finish
+
+
+class DecodeWorker(_PhaseWorker):
+    """One HBM-bound device: a ``DecodeSession`` slot pool plus a
+    line for its fused windows.  Resource pressure is KV residency —
+    occupied-slot fraction, and for paged pools the block-pool fill,
+    whichever is scarcer — the signal the phase-aware router
+    multiplies into this basin's congestion."""
+
+    def __init__(self, name: str, engine: ContinuousBatchingEngine,
+                 **kw):
+        super().__init__(name, **kw)
+        self.engine = engine
+        self.session = DecodeSession(engine)
+
+    def insert(self, pr: PrefillResult) -> None:
+        self.session.insert_prefilled(pr.request, pr.rows,
+                                      pr.first_token, pr.plen)
+
+    def advance(self, now: float) -> tuple[list[GenRequest], float,
+                                           float]:
+        t0 = time.perf_counter()
+        finished = self.session.advance()
+        dt = time.perf_counter() - t0
+        start, finish = self.line.reserve(now, dt)
+        self.busy_s += dt
+        self.n_served += len(finished)
+        # fold the window's energy into the EWMA per completed request
+        if finished:
+            j = self.energy_model.p_active * dt / len(finished)
+            self._jpr += self._ewma * (j - self._jpr)
+        return finished, start, finish
+
+    @property
+    def idle(self) -> bool:
+        return self.session.idle
+
+    def pressure(self, now: float) -> float:
+        backlog = self.line.backlog(now)
+        waiting = (self.session.n_queued
+                   + len(self.session._insert_q))
+        # queued inserts cost roughly one window each until seated
+        est = self.engine.sync_every * 0.001
+        return backlog + waiting * est
+
+    def resource_pressure(self, now: float) -> float:
+        slots = self.session.n_active / max(self.engine.n_slots, 1)
+        if not self.engine.paged:
+            return slots
+        allocatable = max(self.engine.pool_blocks - 1, 1)
+        used = allocatable - len(self.session._free_blocks)
+        return max(slots, used / allocatable)
+
+    def drain(self, now: float) -> None:
+        # flush the session dry through the ordinary advance path —
+        # nothing is dropped; the caller harvests via run()'s sweep
+        self.state = STOPPED
+
+
+class PhasePool:
+    """One phase's workers behind the ``Autoscaler`` pool protocol
+    (``replicas``/``routable``/``energy_j``/``n_served``/``drain``/
+    ``revive``), so the SAME hysteresis policy that scales the
+    classifier fleet scales each phase independently."""
+
+    def __init__(self, workers: list):
+        self.replicas = list(workers)
+
+    def routable(self) -> list:
+        return [w for w in self.replicas if w.routable]
+
+    def energy_j(self) -> float:
+        return sum(w.energy_j() for w in self.replicas)
+
+    def n_served(self) -> int:
+        return sum(w.n_served for w in self.replicas)
+
+    def drain(self, w, now: float) -> None:
+        w.drain(now)
+
+    def revive(self, w) -> None:
+        w.revive()
+
+    def tick(self, dt: float) -> None:
+        for w in self.replicas:
+            w.tick(dt)
+
+
+class PhaseAwareRouter(EnergyAwareRouter):
+    """Energy-aware scoring with the phase's resource pressure folded
+    into congestion: decode basins pay for KV residency (slots/blocks
+    about to run out make a basin expensive even when its line is
+    momentarily free), prefill basins only for backlog."""
+
+    def congestion(self, replica, now: float, slo_s: float) -> float:
+        base = super().congestion(replica, now, slo_s)
+        rp = getattr(replica, "resource_pressure", None)
+        return base * (1.0 + (rp(now) if rp is not None else 0.0))
+
+
+@dataclass
+class DisaggPool:
+    """The full disaggregated fleet: both phase pools + the link."""
+    prefill_workers: list
+    decode_workers: list
+    transfer: TransferQueue
+
+    @property
+    def prefill(self) -> PhasePool:
+        return PhasePool(self.prefill_workers)
+
+    @property
+    def decode(self) -> PhasePool:
+        return PhasePool(self.decode_workers)
+
+    def tick(self, dt: float) -> None:
+        for w in self.prefill_workers + self.decode_workers:
+            w.tick(dt)
+
+
+def build_disagg_fleet(cfg, params, *, n_prefill: int = 1,
+                       n_decode: int = 1, n_slots: int = 4,
+                       max_seq: int = 64, sync_every: int = 8,
+                       gbps: float = 16.0,
+                       energy_model: EnergyModel | None = None
+                       ) -> DisaggPool:
+    """N prefill + M decode workers over ONE weight copy each way.
+
+    Workers share the phase engines' jit caches (first worker warms
+    them, the rest reuse), so fleet size scales device lines and
+    sessions, not compiles or parameter memory."""
+    em = energy_model or EnergyModel()
+    pe = PrefillEngine(cfg, params, max_seq=max_seq)
+    de = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
+                                  max_seq=max_seq,
+                                  sync_every=sync_every)
+    prefill = [PrefillWorker(f"prefill-{i}", pe, energy_model=em)
+               for i in range(n_prefill)]
+    decode = [DecodeWorker(f"decode-{i}", de, energy_model=em)
+              for i in range(n_decode)]
+    return DisaggPool(prefill_workers=prefill, decode_workers=decode,
+                      transfer=TransferQueue(gbps=gbps))
+
+
+@dataclass
+class DisaggReport:
+    responses: list
+    summary: dict
+    per_worker: dict
+    transfer: dict
+    autoscaler_log: dict
+
+
+@dataclass
+class DisaggSimulator:
+    """Drive generate-kind requests through the disaggregated fleet
+    on one virtual clock: route to a prefill basin at arrival, send
+    the KV down the link at prefill finish (decode basin chosen at
+    send time), seat landed transfers and advance decode windows as
+    the stream progresses, then drain past the last in-flight
+    transfer.  Each phase's autoscaler observes every
+    ``scale_every`` arrivals."""
+    pool: DisaggPool
+    router: PhaseAwareRouter = field(default_factory=PhaseAwareRouter)
+    prefill_scaler: Autoscaler | None = None
+    decode_scaler: Autoscaler | None = None
+    prompt_len: int | None = None
+    scale_every: int = 20
+
+    def _decode_worker(self, name: str) -> DecodeWorker:
+        for w in self.pool.decode_workers:
+            if w.name == name:
+                return w
+        raise KeyError(name)
+
+    def _deliver(self, now: float, *, everything: bool = False
+                 ) -> list[Transfer]:
+        landed = (self.pool.transfer.deliver_all() if everything
+                  else self.pool.transfer.deliver(now))
+        for t in landed:
+            self._decode_worker(t.dst).insert(t.result)
+        return landed
+
+    def _advance_ready(self, now: float, finish_t: dict) -> None:
+        for w in self.pool.decode_workers:
+            if w.session.idle:
+                continue
+            finished, _, fin = w.advance(now)
+            for g in finished:
+                finish_t[g.rid] = (fin, w.name)
+
+    def run(self, requests: list) -> DisaggReport:
+        reqs = sorted(requests, key=lambda r: r.arrival_s)
+        gen: dict[int, GenRequest] = {}
+        meta: dict[int, object] = {}
+        finish_t: dict[int, tuple] = {}
+        prefill_of: dict[int, str] = {}
+        decode_of: dict[int, str] = {}
+        now = 0.0
+        for i, req in enumerate(reqs):
+            arr = float(req.arrival_s)
+            self.pool.tick(max(arr - now, 0.0))
+            now = max(now, arr)
+            self._deliver(now)
+            g = GenRequest(rid=req.rid,
+                           prompt=np.asarray(req.payload, np.int32),
+                           max_new=getattr(req, "max_new", 16),
+                           arrival_t=arr,
+                           eos_id=(getattr(req, "metadata", None)
+                                   or {}).get("eos_id"))
+            gen[req.rid] = g
+            meta[req.rid] = req
+            # phase 1: prefill basin
+            pws = self.pool.prefill.routable()
+            if not pws:                  # scaled to zero: revive one
+                self.pool.prefill_workers[0].revive()
+                pws = self.pool.prefill.routable()
+            pw = self.router.route(req, pws, now)
+            pr, _, fin = pw.prefill(g, now, prompt_len=self.prompt_len)
+            prefill_of[req.rid] = pw.name
+            # phase 2: the link — decode basin chosen at send time
+            dws = self.pool.decode.routable()
+            if not dws:
+                self.pool.decode_workers[0].revive()
+                dws = self.pool.decode.routable()
+            dw = self.router.route(req, dws, fin)
+            self.pool.transfer.send(pr, fin, dst=dw.name)
+            decode_of[req.rid] = dw.name
+            # phase 3: interleave decode windows with the stream
+            self._deliver(now)
+            self._advance_ready(now, finish_t)
+            if (self.prefill_scaler or self.decode_scaler) and \
+                    (i + 1) % self.scale_every == 0:
+                if self.prefill_scaler:
+                    self.prefill_scaler.observe(now, self.pool.prefill)
+                if self.decode_scaler:
+                    self.decode_scaler.observe(now, self.pool.decode)
+        # drain: fast-forward past the slowest in-flight transfer
+        horizon = max([now] + [t.arrive_t
+                               for t in self.pool.transfer.inflight])
+        self.pool.tick(max(horizon - now, 0.0))
+        now = horizon
+        self._deliver(now, everything=True)
+        while any(not w.session.idle
+                  for w in self.pool.decode_workers):
+            self._advance_ready(now, finish_t)
+        responses = []
+        for req in reqs:
+            g = gen[req.rid]
+            fin, dname = finish_t.get(req.rid, (now, ""))
+            responses.append({
+                "rid": req.rid,
+                "tokens": list(g.generated),
+                "arrival_s": float(req.arrival_s),
+                "t_finish": fin,
+                "latency_s": fin - float(req.arrival_s),
+                "prefill_worker": prefill_of[req.rid],
+                "decode_worker": decode_of[req.rid],
+            })
+        lats = np.array([r["latency_s"] for r in responses])
+        n_tokens = int(sum(len(r["tokens"]) for r in responses))
+        energy = (self.pool.prefill.energy_j()
+                  + self.pool.decode.energy_j())
+        summary = {
+            "n": len(responses),
+            "n_tokens": n_tokens,
+            "energy_j": energy,
+            "joules_per_token": (energy / n_tokens
+                                 if n_tokens else 0.0),
+            "p50_latency_ms": float(np.percentile(lats, 50) * 1e3)
+            if len(lats) else 0.0,
+            "p95_latency_ms": float(np.percentile(lats, 95) * 1e3)
+            if len(lats) else 0.0,
+            "span_s": now,
+            "prefill_energy_j": self.pool.prefill.energy_j(),
+            "decode_energy_j": self.pool.decode.energy_j(),
+        }
+        per_worker = {
+            w.name: {"n_served": w.n_served,
+                     "busy_s": round(w.busy_s, 6),
+                     "energy_j": round(w.energy_j(), 6),
+                     "state": w.state}
+            for w in (self.pool.prefill_workers
+                      + self.pool.decode_workers)
+        }
+        return DisaggReport(
+            responses=responses, summary=summary,
+            per_worker=per_worker,
+            transfer=self.pool.transfer.stats(),
+            autoscaler_log={
+                "prefill": (self.prefill_scaler.log
+                            if self.prefill_scaler else []),
+                "decode": (self.decode_scaler.log
+                           if self.decode_scaler else []),
+            })

@@ -1,0 +1,85 @@
+"""KV hand-off between the prefill and decode pools.
+
+Disaggregation is not free: every admitted request ships its prompt
+KV across the phase boundary (NVLink / PCIe / network, depending on
+topology).  ``TransferQueue`` models that link as one serialised
+``ServiceLine`` — per-transfer latency is a fixed base cost plus
+``bytes / bandwidth``, transfers queue behind each other, and the
+line's backlog is the "transfer pressure" term the phase-aware router
+sees.  Byte counts come from :meth:`PrefillEngine.kv_bytes` — the
+LOGICAL prompt-KV payload, not the padded physical row extent."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.disagg.engine import PrefillResult
+from repro.serving.batcher import ServiceLine
+
+
+@dataclass
+class Transfer:
+    """One in-flight KV hand-off: who, how many bytes, when it was
+    sent and when it lands on the decode side."""
+    result: PrefillResult
+    send_t: float
+    arrive_t: float
+    n_bytes: int
+    dst: str | None = None
+
+
+@dataclass
+class TransferQueue:
+    """Serialised phase-boundary link with a bandwidth/latency model.
+
+    ``send`` reserves the link (transfers queue FIFO behind each
+    other), ``deliver`` releases everything that has landed by
+    ``now``, ``pressure`` is the link's backlog-seconds — the same
+    unit every other pressure signal in the stack uses."""
+    gbps: float = 16.0                   # link bandwidth, GB/s
+    base_latency_s: float = 0.0005       # per-transfer fixed cost
+
+    _line: ServiceLine = field(default_factory=ServiceLine, init=False)
+    _inflight: list[Transfer] = field(default_factory=list, init=False)
+    total_bytes: int = field(default=0, init=False)
+    n_transfers: int = field(default=0, init=False)
+
+    def send(self, pr: PrefillResult, now: float,
+             dst: str | None = None) -> Transfer:
+        dur = self.base_latency_s + pr.kv_bytes / (self.gbps * 1e9)
+        _, arrive = self._line.reserve(now, dur)
+        t = Transfer(result=pr, send_t=now, arrive_t=arrive,
+                     n_bytes=pr.kv_bytes, dst=dst)
+        self._inflight.append(t)
+        self.total_bytes += pr.kv_bytes
+        self.n_transfers += 1
+        return t
+
+    def deliver(self, now: float) -> list[Transfer]:
+        """Pop (in arrival order) every transfer that landed by now."""
+        done = [t for t in self._inflight if t.arrive_t <= now]
+        self._inflight = [t for t in self._inflight
+                          if t.arrive_t > now]
+        return sorted(done, key=lambda t: t.arrive_t)
+
+    def deliver_all(self) -> list[Transfer]:
+        done, self._inflight = self._inflight, []
+        return sorted(done, key=lambda t: t.arrive_t)
+
+    @property
+    def inflight(self) -> list[Transfer]:
+        return list(self._inflight)
+
+    def pressure(self, now: float) -> float:
+        return self._line.backlog(now)
+
+    def reset(self) -> None:
+        self._line.reset()
+        self._inflight.clear()
+        self.total_bytes = 0
+        self.n_transfers = 0
+
+    def stats(self) -> dict:
+        return {"n_transfers": self.n_transfers,
+                "total_bytes": self.total_bytes,
+                "gbps": self.gbps,
+                "base_latency_s": self.base_latency_s}

@@ -54,7 +54,8 @@ Quickstart::
 or from the CLI: ``python -m repro.launch.serve --fleet``.
 """
 from repro.fleet.autoscaler import Autoscaler
-from repro.fleet.pool import (LIVE_REPLICA_KINDS, FleetReport,
+from repro.fleet.pool import (LIVE_CLASSIFIER_KINDS,
+                              LIVE_REPLICA_KINDS, FleetReport,
                               FleetSimulator, ReplicaPool,
                               build_live_fleet, build_sim_fleet,
                               make_live_replica)
@@ -65,16 +66,19 @@ from repro.fleet.replica import (ACTIVE, REPLICA_KINDS, STOPPED,
 from repro.fleet.router import (ROUTERS, EnergyAwareRouter,
                                 LeastLoadedRouter, RoundRobinRouter,
                                 Router, StaticRouter, make_router)
-from repro.fleet.scenarios import (DEFAULT_TENANTS, SCENARIOS, Scenario,
-                                   diurnal, flash_crowd, from_trace,
-                                   low_confidence_flood, make_scenario,
-                                   multi_tenant, steady, with_payloads)
+from repro.fleet.scenarios import (DEFAULT_TENANTS, GENERATE_SCENARIOS,
+                                   SCENARIOS, Scenario, diurnal,
+                                   flash_crowd, from_trace, long_decode,
+                                   low_confidence_flood,
+                                   make_generate_scenario, make_scenario,
+                                   multi_tenant, prompt_burst, steady,
+                                   with_payloads)
 
 __all__ = [
     # pool / simulator
     "FleetReport", "FleetSimulator", "ReplicaPool",
-    "LIVE_REPLICA_KINDS", "build_live_fleet", "build_sim_fleet",
-    "make_live_replica",
+    "LIVE_CLASSIFIER_KINDS", "LIVE_REPLICA_KINDS",
+    "build_live_fleet", "build_sim_fleet", "make_live_replica",
     # replicas
     "ACTIVE", "STOPPED", "REPLICA_KINDS", "Replica",
     "SimBatchEngine", "SimContinuousEngine", "SimDirectEngine",
@@ -85,7 +89,8 @@ __all__ = [
     # scaling
     "Autoscaler",
     # scenarios
-    "DEFAULT_TENANTS", "SCENARIOS", "Scenario", "diurnal",
-    "flash_crowd", "from_trace", "low_confidence_flood",
-    "make_scenario", "multi_tenant", "steady", "with_payloads",
+    "DEFAULT_TENANTS", "GENERATE_SCENARIOS", "SCENARIOS", "Scenario",
+    "diurnal", "flash_crowd", "from_trace", "long_decode",
+    "low_confidence_flood", "make_generate_scenario", "make_scenario",
+    "multi_tenant", "prompt_burst", "steady", "with_payloads",
 ]

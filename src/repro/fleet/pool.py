@@ -32,14 +32,32 @@ from repro.fleet.replica import (REPLICA_KINDS, STOPPED, Replica,
                                  make_sim_replica)
 from repro.fleet.router import EnergyAwareRouter, Router
 from repro.serving.api import (PATH_DIRECT, PATH_DYNAMIC_BATCH,
-                               PATH_GATED, AdmissionMiddleware, Server,
+                               PATH_GATED, PATH_GENERATE,
+                               AdmissionMiddleware, Server,
                                ServerConfig)
 from repro.serving.simulator import Oracle
 from repro.telemetry.carbon import CarbonTracker
 
-# live replicas serve the classifier paths; continuous-decode stays a
-# generation workload (serve --mode generate), not a fleet-classify kind
-LIVE_REPLICA_KINDS = (PATH_DIRECT, PATH_DYNAMIC_BATCH, PATH_GATED)
+# live replicas serve the classifier paths plus the split-phase
+# generate kind (disaggregated prefill/decode behind one EnginePort);
+# per-request `kind` routing keeps the workloads on matching nodes.
+# The classifier trio is the default fleet shape — the generate kind
+# needs LM weights, so it only joins a pool when asked for by name.
+LIVE_CLASSIFIER_KINDS = (PATH_DIRECT, PATH_DYNAMIC_BATCH, PATH_GATED)
+LIVE_REPLICA_KINDS = LIVE_CLASSIFIER_KINDS + (PATH_GENERATE,)
+
+
+def _unknown_kind_msg(kind: str, valid) -> str:
+    """Unknown-kind error with the nearest valid alternative, so a
+    typo'd ``--fleet-kinds dynamic-batsh`` tells you what you meant
+    instead of only what exists."""
+    import difflib
+    msg = (f"unknown live replica kind {kind!r}; "
+           f"expected one of {valid}")
+    close = difflib.get_close_matches(kind, valid, n=1, cutoff=0.4)
+    if close:
+        msg += f" — did you mean {close[0]!r}?"
+    return msg
 
 
 @dataclass
@@ -65,6 +83,17 @@ class ReplicaPool:
 
     def routable(self) -> list[Replica]:
         return [r for r in self.replicas if r.routable]
+
+    def routable_for(self, req) -> list[Replica]:
+        """Routable replicas whose workload matches the request:
+        generate-kind requests land only on generate nodes, classify
+        requests only on classifier nodes.  A request with no
+        matching node hits the router's clear no-replicas error
+        rather than decoding garbage on the wrong backend."""
+        want_gen = getattr(req, "kind", "classify") == "generate"
+        match = [r for r in self.routable()
+                 if (r.kind == PATH_GENERATE) == want_gen]
+        return match
 
     def start(self) -> "ReplicaPool":
         for r in self.replicas:
@@ -119,7 +148,9 @@ def make_live_replica(name: str, kind: str, cfg: dict, params: dict, *,
                       engine=None, controller=None, max_batch: int = 8,
                       queue_window_s: float = 0.02, exit_layer: int = 1,
                       energy_prior_j: float = 1.0,
-                      energy_model=None) -> Replica:
+                      energy_model=None, n_slots: int = 4,
+                      max_seq: int = 64,
+                      prompt_len: int | None = None) -> Replica:
     """One fleet node over a LIVE execution backend (real jit'd model,
     measured walltimes) — same ``Replica`` surface as the virtual-time
     nodes, so routers/autoscalers/scenarios cannot tell them apart.
@@ -128,6 +159,11 @@ def make_live_replica(name: str, kind: str, cfg: dict, params: dict, *,
     classifier-backed replicas of a pool: the jit caches are stateless
     per call, and each adapter keeps its own queue and free-at horizon
     (its own node clock).  The gated kind compiles its own fused step.
+
+    The ``generate`` kind wraps the split-phase disaggregated engine
+    (``cfg``/``params`` are then an LM config and LM weights;
+    ``n_slots``/``max_seq``/``prompt_len`` shape its decode pool) —
+    or pass ``engine`` as a ready ``DisaggEngine`` to share one.
     """
     from repro.core.controller import AdmissionController
     from repro.core.energy import EnergyModel
@@ -136,14 +172,19 @@ def make_live_replica(name: str, kind: str, cfg: dict, params: dict, *,
     from repro.serving.engine import ClassifierEngine
 
     if kind not in LIVE_REPLICA_KINDS:
-        raise ValueError(f"unknown live replica kind {kind!r}; "
-                         f"expected one of {LIVE_REPLICA_KINDS}")
+        raise ValueError(_unknown_kind_msg(kind, LIVE_REPLICA_KINDS))
     em = energy_model or EnergyModel()
     if controller is None:
         controller = AdmissionController(enabled=False,
                                          log_history=False)
 
-    if kind == PATH_GATED:
+    if kind == PATH_GENERATE:
+        from repro.disagg import DisaggEngine, DisaggEngineAdapter
+        if engine is None:
+            engine = DisaggEngine.build(cfg, params, n_slots=n_slots,
+                                        max_seq=max_seq)
+        port = DisaggEngineAdapter(engine, prompt_len=prompt_len)
+    elif kind == PATH_GATED:
         port = GatedEngineAdapter(cfg, params, batch=max_batch,
                                   exit_layer=exit_layer,
                                   queue_window_s=queue_window_s)
@@ -163,7 +204,7 @@ def make_live_replica(name: str, kind: str, cfg: dict, params: dict, *,
 
 
 def build_live_fleet(cfg: dict, params: dict,
-                     kinds=LIVE_REPLICA_KINDS, *,
+                     kinds=LIVE_CLASSIFIER_KINDS, *,
                      controller_factory=None, max_batch: int = 8,
                      queue_window_s: float = 0.02, exit_layer: int = 1,
                      seq_len: int = 32, calibrate: bool = True,
@@ -186,13 +227,13 @@ def build_live_fleet(cfg: dict, params: dict,
 
     for k in kinds:
         if k not in LIVE_REPLICA_KINDS:
-            raise ValueError(f"unknown live replica kind {k!r}; "
-                             f"expected one of {LIVE_REPLICA_KINDS}")
+            raise ValueError(_unknown_kind_msg(k, LIVE_REPLICA_KINDS))
     em = EnergyModel()
     # the shared classifier engine backs only the direct/dynamic-batch
-    # replicas (the gated kind compiles its own fused step) — don't
-    # build or calibrate it for a gated-only pool
-    if engine is None and set(kinds) - {PATH_GATED}:
+    # replicas (the gated kind compiles its own fused step; the
+    # generate kind builds its own split-phase engine over LM weights)
+    # — don't build or calibrate it for a pool with neither
+    if engine is None and set(kinds) - {PATH_GATED, PATH_GENERATE}:
         engine = ClassifierEngine(cfg, params, exit_layer=exit_layer)
     priors = {k: 1.0 for k in LIVE_REPLICA_KINDS}
     if calibrate and engine is not None:
@@ -212,7 +253,8 @@ def build_live_fleet(cfg: dict, params: dict,
         ctrl = (controller_factory(kind, i)
                 if controller_factory is not None else None)
         replicas.append(make_live_replica(
-            f"{kind}-{i}", kind, cfg, params, engine=engine,
+            f"{kind}-{i}", kind, cfg, params,
+            engine=(None if kind == PATH_GENERATE else engine),
             controller=ctrl, max_batch=max_batch,
             queue_window_s=queue_window_s, exit_layer=exit_layer,
             energy_prior_j=priors[kind], energy_model=em))
@@ -264,7 +306,8 @@ class FleetSimulator:
                     r.poke(now)
             if self.autoscaler is not None and i % self.scale_every == 0:
                 self.autoscaler.observe(now, self.pool)
-            replica = self.router.route(req, self.pool.routable(), now)
+            replica = self.router.route(req, self.pool.routable_for(req),
+                                        now)
             replica.push(req)
 
         responses = []

@@ -359,12 +359,90 @@ def with_payloads(scenario: Scenario, payloads,
         slo_s=scenario.slo_s)
 
 
+# -- generate-kind scenarios (disaggregated serving) ------------------------
+# These carry token payloads and ``kind="generate"`` and live in their
+# OWN registry: SCENARIOS feeds classifier fleets (benchmarks/
+# fleet_live.py iterates it over live classifier replicas), so
+# generation traffic must never leak into it.
+
+def _generate_requests(arrivals, rng, oracle: Oracle, *, vocab: int,
+                       prompt_lens, max_news):
+    out = []
+    for i, a in enumerate(arrivals):
+        out.append(InferRequest(
+            rid=i, arrival_s=a.arrival_s,
+            payload=rng.integers(0, vocab,
+                                 int(prompt_lens[i])).astype(np.int32),
+            kind="generate", max_new=int(max_news[i]),
+            entropy_hint=float(oracle.entropy[i])))
+    return out
+
+
+def prompt_burst(n: int = 64, *, qps: float = 20.0,
+                 burst_x: float = 6.0, burst_at_s: float = 1.0,
+                 burst_len_s: float = 1.0, short_prompt: int = 8,
+                 long_prompt: int = 24, max_new: int = 4,
+                 vocab: int = 512, seed: int = 0) -> Scenario:
+    """PREFILL-side stress: a sudden sustained burst of long-prompt
+    generation arrivals.  Short prompts outside the window, long ones
+    inside — disaggregation should scale the prefill pool through the
+    burst while the decode pool stays put."""
+    burst_qps = qps * burst_x
+
+    def rate(t: float) -> float:
+        return (burst_qps if burst_at_s <= t < burst_at_s + burst_len_s
+                else qps)
+
+    arrivals = nonhomogeneous_arrivals(n, rate, burst_qps, seed=seed)
+    rng = np.random.default_rng(seed + 11)
+    oracle = _oracle(n, rng)
+    plens = [long_prompt
+             if burst_at_s <= a.arrival_s < burst_at_s + burst_len_s
+             else short_prompt for a in arrivals]
+    reqs = _generate_requests(arrivals, rng, oracle, vocab=vocab,
+                              prompt_lens=plens,
+                              max_news=[max_new] * n)
+    return Scenario(
+        name="prompt-burst", requests=reqs, oracle=oracle,
+        description=(f"{qps} qps generate, x{burst_x} long-prompt "
+                     f"({long_prompt} tok) burst at t={burst_at_s}s "
+                     f"for {burst_len_s}s"))
+
+
+def long_decode(n: int = 64, *, qps: float = 20.0,
+                long_frac: float = 0.3, prompt: int = 8,
+                short_new: int = 4, long_new: int = 24,
+                vocab: int = 512, seed: int = 0) -> Scenario:
+    """DECODE-side stress: steady short prompts, but a ``long_frac``
+    fraction of requests decode ``long_new`` tokens — slot/block
+    residency (not prefill compute) becomes the scarce resource and
+    decode-pool pressure should drive scaling."""
+    arrivals = nonhomogeneous_arrivals(n, lambda t: qps, qps,
+                                       seed=seed)
+    rng = np.random.default_rng(seed + 13)
+    oracle = _oracle(n, rng)
+    news = [long_new if rng.random() < long_frac else short_new
+            for _ in range(n)]
+    reqs = _generate_requests(arrivals, rng, oracle, vocab=vocab,
+                              prompt_lens=[prompt] * n,
+                              max_news=news)
+    return Scenario(
+        name="long-decode", requests=reqs, oracle=oracle,
+        description=(f"{qps} qps generate, {long_frac:.0%} of "
+                     f"requests decode {long_new} tokens"))
+
+
 SCENARIOS = {
     "steady": steady,
     "flash-crowd": flash_crowd,
     "diurnal": diurnal,
     "multi-tenant": multi_tenant,
     "low-confidence-flood": low_confidence_flood,
+}
+
+GENERATE_SCENARIOS = {
+    "prompt-burst": prompt_burst,
+    "long-decode": long_decode,
 }
 
 
@@ -376,3 +454,14 @@ def make_scenario(name: str, n: int = 2000, *, qps: float | None = None,
     if qps is not None:
         kw["qps"] = qps
     return SCENARIOS[name](n, seed=seed, **kw)
+
+
+def make_generate_scenario(name: str, n: int = 64, *,
+                           qps: float | None = None, seed: int = 0,
+                           **kw) -> Scenario:
+    if name not in GENERATE_SCENARIOS:
+        raise ValueError(f"unknown generate scenario {name!r}; known: "
+                         f"{sorted(GENERATE_SCENARIOS)}")
+    if qps is not None:
+        kw["qps"] = qps
+    return GENERATE_SCENARIOS[name](n, seed=seed, **kw)

@@ -31,6 +31,14 @@ same router/autoscaler/scenario machinery over real execution:
 
     PYTHONPATH=src python -m repro.launch.serve --fleet-live \
         --requests 200 --max-batch 8 --policy energy-aware
+
+``--fleet-disagg`` runs a generate scenario over the disaggregated
+prefill/decode fleet (``repro.disagg``): separate phase pools over one
+LM weight copy, a modelled KV transfer link, phase-aware routing, and
+an autoscaler per phase:
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet-disagg \
+        --scenario prompt-burst --requests 48
 """
 from __future__ import annotations
 
@@ -234,6 +242,52 @@ def serve_fleet(args) -> dict:
     return out
 
 
+def serve_disagg(args) -> dict:
+    """``--fleet-disagg``: a generate scenario over the disaggregated
+    prefill/decode fleet — separate phase pools over one LM weight
+    copy, phase-aware routing, an autoscaler per phase."""
+    from repro.disagg import (DisaggSimulator, PhaseAwareRouter,
+                              build_disagg_fleet)
+    from repro.fleet import Autoscaler, make_generate_scenario
+
+    cfg = get_smoke_config(args.arch).replace(
+        remat=False, attn_impl=args.attn_impl,
+        kv_block_size=args.kv_block_size,
+        kv_pool_blocks=args.kv_pool_blocks)
+    params = tfm.init_lm(cfg, jax.random.PRNGKey(args.seed))
+    scenario = make_generate_scenario(args.scenario, args.requests,
+                                      qps=args.qps, seed=args.seed,
+                                      vocab=cfg.vocab)
+    pool = build_disagg_fleet(cfg, params,
+                              n_prefill=args.prefill_workers,
+                              n_decode=args.decode_workers,
+                              n_slots=args.slots, max_seq=64)
+    sim = DisaggSimulator(
+        pool, router=PhaseAwareRouter(),
+        prefill_scaler=Autoscaler() if args.autoscale else None,
+        decode_scaler=Autoscaler() if args.autoscale else None)
+    report = sim.run(scenario.requests)
+
+    tracker = Tracker(root=args.runs)
+    run = tracker.start_run(f"fleet-disagg-{scenario.name}")
+    run.log_params(**{k: str(v) for k, v in vars(args).items()})
+    run.log_metrics(0, **{k: v for k, v in report.summary.items()
+                          if isinstance(v, (int, float))})
+    run.log_artifact("disagg_summary.json", report.summary)
+    run.log_artifact("disagg_workers.json", report.per_worker)
+    run.finish()
+
+    out = {"scenario": scenario.name,
+           "description": scenario.description,
+           **report.summary,
+           "per_worker": report.per_worker,
+           "transfer": report.transfer,
+           "autoscaler_actions": {
+               k: len(v) for k, v in report.autoscaler_log.items()}}
+    print(json.dumps(out, indent=2, default=str))
+    return out
+
+
 def serve_generate(args) -> dict:
     cfg = get_smoke_config(args.arch).replace(
         attn_impl=args.attn_impl,
@@ -331,9 +385,18 @@ def main():
                          "oracle-backed virtual-time replicas; implies "
                          "--fleet (kinds limited to the classifier "
                          "paths)")
+    ap.add_argument("--fleet-disagg", action="store_true",
+                    help="generate scenario over the disaggregated "
+                         "prefill/decode fleet (separate phase pools, "
+                         "phase-aware routing, an autoscaler per "
+                         "phase); scenarios limited to the generate "
+                         "pair (prompt-burst, long-decode)")
+    ap.add_argument("--prefill-workers", type=int, default=2)
+    ap.add_argument("--decode-workers", type=int, default=2)
     ap.add_argument("--scenario", default="flash-crowd",
                     choices=["steady", "flash-crowd", "diurnal",
-                             "multi-tenant", "low-confidence-flood"])
+                             "multi-tenant", "low-confidence-flood",
+                             "prompt-burst", "long-decode"])
     ap.add_argument("--policy", default="energy-aware",
                     choices=["energy-aware", "round-robin",
                              "least-loaded", "static"])
@@ -346,8 +409,24 @@ def main():
     if args.fleet_live:
         args.fleet = True
     if args.qps is None:
-        args.qps = 40.0 if args.fleet else 150.0
+        args.qps = 40.0 if (args.fleet or args.fleet_disagg) else 150.0
 
+    if args.fleet_disagg:
+        if args.fleet:
+            raise SystemExit("--fleet-disagg and --fleet are separate "
+                             "layers; pick one")
+        if args.scenario not in ("prompt-burst", "long-decode"):
+            if args.scenario == ap.get_default("scenario"):
+                args.scenario = "prompt-burst"
+            else:
+                raise SystemExit(
+                    f"--fleet-disagg serves generate traffic; "
+                    f"--scenario must be prompt-burst or long-decode, "
+                    f"not {args.scenario!r}")
+        if args.requests == ap.get_default("requests"):
+            args.requests = 48        # generate requests are heavy
+        serve_disagg(args)
+        return
     if args.fleet:
         # refuse single-server flags that fleet mode would silently
         # ignore (misleading experiment configs otherwise)

@@ -21,7 +21,7 @@ from repro.serving.adapters import (CallableEngineAdapter,
                                     GatedEngineAdapter, OracleEngine)
 from repro.serving.api import (ALL_PATHS, PATH_AUTO, PATH_CONTINUOUS,
                                PATH_DIRECT, PATH_DYNAMIC_BATCH,
-                               PATH_GATED, PATH_SKIP,
+                               PATH_GATED, PATH_GENERATE, PATH_SKIP,
                                AdmissionMiddleware, Completion,
                                EngineCapabilities, EnginePort,
                                InferRequest, InferResponse, LoadState,
@@ -49,7 +49,7 @@ from repro.serving.workload import (Request, bursty_arrivals,
 __all__ = [
     # unified API
     "ALL_PATHS", "PATH_AUTO", "PATH_CONTINUOUS", "PATH_DIRECT",
-    "PATH_DYNAMIC_BATCH", "PATH_GATED", "PATH_SKIP",
+    "PATH_DYNAMIC_BATCH", "PATH_GATED", "PATH_GENERATE", "PATH_SKIP",
     "AdmissionMiddleware", "Completion", "EngineCapabilities",
     "EnginePort", "InferRequest", "InferResponse", "LoadState",
     "Server", "ServerConfig", "ServingMiddleware", "TelemetryMiddleware",

@@ -46,11 +46,12 @@ PATH_DIRECT = "direct"
 PATH_DYNAMIC_BATCH = "dynamic-batch"
 PATH_GATED = "gated-in-graph"
 PATH_CONTINUOUS = "continuous-decode"
+PATH_GENERATE = "generate"
 PATH_AUTO = "auto"
 PATH_SKIP = "skip"
 
 ALL_PATHS = (PATH_DIRECT, PATH_DYNAMIC_BATCH, PATH_GATED,
-             PATH_CONTINUOUS)
+             PATH_CONTINUOUS, PATH_GENERATE)
 
 _PATH_ALIASES = {
     "batched": PATH_DYNAMIC_BATCH,       # legacy simulator name
@@ -60,7 +61,7 @@ _PATH_ALIASES = {
 
 
 def canonical_path(path: str) -> str:
-    """Map legacy/short path names onto the canonical four + auto."""
+    """Map legacy/short path names onto the canonical set + auto."""
     p = _PATH_ALIASES.get(path, path)
     if p not in ALL_PATHS + (PATH_AUTO,):
         raise ValueError(f"unknown path {path!r}; expected one of "

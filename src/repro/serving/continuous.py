@@ -463,6 +463,68 @@ class ContinuousBatchingEngine:
         self._prefill_b[key] = fn
         return fn
 
+    def _insert_bucket(self) -> Callable:
+        """Seat ONE externally prefilled contiguous row cache into a
+        pool slot (the disaggregated prefill->insert hand-off).  The
+        row cache has the pool's full ``max_seq`` extent, so a single
+        jit serves every prompt length — the landing position arrives
+        as the ``pos_new`` operand, not as a trace constant."""
+        key = "insert"
+        fn = self._prefill_b.get(key)
+        if fn is not None:
+            return fn
+        axes = self._axes
+
+        def insert_b(pool, rows, slot_idx, first, pos_new, cur_tok,
+                     pos, active, remaining, rem_new, eos, eos_new):
+            pool = slot_write(pool, rows, slot_idx, axes)
+            cur_tok = cur_tok.at[slot_idx, 0].set(first, mode="drop")
+            pos = pos.at[slot_idx].set(pos_new, mode="drop")
+            active = active.at[slot_idx].set(first != eos_new,
+                                             mode="drop")
+            remaining = remaining.at[slot_idx].set(rem_new, mode="drop")
+            eos = eos.at[slot_idx].set(eos_new, mode="drop")
+            return pool, cur_tok, pos, active, remaining, eos
+
+        fn = jax.jit(insert_b,
+                     donate_argnums=(0, 5, 6, 7, 8, 10) if self.donate
+                     else ())
+        self._prefill_b[key] = fn
+        return fn
+
+    def _insert_bucket_paged(self, plen: int) -> Callable:
+        """Paged twin of :meth:`_insert_bucket`: the row cache spans
+        the prompt's block multiple, so the jit cache is keyed by the
+        block count (two prompt lengths inside one block multiple
+        share a compile; ``pos_new`` still carries the exact landing
+        position)."""
+        cfg_bs = self.cfg.kv_block_size
+        npb = -(-plen // cfg_bs)
+        key = ("insert-paged", npb)
+        fn = self._prefill_b.get(key)
+        if fn is not None:
+            return fn
+
+        def insert_p(pool, rows, slot_idx, table_rows, first, pos_new,
+                     cur_tok, pos, active, remaining, rem_new, eos,
+                     eos_new):
+            pool = paged_slot_write(pool, rows, slot_idx, table_rows,
+                                    block_size=cfg_bs,
+                                    n_pref_blocks=npb)
+            cur_tok = cur_tok.at[slot_idx, 0].set(first, mode="drop")
+            pos = pos.at[slot_idx].set(pos_new, mode="drop")
+            active = active.at[slot_idx].set(first != eos_new,
+                                             mode="drop")
+            remaining = remaining.at[slot_idx].set(rem_new, mode="drop")
+            eos = eos.at[slot_idx].set(eos_new, mode="drop")
+            return pool, cur_tok, pos, active, remaining, eos
+
+        fn = jax.jit(insert_p,
+                     donate_argnums=(0, 6, 7, 8, 9, 11) if self.donate
+                     else ())
+        self._prefill_b[key] = fn
+        return fn
+
     # -- admission ----------------------------------------------------------
     def _admit(self, requests: list[GenRequest]) -> list[GenRequest]:
         """Run the controller over the stream.  Each request is decided
@@ -650,6 +712,9 @@ class DecodeSession:
         self._eos = jnp.full((B,), -1, jnp.int32)
         self._active_host = np.zeros(B, bool)
         self._prefill_done: list[GenRequest] = []
+        # disaggregated hand-off: externally prefilled rows waiting
+        # for a free slot.  Each entry is (request, rows, first, plen).
+        self._insert_q: list[tuple] = []
         # paged pool: host-side block allocator.  The session is the
         # ONLY allocator; the device only ever sees the table it is
         # handed.  Block 0 is the trash block and never allocated.
@@ -664,6 +729,7 @@ class DecodeSession:
         self.occupied_slot_steps = 0
         self.host_syncs = 0
         self.prefill_calls = 0
+        self.insert_calls = 0
         self.device_s = 0.0
         self.blocks_allocated = 0
         self.blocks_freed = 0
@@ -672,7 +738,8 @@ class DecodeSession:
     # -- state --------------------------------------------------------------
     @property
     def idle(self) -> bool:
-        return not self.queue and not self._active_host.any()
+        return (not self.queue and not self._insert_q
+                and not self._active_host.any())
 
     @property
     def n_active(self) -> int:
@@ -684,6 +751,98 @@ class DecodeSession:
 
     def push(self, r: GenRequest) -> None:
         self.queue.append(r)
+
+    # -- disaggregated insert -----------------------------------------------
+    def insert_prefilled(self, r: GenRequest, rows, first: int,
+                         plen: int) -> None:
+        """Accept an EXTERNALLY prefilled request (disaggregated
+        serving): ``rows`` is a batch-1 contiguous row cache holding
+        the prompt's KV, ``first`` the greedy token the prefill pass
+        emitted, ``plen`` the padded prompt length the rows were built
+        at.  The request is seated into a free slot on the next
+        ``advance`` — or waits in FIFO order if none is free."""
+        self._insert_q.append((r, rows, first, plen))
+
+    def _drain_inserts(self) -> None:
+        """Seat queued externally-prefilled rows into free slots (the
+        ``insert`` step of the prefill->insert->generate split).  FIFO:
+        the head waits when no slot (or, paged, no block budget) is
+        free; EOS-at-prefill completes host-side and never occupies a
+        slot."""
+        eng = self.engine
+        B = eng.n_slots
+        bs = eng.cfg.kv_block_size if eng.paged else 0
+        while self._insert_q:
+            r, rows, first, plen = self._insert_q[0]
+            if r.eos_id is not None and first == r.eos_id:
+                # EOS straight out of prefill: complete without ever
+                # touching the pool
+                self._insert_q.pop(0)
+                r.generated.append(int(first))
+                r.done = True
+                self._prefill_done.append(r)
+                continue
+            free = [s for s in range(B) if not self._active_host[s]]
+            if not free:
+                return                       # all slots busy: wait
+            s = free[0]
+            if eng.paged:
+                allocatable = eng.pool_blocks - 1
+                need = blocks_for_request(plen, r.max_new, eng.max_seq,
+                                          bs)
+                if need > allocatable:
+                    raise ValueError(
+                        f"request rid={r.rid} needs {need} KV blocks "
+                        f"(prompt {plen} + max_new {r.max_new} rows at "
+                        f"block_size {bs}) but the pool has only "
+                        f"{allocatable} allocatable blocks — it can "
+                        f"never be inserted; raise kv_pool_blocks or "
+                        f"shrink the request budget")
+                if need > len(self._free_blocks):
+                    return                   # pool exhausted: wait
+                assigned = [self._free_blocks.pop()
+                            for _ in range(need)]
+                mb = eng.blocks_per_slot
+                row = np.zeros((mb,), np.int32)
+                row[:need] = assigned
+                self.blocks_allocated += need
+                self.peak_blocks_in_use = max(
+                    self.peak_blocks_in_use,
+                    allocatable - len(self._free_blocks))
+                fn = eng._insert_bucket_paged(plen)
+            else:
+                fn = eng._insert_bucket()
+            self._insert_q.pop(0)
+            slot_idx = jnp.asarray(np.array([s], np.int32))
+            first_a = jnp.asarray(np.array([first], np.int32))
+            pos_new = jnp.asarray(np.array([plen], np.int32))
+            rem_new = jnp.asarray(
+                np.array([max(r.max_new - 1, 1)], np.int32))
+            eos_new = jnp.asarray(np.array(
+                [-1 if r.eos_id is None else int(r.eos_id)], np.int32))
+            t0 = time.perf_counter()
+            if eng.paged:
+                table_rows = jnp.asarray(row[None, :])
+                (self._pool, self._cur_tok, self._pos, self._active,
+                 self._remaining, self._eos) = fn(
+                    self._pool, rows, slot_idx, table_rows, first_a,
+                    pos_new, self._cur_tok, self._pos, self._active,
+                    self._remaining, rem_new, self._eos, eos_new)
+                self._table_h[s] = row
+                self._slot_blocks[s] = assigned
+                self._table_dirty = True
+            else:
+                (self._pool, self._cur_tok, self._pos, self._active,
+                 self._remaining, self._eos) = fn(
+                    self._pool, rows, slot_idx, first_a, pos_new,
+                    self._cur_tok, self._pos, self._active,
+                    self._remaining, rem_new, self._eos, eos_new)
+            jax.block_until_ready(self._cur_tok)
+            self.device_s += time.perf_counter() - t0
+            self.insert_calls += 1
+            r.generated.append(int(first))
+            self.slots[s] = r
+            self._active_host[s] = True
 
     # -- refill -------------------------------------------------------------
     def _refill(self) -> None:
@@ -857,6 +1016,7 @@ class DecodeSession:
         Returns the requests COMPLETED by this window."""
         eng = self.engine
         B = eng.n_slots
+        self._drain_inserts()
         self._refill()
         done_at_prefill, self._prefill_done = self._prefill_done, []
         if not self._active_host.any():
@@ -911,6 +1071,7 @@ class DecodeSession:
                           if self.decode_steps else 0.0),
             "host_syncs": self.host_syncs,
             "prefill_calls": self.prefill_calls,
+            "insert_calls": self.insert_calls,
             "device_s": self.device_s,
         }
         if eng.paged:

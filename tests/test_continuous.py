@@ -583,3 +583,51 @@ def test_continuous_engine_with_controller():
     assert 0 < stats["n_admitted"] < 10      # controller pruned some
     skipped = [r for r in reqs if not r.admitted]
     assert all(r.done and not r.generated for r in skipped)
+
+# ---------------------------------------------------------------------------
+# SlotClock — direct unit coverage (previously only exercised through
+# SimContinuousEngine / the fleet layer)
+# ---------------------------------------------------------------------------
+
+def test_slot_clock_reserve_picks_earliest_free_slot():
+    from repro.serving.continuous import SlotClock
+    clk = SlotClock(n_slots=2)
+    s0, st0, f0 = clk.reserve(0.0, 1.0)
+    s1, st1, f1 = clk.reserve(0.0, 0.25)
+    assert s0 != s1 and st0 == st1 == 0.0
+    # the slot freeing at 0.25 (not the 1.0 one) takes the next job,
+    # and service starts at that slot's horizon, not at now
+    s2, st2, f2 = clk.reserve(0.0, 0.5)
+    assert s2 == s1
+    assert st2 == pytest.approx(0.25) and f2 == pytest.approx(0.75)
+    # start never precedes now on an already-free slot
+    s3, st3, f3 = clk.reserve(2.0, 0.5)
+    assert st3 == 2.0 and f3 == 2.5
+
+
+def test_slot_clock_pressure_monotone_and_zero_when_free():
+    from repro.serving.continuous import SlotClock
+    clk = SlotClock(n_slots=2)
+    clk.reserve(0.0, 1.0)
+    clk.reserve(0.0, 2.0)
+    ps = [clk.pressure(t) for t in (0.0, 0.5, 1.0, 1.5, 2.0, 3.0)]
+    assert all(a >= b for a, b in zip(ps, ps[1:]))   # non-increasing
+    # pressure is the wait for a NEW arrival: the earliest-free slot
+    assert ps[0] == pytest.approx(1.0)
+    assert clk.pressure(1.0) == 0.0                  # a slot just freed
+    # polling is side-effect-free
+    assert clk.pressure(0.0) == clk.pressure(0.0) == pytest.approx(1.0)
+
+
+def test_slot_clock_busy_counts_and_reset_clears():
+    from repro.serving.continuous import SlotClock
+    clk = SlotClock(n_slots=3)
+    clk.reserve(0.0, 1.0)
+    clk.reserve(0.0, 2.0)
+    assert clk.busy(0.5) == 2
+    assert clk.busy(1.5) == 1
+    assert clk.busy(2.5) == 0
+    clk.reset()
+    assert clk.busy(0.0) == 0
+    assert clk.pressure(0.0) == 0.0
+    assert clk.free_at == [0.0] * 3

@@ -1,0 +1,309 @@
+"""Disaggregated serving: the split-phase engine (prefill → insert →
+generate), the TransferQueue link, the phase-aware fleet layer, and
+the generate-kind live replica — with byte-identical greedy tokens vs
+the pooled ``DecodeSession`` as the parity oracle throughout."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.configs import get_smoke_config
+from repro.disagg import (DisaggEngine, DisaggEngineAdapter,
+                          DisaggSimulator, PhaseAwareRouter,
+                          PrefillEngine, TransferQueue,
+                          build_disagg_fleet)
+from repro.fleet import (Autoscaler, GENERATE_SCENARIOS, FleetSimulator,
+                         ReplicaPool, RoundRobinRouter,
+                         make_generate_scenario, make_live_replica,
+                         make_sim_replica)
+from repro.models import transformer as tfm
+from repro.serving import (InferRequest, Server, ServerConfig)
+from repro.serving.continuous import (ContinuousBatchingEngine,
+                                      GenRequest)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _smoke_cfg():
+    return get_smoke_config("stablelm-3b").replace(remat=False)
+
+
+def _paged(cfg, **kw):
+    return cfg.replace(kv_block_size=8, **kw)
+
+
+def _workload(cfg, n=6, plen=8, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, plen) for _ in range(n)]
+    return lambda: [GenRequest(rid=i, prompt=prompts[i],
+                               max_new=3 + (i % 3)) for i in range(n)]
+
+
+def _run_disagg(cfg, params, reqs, *, n_slots=3, max_seq=64,
+                prompt_len=8):
+    """Drive requests through the three-step API by hand: prefill all,
+    insert all, then advance the decode session dry."""
+    eng = DisaggEngine.build(cfg, params, n_slots=n_slots,
+                             max_seq=max_seq, sync_every=4)
+    session = eng.start_session()
+    for r in reqs:
+        pr = eng.prefill(r, prompt_len=prompt_len)
+        eng.insert(pr, session)
+    while not session.idle:
+        eng.generate(session)
+    return eng, session
+
+
+# ---------------------------------------------------------------------------
+# the parity oracle: split-phase == pooled, token for token
+# ---------------------------------------------------------------------------
+
+def test_disagg_token_parity_contiguous():
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    mk = _workload(cfg)
+    pooled = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=3, max_seq=64,
+                             sync_every=4).serve(pooled, prompt_len=8)
+    split = mk()
+    _, session = _run_disagg(cfg, params, split)
+    assert [r.generated for r in split] == [r.generated
+                                           for r in pooled]
+    assert all(r.done for r in split)
+    assert session.insert_calls == len(split)
+    assert session.stats()["insert_calls"] == len(split)
+
+
+def test_disagg_token_parity_paged():
+    """Prefill builds CONTIGUOUS batch-1 rows either way; the paged
+    insert scatters them into block-table pages.  Tokens must match
+    the pooled paged engine AND the contiguous topology."""
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    mk = _workload(cfg)
+    pooled = mk()
+    ContinuousBatchingEngine(_paged(cfg), params, n_slots=3,
+                             max_seq=64, sync_every=4) \
+        .serve(pooled, prompt_len=8)
+    split = mk()
+    eng, session = _run_disagg(_paged(cfg), params, split)
+    assert [r.generated for r in split] == [r.generated
+                                           for r in pooled]
+    assert eng.decode.paged and eng.prefill_engine.paged
+    # all blocks returned once every request completed
+    assert len(session._free_blocks) == eng.decode.pool_blocks - 1
+
+
+def test_insert_queue_waits_for_free_slots():
+    """More prefilled requests than slots: inserts queue host-side and
+    seat as slots free — nothing is dropped, order is FIFO."""
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    mk = _workload(cfg, n=7)
+    pooled = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=64,
+                             sync_every=4).serve(pooled, prompt_len=8)
+    split = mk()
+    _, session = _run_disagg(cfg, params, split, n_slots=2)
+    assert [r.generated for r in split] == [r.generated
+                                           for r in pooled]
+    assert not session._insert_q
+
+
+def test_eos_at_prefill_completes_without_a_slot():
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    eng = DisaggEngine.build(cfg, params, n_slots=2, max_seq=64)
+    rng = np.random.default_rng(3)
+    r = GenRequest(rid=0, prompt=rng.integers(0, cfg.vocab, 8),
+                   max_new=6)
+    pr = eng.prefill(r, prompt_len=8)
+    r2 = GenRequest(rid=1, prompt=r.prompt, max_new=6,
+                    eos_id=pr.first_token)
+    session = eng.start_session()
+    eng.insert(eng.prefill(r2, prompt_len=8), session)
+    done = session.advance()
+    assert [g.rid for g in done] == [1]
+    assert r2.done and r2.generated == [pr.first_token]
+    # the dead-on-arrival request never took a slot
+    assert session.n_active == 0 and not session._active_host.any()
+
+
+def test_prefill_engine_pads_like_the_pooled_refill():
+    cfg = _smoke_cfg()
+    pe = PrefillEngine(cfg, {}, max_seq=64)
+    # same rule as DecodeSession._refill: next pow2 bucket, capped
+    assert pe.pad_len(5) == 8
+    assert pe.pad_len(8) == 8
+    assert pe.pad_len(9) == 16
+    assert pe.pad_len(200) == 63          # max_seq - 1 cap
+    assert pe.pad_len(5, 12) == 12        # explicit override wins
+    # logical KV payload grows with prompt length, never with padding
+    assert 0 < pe.kv_bytes(8) < pe.kv_bytes(16)
+    assert pe.kv_bytes(8) == pe.kv_bytes(8)   # cached
+
+
+# ---------------------------------------------------------------------------
+# the link
+# ---------------------------------------------------------------------------
+
+def test_transfer_queue_serialises_and_accounts():
+    cfg = _smoke_cfg()
+    pe = PrefillEngine(cfg, {}, max_seq=64)
+    nbytes = pe.kv_bytes(8)
+    pr = lambda: type("P", (), {"kv_bytes": nbytes})()
+    q = TransferQueue(gbps=1e-3, base_latency_s=0.01)  # slow link
+    t1 = q.send(pr(), 0.0, dst="d0")
+    t2 = q.send(pr(), 0.0, dst="d1")
+    per = 0.01 + nbytes / 1e6
+    assert t1.arrive_t == pytest.approx(per)
+    # FIFO: the second transfer queues behind the first
+    assert t2.arrive_t == pytest.approx(2 * per)
+    assert q.n_transfers == 2 and q.total_bytes == 2 * nbytes
+    # pressure is the link's backlog-seconds and decays to zero
+    assert q.pressure(0.0) == pytest.approx(2 * per)
+    assert q.pressure(t2.arrive_t + 1.0) == 0.0
+    # deliver honours arrival times; deliver_all flushes
+    assert [t.dst for t in q.deliver(t1.arrive_t)] == ["d0"]
+    assert len(q.inflight) == 1
+    assert [t.dst for t in q.deliver_all()] == ["d1"]
+    q.reset()
+    assert q.n_transfers == 0 and not q.inflight
+
+
+# ---------------------------------------------------------------------------
+# EnginePort adapter (conformance proper lives in test_engine_port.py)
+# ---------------------------------------------------------------------------
+
+def test_disagg_adapter_reports_transfer_extras():
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    adapter = DisaggEngineAdapter(
+        DisaggEngine.build(cfg, params, n_slots=2, max_seq=32),
+        prompt_len=8)
+    rng = np.random.default_rng(1)
+    reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
+                         payload=rng.integers(
+                             0, cfg.vocab, 8).astype(np.int32),
+                         kind="generate", max_new=3)
+            for i in range(5)]
+    server = Server(adapter, ServerConfig(path="generate"))
+    out = server.serve(reqs)
+    assert sorted(r.rid for r in out) == list(range(5))
+    assert all(r.path == "generate" for r in out)
+    assert all(len(r.output) == 3 for r in out)
+    st = adapter.transfer.stats()
+    assert st["n_transfers"] == 5 and st["total_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the phase-aware fleet
+# ---------------------------------------------------------------------------
+
+def test_phase_aware_router_penalises_resource_pressure():
+    class Basin:
+        def __init__(self, rp):
+            self._rp = rp
+
+        def pressure(self, now):
+            return 0.1
+
+        def resource_pressure(self, now):
+            return self._rp
+
+    r = PhaseAwareRouter(slo_s=0.25)
+    free = r.congestion(Basin(0.0), 0.0, 0.25)
+    full = r.congestion(Basin(1.0), 0.0, 0.25)
+    assert full == pytest.approx(2 * free)
+    # replicas without the hook (classifier kinds) pay no penalty
+    class Plain:
+        def pressure(self, now):
+            return 0.1
+    assert r.congestion(Plain(), 0.0, 0.25) == pytest.approx(free)
+
+
+def test_disagg_simulator_serves_once_with_both_phases():
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    sc = make_generate_scenario("prompt-burst", 12, seed=0,
+                                vocab=cfg.vocab, short_prompt=8,
+                                long_prompt=16, max_new=3)
+    pool = build_disagg_fleet(cfg, params, n_prefill=2, n_decode=2,
+                              n_slots=2, max_seq=64)
+    sim = DisaggSimulator(pool, router=PhaseAwareRouter(),
+                          prefill_scaler=Autoscaler(min_window=4),
+                          decode_scaler=Autoscaler(min_window=4),
+                          scale_every=4)
+    rep = sim.run(sc.requests)
+    assert sorted(r["rid"] for r in rep.responses) == list(range(12))
+    assert all(len(r["tokens"]) >= 1 for r in rep.responses)
+    # both phases did real work, and the link carried every request
+    assert pool.prefill.n_served() == 12
+    assert pool.decode.n_served() == 12
+    assert rep.transfer["n_transfers"] == 12
+    assert rep.summary["energy_j"] > 0
+    assert rep.summary["prefill_energy_j"] > 0
+    assert rep.summary["decode_energy_j"] > 0
+    # causality: nothing finishes before it arrived
+    assert all(r["latency_s"] >= 0 for r in rep.responses)
+
+
+def test_generate_scenarios_build_generate_requests():
+    for name in GENERATE_SCENARIOS:
+        sc = make_generate_scenario(name, 20, seed=1, vocab=64)
+        assert sc.n == 20
+        ts = [r.arrival_s for r in sc.requests]
+        assert ts == sorted(ts)
+        assert all(r.kind == "generate" for r in sc.requests)
+        assert all(r.payload is not None and len(r.payload) > 0
+                   for r in sc.requests)
+        assert all(getattr(r, "max_new", 0) >= 1 for r in sc.requests)
+        sc2 = make_generate_scenario(name, 20, seed=1, vocab=64)
+        assert [r.arrival_s for r in sc2.requests] == ts
+
+
+def test_mixed_fleet_routes_strictly_by_kind():
+    """A pool holding classifier AND generate replicas must never
+    cross-route: classify requests cannot land on the generate
+    replica and vice versa, even under a kind-blind router."""
+    from repro.core import LatencyModel
+    from repro.serving import Oracle
+
+    cfg = _smoke_cfg()
+    params = tfm.init_lm(cfg, KEY)
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 2, 8)
+    oracle = Oracle(full_pred=labels.copy(), proxy_pred=labels.copy(),
+                    entropy=rng.uniform(0, 0.6, 8), labels=labels,
+                    proxy_latency=LatencyModel(0.0002, 0.0))
+    pool = ReplicaPool([
+        make_sim_replica("cls-0", "direct", oracle),
+        make_live_replica("gen-0", "generate", cfg, params,
+                          n_slots=2, max_seq=32, prompt_len=8),
+    ])
+    reqs = []
+    for i in range(8):
+        if i % 2 == 0:
+            reqs.append(InferRequest(rid=i, arrival_s=0.01 * i,
+                                     label=int(labels[i])))
+        else:
+            reqs.append(InferRequest(
+                rid=i, arrival_s=0.01 * i,
+                payload=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                kind="generate", max_new=3))
+    # kind filtering happens in routable_for, before the router sees
+    # the candidate list
+    cls_req, gen_req = reqs[0], reqs[1]
+    assert [r.name for r in pool.routable_for(cls_req)] == ["cls-0"]
+    assert [r.name for r in pool.routable_for(gen_req)] == ["gen-0"]
+
+    rep = FleetSimulator(pool, RoundRobinRouter()).run(reqs)
+    assert sorted(r.rid for r in rep.responses) == list(range(8))
+    assert rep.summary["routed"] == {"cls-0": 4, "gen-0": 4}
+    gen_out = [r for r in rep.responses if r.rid % 2 == 1]
+    assert all(r.path == "generate" for r in gen_out)
+    assert all(len(r.output) == 3 for r in gen_out)

@@ -118,6 +118,19 @@ def _case(name, classifier, lm):
                              kind="generate", max_new=3)
                 for i in range(N_REQ)]
         return eng, reqs, "continuous-decode"
+    if name == "disagg":
+        from repro.disagg import DisaggEngine, DisaggEngineAdapter
+        cfg, params = lm
+        eng = DisaggEngineAdapter(
+            DisaggEngine.build(cfg, params, n_slots=2, max_seq=32),
+            prompt_len=8)
+        rng = np.random.default_rng(1)
+        reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
+                             payload=rng.integers(
+                                 0, cfg.vocab, 8).astype(np.int32),
+                             kind="generate", max_new=3)
+                for i in range(N_REQ)]
+        return eng, reqs, "generate"
     if name == "callable":
         fn = jax.jit(lambda x: x)
         reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
@@ -129,7 +142,7 @@ def _case(name, classifier, lm):
 
 ENGINES = ("oracle", "sim-direct", "sim-batch", "sim-gated",
            "sim-continuous", "live-classifier", "live-gated",
-           "live-continuous", "callable")
+           "live-continuous", "disagg", "callable")
 
 
 @pytest.mark.parametrize("name", ENGINES)

@@ -362,3 +362,75 @@ def test_live_fleet_serves_scenario_on_real_engines():
 def test_live_fleet_rejects_non_live_kind():
     with pytest.raises(ValueError):
         build_live_fleet({}, {}, kinds=("continuous-decode",))
+
+
+def test_unknown_live_kind_suggests_nearest_valid():
+    from repro.fleet import make_live_replica
+
+    # a near-miss names its closest valid alternative
+    with pytest.raises(ValueError,
+                       match=r"did you mean 'dynamic-batch'\?"):
+        make_live_replica("r0", "dynamic-batsh", {}, {})
+    with pytest.raises(ValueError, match=r"did you mean 'generate'\?"):
+        build_live_fleet({}, {}, kinds=("generat",))
+    # gibberish with no close match still lists the valid set, sans
+    # suggestion
+    with pytest.raises(ValueError, match="expected one of") as ei:
+        make_live_replica("r0", "zzzz", {}, {})
+    assert "did you mean" not in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# committed CSV trace fixture (the JSON fixture's sibling: exercises
+# the csv.DictReader branch, empty-cell fills, and metadata columns)
+# ---------------------------------------------------------------------------
+
+CSV_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                           "trace_small.csv")
+
+
+def test_from_trace_csv_fixture():
+    sc = from_trace(CSV_FIXTURE, seed=0)
+    assert sc.name == "trace_small"
+    assert sc.n == 10
+    ts = [r.arrival_s for r in sc.requests]
+    assert ts == sorted(ts) and ts[0] == 0.0
+    # recorded CSV cells are honoured verbatim...
+    assert sc.requests[0].entropy_hint == pytest.approx(0.12)
+    assert sc.requests[0].label == 1
+    assert sc.requests[0].metadata == {"tenant": "interactive",
+                                       "slo_s": 0.1}
+    # ...empty tenant/slo_s cells leave metadata sparse...
+    by_arr = {r.arrival_s: r for r in sc.requests}
+    assert by_arr[0.02].metadata == {"tenant": "batch"}
+    assert by_arr[0.09].metadata == {}
+    # ...and blank entropy/label cells are drawn deterministically
+    assert all(r.entropy_hint is not None for r in sc.requests)
+    sc2 = from_trace(CSV_FIXTURE, seed=0)
+    assert ([r.entropy_hint for r in sc.requests]
+            == [r.entropy_hint for r in sc2.requests])
+    np.testing.assert_array_equal(sc.oracle.labels, sc2.oracle.labels)
+    # the replay runs under the ordinary fleet machinery
+    rep, _ = _run(sc, RoundRobinRouter())
+    assert sorted(r.rid for r in rep.responses) == list(range(sc.n))
+
+
+def test_with_payloads_label_override_keeps_flip_pattern():
+    """The rebuilt oracle must carry the scenario's proxy-disagreement
+    PATTERN onto the new labels — same requests disagree, just about
+    the new ground truth — so admission behaviour is comparable
+    before/after attaching a real dataset."""
+    sc = make_scenario("low-confidence-flood", 60, seed=2)
+    src = sc.oracle
+    flip_before = np.asarray(src.proxy_pred != src.labels)
+    assert flip_before.any()          # a flood proxy is adversarial
+
+    toks = np.zeros((60, 4), np.int32)
+    labels = np.asarray([i % 2 for i in range(60)])
+    live = with_payloads(sc, toks, labels=labels)
+    flip_after = np.asarray(live.oracle.proxy_pred
+                            != live.oracle.labels)
+    np.testing.assert_array_equal(flip_after, flip_before)
+    np.testing.assert_array_equal(live.oracle.full_pred, labels)
+    # entropies (the admission signal) are untouched by the override
+    np.testing.assert_array_equal(live.oracle.entropy, src.entropy)
