@@ -96,6 +96,7 @@ def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
     from repro.models import transformer as tfm
     from repro.serving.continuous import (ContinuousBatchingEngine,
                                           pool_hbm_bytes)
+    from repro.telemetry import EnergyDriftAudit, ProcessTimeSource
 
     cfg = get_smoke_config(ARCH).replace(remat=False)
     params = tfm.init_lm(cfg, jax.random.PRNGKey(0))
@@ -127,10 +128,16 @@ def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
         eng.serve(_requests(vcfg, n, seed=seed + 1),
                   prompt_len=PROMPT_LEN, legacy=kw["legacy"])
         reqs = _requests(vcfg, n, seed=seed)
+        # bracket the timed run with the measured-energy proxy so every
+        # variant reports modelled-vs-measured drift alongside J/token
+        audit = EnergyDriftAudit(source=ProcessTimeSource(
+            p_active_w=emodel.p_active)).start()
         t0 = time.perf_counter()
         stats = eng.serve(reqs, prompt_len=PROMPT_LEN,
                           legacy=kw["legacy"])
         wall = time.perf_counter() - t0
+        audit.record(emodel.p_active * wall, n)
+        drift = audit.stop()
         tokens = stats["tokens_generated"]
         hbm = pool_hbm_bytes(vcfg, slots, MAX_SEQ)
         rows.append({
@@ -151,6 +158,9 @@ def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
             "host_sync_frac": round(stats["host_sync_frac"], 4),
             "joules_per_token": round(
                 emodel.p_active * wall / max(tokens, 1), 4),
+            "energy_modelled_j": round(drift["modelled_j"], 3),
+            "energy_measured_j": round(drift["measured_j"], 3),
+            "energy_drift_ratio": round(drift["drift_ratio"], 3),
             "kv_hbm_bytes": hbm["kv_bytes"],
             "meta_hbm_bytes": hbm["meta_bytes"],
             "kv_bytes_per_slot": hbm["kv_bytes"] // slots,

@@ -100,8 +100,21 @@ class DisaggEngineAdapter:
         t0 = time.perf_counter()
         pr = self.engine.prefill(gr, prompt_len=self.prompt_len)
         dt = time.perf_counter() - t0
-        _, finish = self._prefill_line.reserve(now, dt)
-        self.transfer.send(pr, finish)
+        start, finish = self._prefill_line.reserve(now, dt)
+        t = self.transfer.send(pr, finish)
+        tracer = getattr(ctx, "tracer", None)
+        if tracer is not None and tracer.enabled:
+            s = tracer.begin("prefill", start,
+                             resource="disagg.prefill", rid=req.rid,
+                             plen=pr.plen, kv_bytes=pr.kv_bytes)
+            tracer.end(s, finish)
+            if t.start_t > t.send_t:
+                w = tracer.begin("transfer.wait", t.send_t, rid=req.rid)
+                tracer.end(w, t.start_t)
+            x = tracer.begin("transfer", t.start_t,
+                             resource="disagg.link", rid=req.rid,
+                             bytes=t.n_bytes)
+            tracer.end(x, t.arrive_t)
         return []
 
     def _deliver(self, now: float, *, everything: bool = False) -> None:
@@ -113,7 +126,7 @@ class DisaggEngineAdapter:
         for t in landed:
             self.engine.insert(t.result, session)
 
-    def _advance_once(self, now: float) -> list[Completion]:
+    def _advance_once(self, now: float, ctx=None) -> list[Completion]:
         t0 = time.perf_counter()
         finished = self._session.advance()
         self._pending_dt += time.perf_counter() - t0
@@ -128,6 +141,15 @@ class DisaggEngineAdapter:
         reqs = [self._by_rid.pop(g.rid) for g in finished]
         extras = dict(self._session.stats())
         extras["transfer"] = self.transfer.stats()
+        tracer = getattr(ctx, "tracer", None) if ctx is not None else None
+        if tracer is not None and tracer.enabled:
+            # one span per completing window group; non-completing
+            # windows folded their walltime into this span already
+            s = tracer.begin("decode.window", start,
+                             resource="disagg.decode",
+                             finished=len(finished),
+                             active=self._session.n_active)
+            tracer.end(s, finish)
         return [Completion(requests=reqs,
                            outputs=[list(g.generated)
                                     for g in finished],
@@ -139,7 +161,7 @@ class DisaggEngineAdapter:
         if (not self.advance_on_arrival or self._session is None
                 or self._session.idle):
             return []
-        return self._advance_once(now)
+        return self._advance_once(now, ctx)
 
     def drain(self, now, ctx) -> list[Completion]:
         # fast-forward past the slowest in-flight transfer so the
@@ -151,5 +173,5 @@ class DisaggEngineAdapter:
             return []
         out: list[Completion] = []
         while not self._session.idle:
-            out.extend(self._advance_once(horizon))
+            out.extend(self._advance_once(horizon, ctx))
         return out

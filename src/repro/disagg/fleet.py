@@ -36,6 +36,8 @@ from repro.fleet.router import EnergyAwareRouter
 from repro.serving.batcher import ServiceLine
 from repro.serving.continuous import (ContinuousBatchingEngine,
                                       DecodeSession, GenRequest)
+from repro.telemetry.metrics import NULL_METRICS
+from repro.telemetry.trace import NULL_TRACER
 
 
 class _PhaseWorker:
@@ -282,6 +284,8 @@ class DisaggSimulator:
     decode_scaler: Autoscaler | None = None
     prompt_len: int | None = None
     scale_every: int = 20
+    tracer: object = None              # telemetry.trace recorder; None=off
+    metrics: object = None             # telemetry.metrics registry; None=off
 
     def _decode_worker(self, name: str) -> DecodeWorker:
         for w in self.pool.decode_workers:
@@ -289,21 +293,79 @@ class DisaggSimulator:
                 return w
         raise KeyError(name)
 
+    def _export_gauges(self, metrics, now: float) -> None:
+        """Per-worker gauges each scale tick: pressure, KV-residency
+        pressure, EnergyMeter-style J/request EWMA, τ(t) and admission
+        rate (phase workers carry no controller — admission happens at
+        the front end — so τ is +Inf / admission 1.0: open loop)."""
+        for phase, workers in (("prefill", self.pool.prefill_workers),
+                               ("decode", self.pool.decode_workers)):
+            for w in workers:
+                lab = {"replica": w.name, "phase": phase}
+                metrics.gauge("fleet_pressure",
+                              "backlog seconds per worker").set(
+                    w.pressure(now), **lab)
+                metrics.gauge("fleet_resource_pressure",
+                              "KV residency / slot occupancy").set(
+                    w.resource_pressure(now), **lab)
+                metrics.gauge("fleet_joules_per_request",
+                              "closed-loop J/request EWMA").set(
+                    w.joules_per_request(), **lab)
+                metrics.gauge("fleet_n_served",
+                              "requests served so far").set(
+                    w.n_served, **lab)
+                ctl = w.controller
+                tau, admit = float("inf"), 1.0
+                if ctl is not None:
+                    tau = ctl.peek(now)[0]
+                    admit = ctl.admission_rate
+                metrics.gauge("fleet_tau",
+                              "admission threshold τ(t)").set(
+                    tau, **lab)
+                metrics.gauge("fleet_admission_rate",
+                              "fraction admitted").set(admit, **lab)
+        metrics.gauge("fleet_pressure").set(
+            self.pool.transfer.pressure(now),
+            replica="link", phase="transfer")
+
     def _deliver(self, now: float, *, everything: bool = False
                  ) -> list[Transfer]:
         landed = (self.pool.transfer.deliver_all() if everything
                   else self.pool.transfer.deliver(now))
         for t in landed:
             self._decode_worker(t.dst).insert(t.result)
+            self._arrived[t.result.request.rid] = t.arrive_t
         return landed
 
     def _advance_ready(self, now: float, finish_t: dict) -> None:
+        tracer = self._tracer
         for w in self.pool.decode_workers:
             if w.session.idle:
                 continue
-            finished, _, fin = w.advance(now)
+            finished, wstart, fin = w.advance(now)
+            if tracer.enabled and fin > wstart:
+                tracer.span("decode.window", wstart, fin,
+                            resource=w.name, finished=len(finished),
+                            active=w.session.n_active)
             for g in finished:
                 finish_t[g.rid] = (fin, w.name)
+                if not tracer.enabled:
+                    continue
+                root = self._roots.pop(g.rid, None)
+                # decode occupancy: the request holds one slot from
+                # (KV landed, slot free) until its finishing window —
+                # slot exclusivity makes the per-slot track non-overlap
+                if g.slot is not None:
+                    res = f"{w.name}/slot{g.slot}"
+                    dstart = max(self._arrived.get(g.rid, wstart),
+                                 self._slot_free.get(res, 0.0))
+                    dstart = min(dstart, fin)
+                    self._slot_free[res] = fin
+                    tracer.span("decode", dstart, fin, parent=root,
+                                resource=res, rid=g.rid,
+                                n_tokens=len(g.generated))
+                if root is not None:
+                    tracer.end(root, fin, decode_worker=w.name)
 
     def run(self, requests: list) -> DisaggReport:
         reqs = sorted(requests, key=lambda r: r.arrival_s)
@@ -312,6 +374,13 @@ class DisaggSimulator:
         finish_t: dict[int, tuple] = {}
         prefill_of: dict[int, str] = {}
         decode_of: dict[int, str] = {}
+        tracer = self._tracer = (self.tracer if self.tracer is not None
+                                 else NULL_TRACER)
+        metrics = (self.metrics if self.metrics is not None
+                   else NULL_METRICS)
+        self._roots: dict[int, object] = {}
+        self._arrived: dict[int, float] = {}
+        self._slot_free: dict[str, float] = {}
         now = 0.0
         for i, req in enumerate(reqs):
             arr = float(req.arrival_s)
@@ -326,31 +395,61 @@ class DisaggSimulator:
                                    or {}).get("eos_id"))
             gen[req.rid] = g
             meta[req.rid] = req
+            root = None
+            if tracer.enabled:
+                root = tracer.begin("request", arr, rid=req.rid,
+                                    kind="generate")
+                self._roots[req.rid] = root
             # phase 1: prefill basin
             pws = self.pool.prefill.routable()
             if not pws:                  # scaled to zero: revive one
                 self.pool.prefill_workers[0].revive()
                 pws = self.pool.prefill.routable()
             pw = self.router.route(req, pws, now)
-            pr, _, fin = pw.prefill(g, now, prompt_len=self.prompt_len)
+            pr, pstart, fin = pw.prefill(g, now,
+                                         prompt_len=self.prompt_len)
             prefill_of[req.rid] = pw.name
+            if tracer.enabled:
+                tracer.span("prefill", pstart, fin, parent=root,
+                            resource=pw.name, rid=req.rid,
+                            plen=pr.plen, kv_bytes=pr.kv_bytes)
             # phase 2: the link — decode basin chosen at send time
             dws = self.pool.decode.routable()
             if not dws:
                 self.pool.decode_workers[0].revive()
                 dws = self.pool.decode.routable()
             dw = self.router.route(req, dws, fin)
-            self.pool.transfer.send(pr, fin, dst=dw.name)
+            t = self.pool.transfer.send(pr, fin, dst=dw.name)
             decode_of[req.rid] = dw.name
+            if tracer.enabled:
+                if t.start_t > t.send_t:
+                    tracer.span("transfer.wait", t.send_t, t.start_t,
+                                parent=root, rid=req.rid)
+                tracer.span("transfer", t.start_t, t.arrive_t,
+                            parent=root, resource="link", rid=req.rid,
+                            bytes=t.n_bytes, dst=dw.name)
             # phase 3: interleave decode windows with the stream
             self._deliver(now)
             self._advance_ready(now, finish_t)
-            if (self.prefill_scaler or self.decode_scaler) and \
-                    (i + 1) % self.scale_every == 0:
+            if (i + 1) % self.scale_every == 0:
                 if self.prefill_scaler:
-                    self.prefill_scaler.observe(now, self.pool.prefill)
+                    acts = self.prefill_scaler.observe(
+                        now, self.pool.prefill)
+                    for kind, name in acts or ():
+                        tracer.event("autoscale", now,
+                                     resource="autoscaler",
+                                     phase="prefill", action=kind,
+                                     replica=name)
                 if self.decode_scaler:
-                    self.decode_scaler.observe(now, self.pool.decode)
+                    acts = self.decode_scaler.observe(
+                        now, self.pool.decode)
+                    for kind, name in acts or ():
+                        tracer.event("autoscale", now,
+                                     resource="autoscaler",
+                                     phase="decode", action=kind,
+                                     replica=name)
+                if metrics.enabled:
+                    self._export_gauges(metrics, now)
         # drain: fast-forward past the slowest in-flight transfer
         horizon = max([now] + [t.arrive_t
                                for t in self.pool.transfer.inflight])
@@ -360,6 +459,12 @@ class DisaggSimulator:
         while any(not w.session.idle
                   for w in self.pool.decode_workers):
             self._advance_ready(now, finish_t)
+        if tracer.enabled and self._roots:
+            # every request must harvest through _advance_ready; a
+            # leftover root is a lost request — flag it for the validator
+            for root in self._roots.values():
+                tracer.end(root, now, error="unfinished")
+            self._roots.clear()
         responses = []
         for req in reqs:
             g = gen[req.rid]
@@ -399,6 +504,13 @@ class DisaggSimulator:
             for w in (self.pool.prefill_workers
                       + self.pool.decode_workers)
         }
+        if metrics.enabled:
+            self._export_gauges(metrics, now)
+            metrics.gauge("fleet_energy_j",
+                          "modelled joules by phase pool").set(
+                self.pool.prefill.energy_j(), phase="prefill")
+            metrics.gauge("fleet_energy_j").set(
+                self.pool.decode.energy_j(), phase="decode")
         return DisaggReport(
             responses=responses, summary=summary,
             per_worker=per_worker,

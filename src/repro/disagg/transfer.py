@@ -25,6 +25,7 @@ class Transfer:
     arrive_t: float
     n_bytes: int
     dst: str | None = None
+    start_t: float = 0.0             # when the link actually picked it up
 
 
 @dataclass
@@ -46,9 +47,9 @@ class TransferQueue:
     def send(self, pr: PrefillResult, now: float,
              dst: str | None = None) -> Transfer:
         dur = self.base_latency_s + pr.kv_bytes / (self.gbps * 1e9)
-        _, arrive = self._line.reserve(now, dur)
+        start, arrive = self._line.reserve(now, dur)
         t = Transfer(result=pr, send_t=now, arrive_t=arrive,
-                     n_bytes=pr.kv_bytes, dst=dst)
+                     n_bytes=pr.kv_bytes, dst=dst, start_t=start)
         self._inflight.append(t)
         self.total_bytes += pr.kv_bytes
         self.n_transfers += 1

@@ -290,9 +290,54 @@ class FleetSimulator:
     autoscaler: Autoscaler | None = None
     carbon: CarbonTracker = field(default_factory=CarbonTracker)
     scale_every: int = 20          # autoscaler cadence, in arrivals
+    tracer: object = None          # telemetry.trace recorder; None=off
+    metrics: object = None         # telemetry.metrics registry; None=off
+
+    def _export_gauges(self, metrics, now: float) -> None:
+        """Per-replica gauges each scale tick: pressure, queue depth,
+        EnergyMeter EWMA, τ(t) via the side-effect-free ``peek``, and
+        admission rate (open-loop replicas read τ=+Inf, rate 1.0)."""
+        for r in self.pool.replicas:
+            lab = {"replica": r.name, "kind": r.kind}
+            metrics.gauge("fleet_pressure",
+                          "backlog seconds per replica").set(
+                r.pressure(now), **lab)
+            metrics.gauge("fleet_queue_depth",
+                          "requests queued per replica").set(
+                r.load().queue_depth, **lab)
+            metrics.gauge("fleet_joules_per_request",
+                          "EnergyMeter EWMA (or prior)").set(
+                r.joules_per_request(), **lab)
+            ctl = r.controller
+            tau, admit = float("inf"), 1.0
+            if ctl is not None:
+                tau = ctl.peek(now)[0]
+                rate = ctl.admission_rate
+                admit = rate if rate == rate else 1.0   # NaN pre-traffic
+            metrics.gauge("fleet_tau",
+                          "admission threshold τ(t)").set(tau, **lab)
+            metrics.gauge("fleet_admission_rate",
+                          "fraction admitted").set(admit, **lab)
+        metrics.gauge("fleet_energy_j", "fleet modelled joules").set(
+            self.pool.energy_j())
 
     def run(self, requests) -> FleetReport:
+        from repro.telemetry.metrics import NULL_METRICS
+        from repro.telemetry.trace import NULL_TRACER
         requests = sorted(requests, key=lambda r: r.arrival_s)
+        tracer = self.tracer if self.tracer is not None else NULL_TRACER
+        metrics = (self.metrics if self.metrics is not None
+                   else NULL_METRICS)
+        if tracer.enabled or metrics.enabled:
+            # thread the recorders into every replica's Server (the
+            # replica name prefixes its resource tracks) BEFORE
+            # start() binds them into the server context
+            for r in self.pool.replicas:
+                r.server.tracer = self.tracer
+                r.server.metrics = self.metrics
+                r.server.name = r.name
+            if getattr(self.router, "tracer", "no") is None:
+                self.router.tracer = self.tracer
         self.pool.start()
         prev = float(requests[0].arrival_s) if requests else 0.0
         first = prev
@@ -304,8 +349,15 @@ class FleetSimulator:
             for r in self.pool.replicas:
                 if r.state != STOPPED:
                     r.poke(now)
-            if self.autoscaler is not None and i % self.scale_every == 0:
-                self.autoscaler.observe(now, self.pool)
+            if i % self.scale_every == 0:
+                if self.autoscaler is not None:
+                    acts = self.autoscaler.observe(now, self.pool)
+                    for kind, name in acts or ():
+                        tracer.event("autoscale", now,
+                                     resource="autoscaler",
+                                     action=kind, replica=name)
+                if metrics.enabled:
+                    self._export_gauges(metrics, now)
             replica = self.router.route(req, self.pool.routable_for(req),
                                         now)
             replica.push(req)
@@ -314,6 +366,8 @@ class FleetSimulator:
         for r in self.pool.replicas:
             responses.extend(r.finish(prev))
         responses.sort(key=lambda x: x.rid)
+        if metrics.enabled:
+            self._export_gauges(metrics, prev)
 
         # the fleet span ends at the last completion ANYWHERE (a
         # drained replica's final flush can be the latest event);

@@ -91,6 +91,7 @@ class EnergyAwareRouter:
     slo_s: float = 0.25
     history: list = field(default_factory=list, init=False)
     log_history: bool = False
+    tracer: object = None              # telemetry.trace recorder, optional
 
     def congestion(self, replica: Replica, now: float,
                    slo_s: float) -> float:
@@ -136,6 +137,14 @@ class EnergyAwareRouter:
             self.history.append(
                 (now, req.rid, chosen.name,
                  [round(self.score(r, now, slo), 4) for r in ranked]))
+        if self.tracer is not None and self.tracer.enabled:
+            # decision instant with the full scored candidate list —
+            # guarded so untraced runs never pay the re-scoring cost
+            self.tracer.event(
+                "route", now, resource="router", rid=req.rid,
+                chosen=chosen.name,
+                scores={r.name: round(self.score(r, now, slo), 4)
+                        for r in ranked})
         return chosen
 
 

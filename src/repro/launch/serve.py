@@ -61,8 +61,57 @@ from repro.serving import (AdmissionMiddleware, ClassifierEngine,
                            ServerConfig, TelemetryMiddleware,
                            bursty_arrivals, canonical_path,
                            poisson_arrivals)
-from repro.telemetry import CarbonTracker, Tracker
+from repro.telemetry import (NULL_METRICS, NULL_TRACER, CarbonTracker,
+                             EnergyDriftAudit, MetricsRegistry, Tracer,
+                             Tracker, export_observability,
+                             make_measured_source, validate_trace)
 from repro.training import ClassificationData, train_classifier
+
+
+def make_observability(args):
+    """Tracer / metrics / drift-audit kit for one serving run.
+
+    Real recorders only when ``--trace-out``/``--metrics-out`` asked
+    for exports — the default stays the no-op fast path so untraced
+    runs pay nothing.  The drift audit starts its measured-energy
+    window immediately."""
+    if not (getattr(args, "trace_out", None)
+            or getattr(args, "metrics_out", None)):
+        return NULL_TRACER, NULL_METRICS, None
+    audit = EnergyDriftAudit(
+        source=make_measured_source(args.energy_source)).start()
+    return Tracer(), MetricsRegistry(), audit
+
+
+def finish_observability(args, run, tracer, metrics, audit, *,
+                         modelled_j: float = 0.0,
+                         n_requests: int = 0) -> dict:
+    """Close the drift window, land artifacts beside the run's CSVs,
+    and write the ``--trace-out``/``--metrics-out`` files.  Returns the
+    drift report (empty when observability is off)."""
+    import os
+    import sys
+
+    if audit is None:
+        return {}
+    audit.record(modelled_j, n_requests)
+    report = audit.stop()
+    if metrics.enabled:
+        audit.export(metrics)
+    if run is not None:
+        export_observability(run, tracer=tracer, metrics=metrics,
+                            audit=audit)
+    if getattr(args, "trace_out", None) and tracer.enabled:
+        problems = validate_trace(tracer.spans)
+        if problems:       # keep the artifact; CI's validator decides
+            print("trace audit: " + "; ".join(problems[:5]),
+                  file=sys.stderr)
+        tracer.write_chrome(args.trace_out)
+    if getattr(args, "metrics_out", None) and metrics.enabled:
+        metrics.write_json(args.metrics_out)
+        metrics.write_prometheus(
+            os.path.splitext(args.metrics_out)[0] + ".prom")
+    return report
 
 
 def build_classifier(seed: int = 0, steps: int = 150):
@@ -148,9 +197,11 @@ def serve_classifier(args) -> dict:
                            queue_window_s=args.window))
         reqs = _arrivals(args, labels)
 
+    tracer, metrics, audit = make_observability(args)
     telem = TelemetryMiddleware(run=run)
     server = Server(port, ServerConfig(path=path),
-                    middleware=[AdmissionMiddleware(ctrl), telem])
+                    middleware=[AdmissionMiddleware(ctrl), telem],
+                    tracer=tracer, metrics=metrics)
     if path == "gated-in-graph":
         carbon.start()
         server.serve(reqs)
@@ -160,6 +211,11 @@ def serve_classifier(args) -> dict:
     summary = server.summary()
     summary["controller"] = args.controller
     summary["path"] = path
+    drift = finish_observability(args, run, tracer, metrics, audit,
+                                 modelled_j=server.energy_j,
+                                 n_requests=args.requests)
+    if drift:
+        summary["energy_drift_ratio"] = drift["drift_ratio"]
 
     run.log_params(**vars(args))
     run.log_metrics(0, **{k: v for k, v in summary.items()
@@ -210,15 +266,22 @@ def serve_fleet(args) -> dict:
                                queue_window_s=args.window,
                                n_slots=args.slots)
     carbon = CarbonTracker(region=args.region)
+    tracer, metrics, audit = make_observability(args)
     sim = FleetSimulator(
         pool, make_router(args.policy),
         autoscaler=Autoscaler() if args.autoscale else None,
-        carbon=carbon)
+        carbon=carbon, tracer=tracer, metrics=metrics)
     report = sim.run(scenario.requests)
 
     tracker = Tracker(root=args.runs)
     mode = "fleet-live" if args.fleet_live else "fleet"
     run = tracker.start_run(f"{mode}-{scenario.name}-{args.policy}")
+    drift = finish_observability(
+        args, run, tracer, metrics, audit,
+        modelled_j=float(report.summary.get("energy_j", 0.0)),
+        n_requests=int(report.summary.get("n", args.requests)))
+    if drift:
+        report.summary["energy_drift_ratio"] = drift["drift_ratio"]
     run.log_params(**{k: str(v) for k, v in vars(args).items()})
     run.log_metrics(0, **{k: v for k, v in report.summary.items()
                           if isinstance(v, (int, float))})
@@ -262,14 +325,22 @@ def serve_disagg(args) -> dict:
                               n_prefill=args.prefill_workers,
                               n_decode=args.decode_workers,
                               n_slots=args.slots, max_seq=64)
+    tracer, metrics, audit = make_observability(args)
     sim = DisaggSimulator(
         pool, router=PhaseAwareRouter(),
         prefill_scaler=Autoscaler() if args.autoscale else None,
-        decode_scaler=Autoscaler() if args.autoscale else None)
+        decode_scaler=Autoscaler() if args.autoscale else None,
+        tracer=tracer, metrics=metrics)
     report = sim.run(scenario.requests)
 
     tracker = Tracker(root=args.runs)
     run = tracker.start_run(f"fleet-disagg-{scenario.name}")
+    drift = finish_observability(
+        args, run, tracer, metrics, audit,
+        modelled_j=float(report.summary.get("energy_j", 0.0)),
+        n_requests=int(report.summary.get("n", args.requests)))
+    if drift:
+        report.summary["energy_drift_ratio"] = drift["drift_ratio"]
     run.log_params(**{k: str(v) for k, v in vars(args).items()})
     run.log_metrics(0, **{k: v for k, v in report.summary.items()
                           if isinstance(v, (int, float))})
@@ -301,15 +372,22 @@ def serve_generate(args) -> dict:
                            size=(args.requests, 16)).astype(np.int32)
     ctrl = make_controller(args.controller, weights=args.weights,
                            target_rate=args.target_rate)
+    tracer, metrics, audit = make_observability(args)
     server = Server(ContinuousEngineAdapter(engine, prompt_len=16),
                     ServerConfig(path="continuous-decode"),
-                    middleware=[AdmissionMiddleware(ctrl)])
+                    middleware=[AdmissionMiddleware(ctrl)],
+                    tracer=tracer, metrics=metrics)
     reqs = [InferRequest(rid=i, arrival_s=0.001 * i, payload=prompts[i],
                          kind="generate", max_new=args.new_tokens,
                          entropy_hint=float(rng.uniform(0, 1)))
             for i in range(args.requests)]
     responses = server.serve(reqs)
     summary = server.summary()
+    drift = finish_observability(args, None, tracer, metrics, audit,
+                                 modelled_j=server.energy_j,
+                                 n_requests=args.requests)
+    if drift:
+        summary["energy_drift_ratio"] = drift["drift_ratio"]
     summary.pop("accuracy", None)     # no labels in generation mode
     # decode windows complete mid-stream now, so the LAST response may
     # be a skip — the cumulative session stats ride on the last
@@ -374,6 +452,21 @@ def main():
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--window", type=float, default=0.01)
     ap.add_argument("--region", default="world_avg")
+    # observability (repro.telemetry.trace / .metrics / .drift)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON (load it at "
+                         "https://ui.perfetto.dev) covering every "
+                         "request's triage/queue/execute spans; "
+                         "enables tracing for the run")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot (JSON) "
+                         "plus a Prometheus text sibling (.prom); "
+                         "enables metrics for the run")
+    ap.add_argument("--energy-source", default="process",
+                    choices=["process", "nvml", "tpu"],
+                    help="measured-energy reader for the drift audit "
+                         "(modelled vs measured joules); the default "
+                         "process-time proxy works everywhere")
     ap.add_argument("--runs", default="runs")
     ap.add_argument("--seed", type=int, default=0)
     # fleet mode

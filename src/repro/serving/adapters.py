@@ -109,7 +109,8 @@ class OracleEngine:
             requests=b.requests,
             outputs=[int(self.oracle.full_pred[r.rid])
                      for r in b.requests],
-            path=path, t_start=b.t_start, t_finish=b.t_finish)
+            path=path, t_start=b.t_start, t_finish=b.t_finish,
+            extras={"flush": b.reason})
 
     def submit(self, req, path, now, ctx) -> list[Completion]:
         if path == PATH_DIRECT:
@@ -216,7 +217,8 @@ class ClassifierEngineAdapter:
         preds, dt = self.engine.classify(toks)
         start, finish = self._line.reserve(b.t_formed, dt)
         return Completion(b.requests, [int(p) for p in preds],
-                          PATH_DYNAMIC_BATCH, start, finish)
+                          PATH_DYNAMIC_BATCH, start, finish,
+                          extras={"flush": b.reason})
 
 
 # ---------------------------------------------------------------------------
@@ -312,7 +314,8 @@ class GatedEngineAdapter:
             outputs=[int(p) for p in np.asarray(pred[:n])],
             path=PATH_GATED, t_start=start, t_finish=finish,
             admit_mask=[bool(a) for a in np.asarray(admit[:n])],
-            extras={"tau": tau, "e_norm": e_norm, "c_norm": c_norm},
+            extras={"tau": tau, "e_norm": e_norm, "c_norm": c_norm,
+                    "flush": b.reason},
             per_request=[{"entropy": float(e)}
                          for e in np.asarray(ent[:n])])
 
@@ -342,6 +345,7 @@ class ContinuousEngineAdapter:
     _by_rid: dict = field(default_factory=dict, init=False)
     _free_at: float = field(default=0.0, init=False)
     _pending_dt: float = field(default=0.0, init=False)
+    _win_free_at: float = field(default=0.0, init=False)
 
     def capabilities(self) -> EngineCapabilities:
         return EngineCapabilities(name="continuous", kind="generate",
@@ -354,6 +358,7 @@ class ContinuousEngineAdapter:
         self._by_rid.clear()
         self._free_at = 0.0
         self._pending_dt = 0.0
+        self._win_free_at = 0.0
 
     def _ensure_session(self):
         if self._session is None:
@@ -393,10 +398,35 @@ class ContinuousEngineAdapter:
         self._ensure_session().push(gr)
         return []
 
-    def _advance_once(self, now: float) -> list[Completion]:
+    def _advance_once(self, now: float, ctx=None) -> list[Completion]:
+        tracer = ctx.tracer if ctx is not None else None
+        trace_on = tracer is not None and tracer.enabled
+        if trace_on:
+            s = self._session
+            c0 = self.engine.decode_compile_count
+            syncs0, steps0 = s.host_syncs, s.decode_steps
         t0 = time.perf_counter()
         finished = self._session.advance()
-        self._pending_dt += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._pending_dt += dt
+        if trace_on:
+            # one fused lax.scan window = one host sync; the span sits
+            # on its own device track so no-completion windows stay
+            # visible (the execute track only shows completing ones).
+            # Reads only counters advance() already synced — tracing
+            # must never add a host sync of its own.
+            wstart = max(now, self._win_free_at)
+            wfinish = wstart + dt
+            self._win_free_at = wfinish
+            compiles = self.engine.decode_compile_count - c0
+            tracer.span("decode.window", wstart, wfinish,
+                        resource="decode.device",
+                        host_syncs=s.host_syncs - syncs0,
+                        decode_steps=s.decode_steps - steps0,
+                        active=s.n_active, finished=len(finished))
+            if compiles:
+                tracer.event("xla.compile", wstart,
+                             resource="decode.device", count=compiles)
         if not finished:
             # busy time of windows that completed nothing is folded
             # into the next completing window's span
@@ -417,14 +447,14 @@ class ContinuousEngineAdapter:
         if (not self.advance_on_arrival or self._session is None
                 or self._session.idle):
             return []
-        return self._advance_once(now)
+        return self._advance_once(now, ctx)
 
     def drain(self, now, ctx) -> list[Completion]:
         if self._session is None:
             return []
         out: list[Completion] = []
         while not self._session.idle:
-            out.extend(self._advance_once(now))
+            out.extend(self._advance_once(now, ctx))
         return out
 
 

@@ -39,7 +39,9 @@ from repro.core.controller import AdmissionController, Decision
 from repro.core.energy import EnergyModel
 from repro.core.threshold import AdaptiveThreshold
 from repro.serving.workload import Request
+from repro.telemetry.metrics import NULL_METRICS
 from repro.telemetry.request_log import RequestLog
+from repro.telemetry.trace import NULL_TRACER
 
 # -- canonical path names ---------------------------------------------------
 PATH_DIRECT = "direct"
@@ -348,6 +350,8 @@ class ServerContext:
     lat_window: list = field(default_factory=list)
     snapshot: Callable[[float], tuple] | None = None
     extras: dict = field(default_factory=dict)
+    tracer: Any = NULL_TRACER          # telemetry.trace recorder
+    metrics: Any = NULL_METRICS        # telemetry.metrics registry
 
 
 def _default_snapshot(t: float) -> tuple[float, float, float]:
@@ -375,6 +379,9 @@ class Server:
     engine: EnginePort
     config: ServerConfig = field(default_factory=ServerConfig)
     middleware: list = field(default_factory=list)
+    tracer: Any = None                 # telemetry.trace.Tracer; None=off
+    metrics: Any = None                # telemetry.metrics registry; None=off
+    name: str = ""                     # trace-resource prefix (fleet replica)
 
     responses: list = field(default_factory=list, init=False)
     log: RequestLog = field(init=False)
@@ -414,7 +421,12 @@ class Server:
         self._caps = self.engine.capabilities()
         ctx = ServerContext(config=self.config, engine=self.engine,
                             energy_model=self.config.energy_model,
-                            n_chips=self.config.n_chips)
+                            n_chips=self.config.n_chips,
+                            tracer=(self.tracer if self.tracer is not None
+                                    else NULL_TRACER),
+                            metrics=(self.metrics if self.metrics is not None
+                                     else NULL_METRICS))
+        self._roots: dict[int, Any] = {}   # rid -> open root span
         for mw in self.middleware:
             snap = getattr(mw, "snapshot", None)
             if callable(snap):
@@ -447,12 +459,23 @@ class Server:
         self._absorb(self.engine.step(now, ctx), ctx, self._decisions,
                      self._out)
 
+        tracer, root = ctx.tracer, None
+        if tracer.enabled:
+            # root span: covers triage -> admission -> queue -> execute;
+            # closed in _absorb (or below for skips)
+            root = tracer.begin("request", now, rid=req.rid,
+                                kind=getattr(req, "kind", "classify"))
+            self._roots[req.rid] = root
+
         for mw in self.middleware:
             mw.on_enqueue(req, ctx)
 
         # proxy triage (cheap uncertainty signal; busy-time cost)
         tri = self.engine.triage(req, now, ctx)
         ctx.busy_s += tri.cost_s
+        if tracer.enabled:
+            tracer.span("triage", now, now + tri.cost_s, parent=root,
+                        L=tri.L, cost_s=tri.cost_s)
 
         # admission: last non-None middleware decision wins;
         # in-graph engines gate on device instead
@@ -466,6 +489,10 @@ class Server:
             self._decisions[req.rid] = decision
             for mw in self.middleware:
                 mw.on_decision(req, decision, ctx)
+            if tracer.enabled:
+                tracer.event("admission", now, parent=root,
+                             admit=bool(decision.admit),
+                             J=float(decision.J), tau=float(decision.tau))
 
         if decision is not None and not decision.admit:
             # "skip or respond from cache": the proxy answers
@@ -477,6 +504,12 @@ class Server:
             ctx.lat_window.append(tri.cost_s)
             self._out.append(resp)
             self.log.add(resp)
+            if root is not None:
+                tracer.end(root, resp.t_finish, path=PATH_SKIP,
+                           admitted=False)
+                self._roots.pop(req.rid, None)
+            if ctx.metrics.enabled:
+                self._observe_response(resp, ctx)
             for mw in self.middleware:
                 mw.on_completion(None, [resp], ctx)
             return self._out[n0:]
@@ -530,6 +563,12 @@ class Server:
         first = (self._first_arrival if self._first_arrival is not None
                  else 0.0)
         finish = max((r.t_finish for r in out), default=first)
+        if ctx.tracer.enabled and self._roots:
+            # drain completes everything; a leftover root is a lost
+            # request — close it flagged so the validator can object
+            for root in self._roots.values():
+                ctx.tracer.end(root, ctx.now, error="unfinished")
+            self._roots.clear()
         self.span_s = max(finish - first, 1e-9)
         self.busy_s = ctx.busy_s
         self.log.busy_s = ctx.busy_s
@@ -559,11 +598,37 @@ class Server:
         return (PATH_DIRECT if PATH_DIRECT in caps.paths
                 else caps.paths[0])
 
+    def _observe_response(self, resp: InferResponse, ctx) -> None:
+        m = ctx.metrics
+        engine = self._caps.name
+        m.counter("serving_requests_total",
+                  "responses minted, by path/admission").inc(
+            path=resp.path, admitted=str(bool(resp.admitted)),
+            engine=engine)
+        m.histogram("serving_latency_s",
+                    "arrival-to-finish latency").observe(
+            resp.latency_s, path=resp.path, engine=engine)
+        m.counter("serving_energy_j_total",
+                  "modelled joules attributed to responses").inc(
+            resp.energy_j, path=resp.path, engine=engine)
+
     def _absorb(self, completions, ctx, decisions, out) -> None:
+        tracer = ctx.tracer
         for comp in completions or ():
             dt = comp.t_finish - comp.t_start
             ctx.busy_s += dt
             j_total = ctx.energy_model.p_active * dt
+            if tracer.enabled:
+                # service occupancy on the engine's line: one slice per
+                # completion, on a per-(replica, path) resource track
+                attrs = {"batch": comp.size}
+                flush = comp.extras.get("flush") if comp.extras else None
+                if flush:
+                    attrs["flush"] = flush
+                res = (f"{self.name}:{comp.path}" if self.name
+                       else comp.path)
+                tracer.span("execute", comp.t_start, comp.t_finish,
+                            resource=res, **attrs)
             resps = []
             for i, r in enumerate(comp.requests):
                 admitted = (True if comp.admit_mask is None
@@ -584,6 +649,16 @@ class Server:
                 out.append(resp)
                 resps.append(resp)
                 self.log.add(resp)
+                if tracer.enabled:
+                    root = self._roots.pop(r.rid, None)
+                    if root is not None:
+                        if comp.t_start > resp.arrival_s:
+                            tracer.span("queue.wait", resp.arrival_s,
+                                        comp.t_start, parent=root)
+                        tracer.end(root, comp.t_finish, path=comp.path,
+                                   admitted=admitted)
+                if ctx.metrics.enabled:
+                    self._observe_response(resp, ctx)
             for mw in self.middleware:
                 mw.on_completion(comp, resps, ctx)
 

@@ -41,6 +41,7 @@ class Batch:
     t_formed: float                  # when the batch was closed
     t_start: float = 0.0             # service start (>= t_formed)
     t_finish: float = 0.0
+    reason: str = "direct"           # what flushed it: size|window|drain|direct
 
     @property
     def size(self) -> int:
@@ -96,7 +97,7 @@ class BatchQueue:
         formed = self.poll(now)
         self.queue.append(req)
         if len(self.queue) >= self.max_batch_size:
-            formed.extend(self._form(now, full=True))
+            formed.extend(self._form(now, full=True, reason="size"))
         return formed
 
     def poll(self, now: float) -> list[Batch]:
@@ -105,7 +106,8 @@ class BatchQueue:
         while self.queue and self.queue_window_s > 0:
             deadline = self.queue[0].arrival_s + self.queue_window_s
             if deadline <= now:
-                out.extend(self._form(deadline, full=False))
+                out.extend(self._form(deadline, full=False,
+                                      reason="window"))
             else:
                 break
         return out
@@ -114,13 +116,15 @@ class BatchQueue:
         out = []
         while self.queue:
             out.extend(self._form(max(now, self.queue[0].arrival_s
-                                      + self.queue_window_s), full=False))
+                                      + self.queue_window_s), full=False,
+                                  reason="drain"))
         return out
 
     def reset(self) -> None:
         self.queue.clear()
 
-    def _form(self, t: float, *, full: bool) -> list[Batch]:
+    def _form(self, t: float, *, full: bool,
+              reason: str = "window") -> list[Batch]:
         n = min(len(self.queue), self.max_batch_size)
         if not full and self.preferred_sizes and n < self.max_batch_size:
             # round down to a preferred size when flushing on timeout;
@@ -130,7 +134,7 @@ class BatchQueue:
             if pref:
                 n = pref[-1]
         reqs, self.queue = self.queue[:n], self.queue[n:]
-        return [Batch(reqs, t_formed=t)]
+        return [Batch(reqs, t_formed=t, reason=reason)]
 
 
 @dataclass

@@ -70,6 +70,7 @@ class GenRequest:
     generated: list = field(default_factory=list)
     done: bool = False
     admitted: bool = True
+    slot: int | None = None          # decode slot it occupied (telemetry)
 
 
 @dataclass
@@ -841,6 +842,7 @@ class DecodeSession:
             self.device_s += time.perf_counter() - t0
             self.insert_calls += 1
             r.generated.append(int(first))
+            r.slot = s
             self.slots[s] = r
             self._active_host[s] = True
 
@@ -904,6 +906,7 @@ class DecodeSession:
                 if on_prefill_eos is not None:
                     on_prefill_eos(s)
                 continue
+            r.slot = s
             self.slots[s] = r
             self._active_host[s] = True
 

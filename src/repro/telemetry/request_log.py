@@ -38,8 +38,8 @@ class RequestLog:
         return len(self.responses)
 
     def _lat(self) -> np.ndarray:
-        return np.array([r.t_finish - r.arrival_s for r in self.responses]
-                        or [0.0])
+        return np.array([r.t_finish - r.arrival_s for r in self.responses],
+                        dtype=float)
 
     @property
     def admission_rate(self) -> float:
@@ -63,13 +63,20 @@ class RequestLog:
 
     def summary(self) -> dict:
         lat = self._lat()
+        # an empty log must read as "served nothing" (NaN, matching
+        # admission_rate's convention), never as 0 ms latency
+        if lat.size:
+            mean_ms = round(float(lat.mean()) * 1e3, 3)
+            std_ms = round(float(lat.std()) * 1e3, 3)
+            p95_ms = round(float(np.percentile(lat, 95)) * 1e3, 3)
+        else:
+            mean_ms = std_ms = p95_ms = float("nan")
         return {
             "n": self.n,
             "admission_rate": round(self.admission_rate, 4),
-            "mean_latency_ms": round(float(lat.mean()) * 1e3, 3),
-            "std_latency_ms": round(float(lat.std()) * 1e3, 3),
-            "p95_latency_ms": round(float(np.percentile(lat, 95)) * 1e3,
-                                    3),
+            "mean_latency_ms": mean_ms,
+            "std_latency_ms": std_ms,
+            "p95_latency_ms": p95_ms,
             "throughput_qps": round(self.n / max(self.span_s, 1e-9), 2),
             "total_time_s": round(self.span_s, 4),
             "busy_s": round(self.busy_s, 4),

@@ -30,6 +30,10 @@ class Run:
         rec = {"step": step, "wall_s": round(time.time() - self._t0, 4)}
         rec.update({k: _jsonable(v) for k, v in kw.items()})
         self.metrics.append(rec)
+        # append-flush so a crashed run keeps its trajectory on disk;
+        # finish() still writes the tabular metrics.csv for audit
+        with open(os.path.join(self.run_dir, "metrics.jsonl"), "a") as f:
+            f.write(json.dumps(rec, default=_jsonable) + "\n")
 
     def log_artifact(self, name: str, obj: Any) -> str:
         path = os.path.join(self.run_dir, name)
@@ -67,8 +71,17 @@ class Tracker:
 
     def start_run(self, name: str) -> Run:
         stamp = time.strftime("%Y%m%d-%H%M%S")
-        run_dir = os.path.join(self.root, f"{stamp}-{name}")
-        os.makedirs(run_dir, exist_ok=True)
+        base = os.path.join(self.root, f"{stamp}-{name}")
+        # two runs in the same second must not share a directory: claim
+        # the dir atomically, uniquifying with a numeric suffix on clash
+        run_dir, i = base, 1
+        while True:
+            try:
+                os.makedirs(run_dir)
+                break
+            except FileExistsError:
+                run_dir = f"{base}-{i}"
+                i += 1
         return Run(run_dir=run_dir, name=name)
 
 
