@@ -1,0 +1,176 @@
+"""Chaos recovery benchmark — failure as a tracked quantity.
+
+Runs each chaos scenario (``repro.faults.chaos``) through the
+virtual-time sim fleet twice: once fault-free (same deadline'd trace)
+and once with the scenario's :class:`FaultPlan` injected through the
+fleet's failure model (bounded retry + backoff, deadline shedding,
+brownout).  Per fault class it reports:
+
+  - **served fraction** and the exactly-once / none-hang invariants
+    (every request resolves as a completion or a rejection-with-reason);
+  - **p95 latency inside the fault window** vs overall;
+  - **time-to-recover**: how long after the last fault window the
+    fault-affected work took to clear;
+  - **extra J/request**: the fault class's energy price — retried and
+    wasted work is burned joules (chaos run minus fault-free baseline).
+
+Everything runs on the virtual clock (oracle-backed replicas), so rows
+are deterministic per seed — the determinism property test replays
+this module and diffs the JSON.  Emits ``BENCH_chaos.json`` at the
+repo root in addition to the standard ``results/benchmarks`` dump.
+
+Smoke (the CI gate)::
+
+    PYTHONPATH=src:. python benchmarks/chaos_recovery.py --smoke \
+        --trace-out TRACE_chaos.json --metrics-out METRICS_chaos.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.faults import (BrownoutController, FaultInjector, RetryPolicy,
+                          make_chaos)
+from repro.fleet import EnergyAwareRouter, FleetSimulator, build_sim_fleet
+from repro.serving.api import PATH_REJECT
+
+SCENARIOS = ("crash-storm", "slow-node", "kv-pressure", "link-flap",
+             "crash-and-flap", "seeded-storm")
+SMOKE_SCENARIOS = ("crash-and-flap", "link-flap")
+N_REQUESTS = 800
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fault_windows(plan) -> list[tuple[float, float]]:
+    return [(ev.t, ev.t + ev.duration_s) for ev in plan.events]
+
+
+def _run_one(name: str, n: int, seed: int, *, tracer=None,
+             metrics=None) -> dict:
+    ch = make_chaos(name, n, seed=seed)
+    # fault-free baseline over the same deadline'd trace: the energy
+    # delta against it is the price of this fault class
+    base = FleetSimulator(build_sim_fleet(ch.scenario.oracle),
+                          EnergyAwareRouter()).run(ch.requests())
+    sim = FleetSimulator(build_sim_fleet(ch.scenario.oracle),
+                         EnergyAwareRouter(),
+                         injector=FaultInjector(ch.plan),
+                         retry_policy=RetryPolicy(),
+                         brownout=BrownoutController(),
+                         tracer=tracer, metrics=metrics)
+    rep = sim.run(ch.requests())
+    s, resp = rep.summary, rep.responses
+
+    rids = [r.rid for r in resp]
+    served = [r for r in resp if r.path != PATH_REJECT]
+    windows = _fault_windows(ch.plan)
+
+    def in_window(r) -> bool:
+        return any(a <= r.arrival_s < b for a, b in windows)
+
+    lat_w = np.array([r.t_finish - r.arrival_s
+                      for r in served if in_window(r)])
+    window_end = max((b for _, b in windows), default=0.0)
+    affected = [r.t_finish for r in resp if in_window(r)]
+    ttr = max(affected, default=window_end) - window_end
+    in_dl = sum(1 for r in served
+                if r.t_finish - r.arrival_s <= ch.deadline_s)
+    jpr = s["energy_j"] / max(s["n_served"], 1)
+    bs = base.summary
+    base_jpr = bs["energy_j"] / max(bs["n_served"], 1)
+    return {
+        "scenario": name,
+        "n": s["n"],
+        "served_frac": s["served_frac"],
+        "in_deadline_frac": round(in_dl / max(len(resp), 1), 4),
+        "served_once": bool(len(set(rids)) == len(rids) == n),
+        "none_hang": bool(len(resp) == n),
+        "p95_fault_window_ms": (round(
+            float(np.percentile(lat_w, 95)) * 1e3, 3)
+            if len(lat_w) else 0.0),
+        "p95_overall_ms": s["p95_latency_ms"],
+        "time_to_recover_s": round(max(ttr, 0.0), 4),
+        "extra_j_per_request": round(jpr - base_jpr, 4),
+        "n_retries": s["n_retries"],
+        "n_failures": s["n_failures"],
+        "n_expired": s["n_expired"],
+        "wasted_j": s["wasted_j"],
+        "brownout_min_scale": s["brownout_min_scale"],
+        "plan_signature": ch.plan.signature(),
+    }
+
+
+def run(scenarios=SCENARIOS, n: int = N_REQUESTS,
+        seed: int = 0) -> list[dict]:
+    return [_run_one(name, n, seed) for name in scenarios]
+
+
+def check(rows) -> dict:
+    by = {r["scenario"]: r for r in rows}
+    caf = by.get("crash-and-flap", {})
+    out = {
+        # the acceptance story: crash + link flap in one window
+        "crash_and_flap_in_deadline_frac": caf.get(
+            "in_deadline_frac", float("nan")),
+        "crash_and_flap_served_frac": caf.get("served_frac",
+                                              float("nan")),
+        "all_served_once": all(r["served_once"] for r in rows),
+        "none_hang": all(r["none_hang"] for r in rows),
+        "all_recover": all(r["time_to_recover_s"] < 60.0
+                           for r in rows),
+        "total_retries": int(sum(r["n_retries"] for r in rows)),
+        "total_failures": int(sum(r["n_failures"] for r in rows)),
+    }
+    with open(os.path.join(_REPO_ROOT, "BENCH_chaos.json"), "w") as f:
+        json.dump({"bench": "chaos_recovery", "check": out,
+                   "rows": rows}, f, indent=2)
+    return out
+
+
+def main(argv=None) -> int:
+    from repro.telemetry import MetricsRegistry, Tracer
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run asserting the acceptance "
+                         "invariants (CI gate)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="Chrome trace of the crash-and-flap run")
+    ap.add_argument("--metrics-out", default=None,
+                    help="metrics snapshot of the crash-and-flap run")
+    args = ap.parse_args(argv)
+
+    scenarios = SMOKE_SCENARIOS if args.smoke else SCENARIOS
+    n = args.requests or (300 if args.smoke else N_REQUESTS)
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
+    rows = [_run_one(name, n, args.seed,
+                     tracer=(tracer if name == "crash-and-flap"
+                             else None),
+                     metrics=(metrics if name == "crash-and-flap"
+                              else None))
+            for name in scenarios]
+    chk = check(rows)
+    if tracer is not None:
+        tracer.write_chrome(args.trace_out)
+    if metrics is not None:
+        metrics.write_json(args.metrics_out)
+    for r in rows:
+        print(r)
+    print(chk)
+    if args.smoke:
+        # >= 95% of requests served in-deadline, exactly once, and
+        # every stranded request retried or rejected — never a hang
+        assert chk["crash_and_flap_in_deadline_frac"] >= 0.95, chk
+        assert chk["all_served_once"], chk
+        assert chk["none_hang"], chk
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,11 +10,12 @@ import json
 import os
 import time
 
-from benchmarks import (continuous_perf, controller_dynamics,
-                        disagg_boundary, fig3_throughput, fig4_tradeoff,
-                        fig5_landscape, fleet_boundary, fleet_live,
-                        perf_variants, roofline, rule_ablation,
-                        table2_dual_path, table3_ablation)
+from benchmarks import (chaos_recovery, continuous_perf,
+                        controller_dynamics, disagg_boundary,
+                        fig3_throughput, fig4_tradeoff, fig5_landscape,
+                        fleet_boundary, fleet_live, perf_variants,
+                        roofline, rule_ablation, table2_dual_path,
+                        table3_ablation)
 
 OUT = os.environ.get("BENCH_OUT", "results/benchmarks")
 
@@ -59,6 +60,10 @@ _BENCHES = [
     ("disagg_boundary", disagg_boundary,
      lambda c: (f"parity={c['token_parity']};"
                 f"wins_at={','.join(c['disagg_wins_at']) or 'none'}")),
+    ("chaos_recovery", chaos_recovery,
+     lambda c: (f"in_deadline={c['crash_and_flap_in_deadline_frac']};"
+                f"once={c['all_served_once']};"
+                f"retries={c['total_retries']}")),
 ]
 
 

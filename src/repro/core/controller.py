@@ -73,6 +73,9 @@ class AdmissionController:
     congestion: CongestionState = field(default_factory=CongestionState)
     rule: Literal["le", "ge"] = "le"
     enabled: bool = True             # False = open-loop baseline
+    # brownout hook (repro.faults): < 1 tightens the admission basin
+    # under sustained failure pressure; 1.0 = no effect
+    tau_scale: float = 1.0
 
     n_seen: int = field(default=0, init=False)
     n_admitted: int = field(default=0, init=False)
@@ -85,7 +88,7 @@ class AdmissionController:
         C = self.congestion.value()
         self.cost.observe(L, E, C)
         J = float(self.cost.J(L, E, C))
-        tau = float(self.threshold(t))
+        tau = self._scaled(float(self.threshold(t)))
         if not self.enabled:
             admit = True
         elif self.rule == "le":
@@ -105,6 +108,15 @@ class AdmissionController:
     def admission_rate(self) -> float:
         return self.n_admitted / max(self.n_seen, 1)
 
+    def _scaled(self, tau: float) -> float:
+        """Apply the brownout scale so a scale < 1 always SHRINKS the
+        admission basin regardless of rule direction (divide for 'ge',
+        where admit means J >= tau)."""
+        s = self.tau_scale
+        if s == 1.0 or not self.enabled:
+            return tau
+        return tau * s if self.rule == "le" else tau / max(s, 1e-9)
+
     # -- middleware hooks (repro.serving.api) ---------------------------
     def snapshot(self, t: float) -> tuple[float, float, float]:
         """(tau, e_norm, c_norm) at time ``t`` — the hook the in-graph
@@ -117,7 +129,7 @@ class AdmissionController:
         self.cost.norm_c.update(C)
         # open-loop: a tau no J can violate, so the gate admits all
         # (up to the step's static capacity)
-        tau = (float(self.threshold(t)) if self.enabled
+        tau = (self._scaled(float(self.threshold(t))) if self.enabled
                else (float("inf") if self.rule == "le"
                      else float("-inf")))
         return (tau, float(self.cost.norm_e(E)),
@@ -137,9 +149,9 @@ class AdmissionController:
             tau = (float("inf") if self.rule == "le"
                    else float("-inf"))
         elif isinstance(self.threshold, AdaptiveThreshold):
-            tau = float(self.threshold.preview(t))
+            tau = self._scaled(float(self.threshold.preview(t)))
         else:
-            tau = float(self.threshold(t))
+            tau = self._scaled(float(self.threshold(t)))
         return (tau, float(self.cost.norm_e(E)),
                 float(self.cost.norm_c(C)))
 

@@ -164,10 +164,11 @@ class DisaggEngineAdapter:
         return self._advance_once(now, ctx)
 
     def drain(self, now, ctx) -> list[Completion]:
-        # fast-forward past the slowest in-flight transfer so the
-        # decode side can run dry on one monotone clock
-        horizon = max([now] + [t.arrive_t
-                               for t in self.transfer.inflight])
+        # fast-forward past the slowest in-flight transfer — and past
+        # any link outage still in effect — so the decode side can run
+        # dry on one monotone clock
+        horizon = max([now, self.transfer.outage_until]
+                      + [t.arrive_t for t in self.transfer.inflight])
         self._deliver(horizon, everything=True)
         if self._session is None:
             return []

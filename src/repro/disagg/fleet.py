@@ -30,6 +30,7 @@ import numpy as np
 from repro.core.energy import EnergyModel
 from repro.disagg.engine import PrefillEngine, PrefillResult
 from repro.disagg.transfer import Transfer, TransferQueue
+from repro.faults.health import FAILED, HealthState
 from repro.fleet.autoscaler import Autoscaler
 from repro.fleet.replica import ACTIVE, STOPPED
 from repro.fleet.router import EnergyAwareRouter
@@ -60,12 +61,21 @@ class _PhaseWorker:
         self.busy_s = 0.0
         self.active_s = 0.0
         self.n_served = 0
+        self.health = HealthState()
+        self.pressure_bias_s = 0.0         # kv-spike congestion bias
         self._jpr = float(energy_prior_j)
         self._ewma = ewma
 
     @property
     def routable(self) -> bool:
-        return self.state == ACTIVE
+        return self.state == ACTIVE and self.health.routable
+
+    @property
+    def revivable(self) -> bool:
+        """Parked capacity the autoscaler (or the simulator's
+        scaled-to-zero guard) may wake; FAILED workers only return
+        through their scheduled recovery."""
+        return self.state == STOPPED and self.health.status != FAILED
 
     def tick(self, dt: float) -> None:
         if self.state == ACTIVE:
@@ -86,7 +96,7 @@ class _PhaseWorker:
         return m.p_active * self.busy_s + m.p_idle * idle
 
     def pressure(self, now: float) -> float:
-        return self.line.backlog(now)
+        return self.line.backlog(now) + self.pressure_bias_s
 
     def resource_pressure(self, now: float) -> float:
         return 0.0
@@ -96,6 +106,30 @@ class _PhaseWorker:
 
     def revive(self) -> None:
         self.state = ACTIVE
+
+    # -- faults (repro.faults) -----------------------------------------
+    def crash(self, now: float, duration_s: float = 0.5) -> list[int]:
+        """The worker dies; returns the rids of whatever generation
+        state it was holding (nothing, for a stateless phase)."""
+        self.state = STOPPED
+        self.health.fail(now, duration_s)
+        self.line.reset()
+        return []
+
+    def degrade(self, now: float, factor: float,
+                duration_s: float) -> None:
+        self.health.degrade(now, factor, duration_s)
+
+    def kv_spike(self, now: float, bias_s: float,
+                 duration_s: float) -> None:
+        self.health.degrade(now, 1.0, duration_s)
+        self.pressure_bias_s = max(self.pressure_bias_s, float(bias_s))
+
+    def recover(self, now: float, recovering_s: float = 0.0) -> None:
+        self.health.recover(now, recovering_s)
+        self.pressure_bias_s = 0.0
+        if self.state == STOPPED:
+            self.revive()
 
 
 class PrefillWorker(_PhaseWorker):
@@ -112,7 +146,8 @@ class PrefillWorker(_PhaseWorker):
                 ) -> tuple[PrefillResult, float, float]:
         t0 = time.perf_counter()
         pr = self.engine.prefill(r, prompt_len=prompt_len)
-        dt = time.perf_counter() - t0
+        # a degraded (slow) node stretches its measured walltime
+        dt = (time.perf_counter() - t0) * self.health.slow_factor
         start, finish = self.line.reserve(now, dt)
         self._record(dt)
         return pr, start, finish
@@ -139,7 +174,7 @@ class DecodeWorker(_PhaseWorker):
                                            float]:
         t0 = time.perf_counter()
         finished = self.session.advance()
-        dt = time.perf_counter() - t0
+        dt = (time.perf_counter() - t0) * self.health.slow_factor
         start, finish = self.line.reserve(now, dt)
         self.busy_s += dt
         self.n_served += len(finished)
@@ -173,6 +208,21 @@ class DecodeWorker(_PhaseWorker):
         # flush the session dry through the ordinary advance path —
         # nothing is dropped; the caller harvests via run()'s sweep
         self.state = STOPPED
+
+    def crash(self, now: float, duration_s: float = 0.5) -> list[int]:
+        """The decode device dies: every request holding a slot, queued,
+        or awaiting insertion loses its generation state.  Returns the
+        lost rids so the simulator can re-prefill them; the session is
+        rebuilt fresh (its KV pool is gone)."""
+        s = self.session
+        lost = [g.rid for g in s.slots if g is not None]
+        lost += [g.rid for g in s.queue]
+        lost += [item[0].rid for item in s._insert_q]
+        self.session = DecodeSession(self.engine)
+        self.state = STOPPED
+        self.health.fail(now, duration_s)
+        self.line.reset()
+        return lost
 
 
 class PhasePool:
@@ -286,12 +336,36 @@ class DisaggSimulator:
     scale_every: int = 20
     tracer: object = None              # telemetry.trace recorder; None=off
     metrics: object = None             # telemetry.metrics registry; None=off
+    # -- failure model (repro.faults) ---------------------------------------
+    injector: object = None            # faults.FaultInjector; None = off
+    retry_policy: object = None        # faults.RetryPolicy; None = default
+    recovering_s: float = 0.05         # warm-up after a crash window
 
     def _decode_worker(self, name: str) -> DecodeWorker:
         for w in self.pool.decode_workers:
             if w.name == name:
                 return w
-        raise KeyError(name)
+        import difflib
+        names = [w.name for w in self.pool.decode_workers]
+        msg = f"unknown decode worker {name!r}; pool has {names}"
+        close = difflib.get_close_matches(name, names, n=1, cutoff=0.4)
+        if close:
+            msg += f" — did you mean {close[0]!r}?"
+        raise KeyError(msg)
+
+    def _worker(self, name: str):
+        """Any phase worker by name (fault-plan target resolution)."""
+        for w in (self.pool.prefill_workers + self.pool.decode_workers):
+            if w.name == name:
+                return w
+        import difflib
+        names = [w.name for w in (self.pool.prefill_workers
+                                  + self.pool.decode_workers)]
+        msg = f"unknown worker {name!r}; pool has {names}"
+        close = difflib.get_close_matches(name, names, n=1, cutoff=0.4)
+        if close:
+            msg += f" — did you mean {close[0]!r}?"
+        raise KeyError(msg)
 
     def _export_gauges(self, metrics, now: float) -> None:
         """Per-worker gauges each scale tick: pressure, KV-residency
@@ -333,7 +407,13 @@ class DisaggSimulator:
         landed = (self.pool.transfer.deliver_all() if everything
                   else self.pool.transfer.deliver(now))
         for t in landed:
-            self._decode_worker(t.dst).insert(t.result)
+            w = self._decode_worker(t.dst)
+            if w.health.status == FAILED:
+                # landed on a dead worker: the KV has nowhere to seat;
+                # the run loop re-ships it to a live basin
+                self._orphans.append(t)
+                continue
+            w.insert(t.result)
             self._arrived[t.result.request.rid] = t.arrive_t
         return landed
 
@@ -368,12 +448,22 @@ class DisaggSimulator:
                     tracer.end(root, fin, decode_worker=w.name)
 
     def run(self, requests: list) -> DisaggReport:
+        import heapq
+        import itertools
+
+        from repro.faults.retry import RetryPolicy
+        from repro.serving.api import request_expiry
+
         reqs = sorted(requests, key=lambda r: r.arrival_s)
         gen: dict[int, GenRequest] = {}
         meta: dict[int, object] = {}
         finish_t: dict[int, tuple] = {}
         prefill_of: dict[int, str] = {}
         decode_of: dict[int, str] = {}
+        rejected: dict[int, tuple] = {}      # rid -> (reason, t)
+        attempts: dict[int, int] = {}
+        stats = {"n_retries": 0, "n_failures": 0, "n_retransmits": 0}
+        retry = self.retry_policy or RetryPolicy()
         tracer = self._tracer = (self.tracer if self.tracer is not None
                                  else NULL_TRACER)
         metrics = (self.metrics if self.metrics is not None
@@ -381,84 +471,293 @@ class DisaggSimulator:
         self._roots: dict[int, object] = {}
         self._arrived: dict[int, float] = {}
         self._slot_free: dict[str, float] = {}
+        self._orphans: list[Transfer] = []
+        if self.injector is not None:
+            self.injector.reset()
+
+        seq = itertools.count()
+        heap: list = []
+        for req in reqs:
+            heapq.heappush(heap, (float(req.arrival_s), next(seq),
+                                  "arrival", req))
+        if self.injector is not None:
+            for ev in self.injector.plan.events:
+                heapq.heappush(heap, (float(ev.t), next(seq),
+                                      "fault", ev))
         now = 0.0
-        for i, req in enumerate(reqs):
-            arr = float(req.arrival_s)
-            self.pool.tick(max(arr - now, 0.0))
-            now = max(now, arr)
-            self._deliver(now)
-            g = GenRequest(rid=req.rid,
-                           prompt=np.asarray(req.payload, np.int32),
-                           max_new=getattr(req, "max_new", 16),
-                           arrival_t=arr,
-                           eos_id=(getattr(req, "metadata", None)
-                                   or {}).get("eos_id"))
-            gen[req.rid] = g
-            meta[req.rid] = req
-            root = None
-            if tracer.enabled:
-                root = tracer.begin("request", arr, rid=req.rid,
-                                    kind="generate")
-                self._roots[req.rid] = root
-            # phase 1: prefill basin
-            pws = self.pool.prefill.routable()
-            if not pws:                  # scaled to zero: revive one
-                self.pool.prefill_workers[0].revive()
-                pws = self.pool.prefill.routable()
-            pw = self.router.route(req, pws, now)
-            pr, pstart, fin = pw.prefill(g, now,
-                                         prompt_len=self.prompt_len)
-            prefill_of[req.rid] = pw.name
-            if tracer.enabled:
-                tracer.span("prefill", pstart, fin, parent=root,
-                            resource=pw.name, rid=req.rid,
-                            plen=pr.plen, kv_bytes=pr.kv_bytes)
-            # phase 2: the link — decode basin chosen at send time
-            dws = self.pool.decode.routable()
-            if not dws:
-                self.pool.decode_workers[0].revive()
-                dws = self.pool.decode.routable()
-            dw = self.router.route(req, dws, fin)
-            t = self.pool.transfer.send(pr, fin, dst=dw.name)
+        n_arrivals = 0
+
+        def reject(rid: int, t: float, reason: str) -> None:
+            rejected[rid] = (reason, t)
+            root = self._roots.pop(rid, None)
+            if root is not None:
+                tracer.end(root, t, error=reason)
+            tracer.event("reject", t, resource="faults", rid=rid,
+                         reason=reason)
+            metrics.counter("fleet_expired",
+                            "requests rejected, by reason").inc(
+                reason=reason.split(":", 1)[0])
+
+        def budget(rid: int, t: float, reason: str) -> bool:
+            """Consume one retry attempt; on an exhausted budget the
+            request terminates as a rejection-with-reason, never a hang."""
+            a = attempts.get(rid, 0) + 1
+            if retry.allows(a):
+                attempts[rid] = a
+                stats["n_retries"] += 1
+                metrics.counter("fleet_retries",
+                                "retried hand-offs, by reason").inc(
+                    reason=reason)
+                tracer.event("retry", t, resource="faults", rid=rid,
+                             attempt=a, reason=reason)
+                return True
+            reject(rid, t, f"retry-budget:{reason}")
+            return False
+
+        def delay(rid: int) -> float:
+            return retry.delay(max(attempts.get(rid, 1), 1))
+
+        def pick(req, t: float, phase: PhasePool, workers: list):
+            """Route into a phase basin; wakes PARKED capacity when the
+            phase scaled to zero (FAILED nodes only return through
+            their own scheduled recovery)."""
+            ws = phase.routable()
+            if not ws:
+                for w in workers:
+                    if w.revivable:
+                        w.revive()
+                        break
+                ws = phase.routable()
+            if not ws:
+                return None
+            return self.router.route(req, ws, t)
+
+        def send_kv(req, pr, t: float, root) -> bool:
+            """Choose a decode basin and ship the KV; False when no
+            decode capacity is up (caller schedules a resend)."""
+            dw = pick(req, t, self.pool.decode,
+                      self.pool.decode_workers)
+            if dw is None:
+                return False
+            tr = self.pool.transfer.send(pr, t, dst=dw.name)
             decode_of[req.rid] = dw.name
             if tracer.enabled:
-                if t.start_t > t.send_t:
-                    tracer.span("transfer.wait", t.send_t, t.start_t,
+                if tr.start_t > tr.send_t:
+                    tracer.span("transfer.wait", tr.send_t, tr.start_t,
                                 parent=root, rid=req.rid)
-                tracer.span("transfer", t.start_t, t.arrive_t,
+                tracer.span("transfer", tr.start_t, tr.arrive_t,
                             parent=root, resource="link", rid=req.rid,
-                            bytes=t.n_bytes, dst=dw.name)
-            # phase 3: interleave decode windows with the stream
-            self._deliver(now)
-            self._advance_ready(now, finish_t)
-            if (i + 1) % self.scale_every == 0:
-                if self.prefill_scaler:
-                    acts = self.prefill_scaler.observe(
-                        now, self.pool.prefill)
-                    for kind, name in acts or ():
-                        tracer.event("autoscale", now,
-                                     resource="autoscaler",
-                                     phase="prefill", action=kind,
-                                     replica=name)
-                if self.decode_scaler:
-                    acts = self.decode_scaler.observe(
-                        now, self.pool.decode)
-                    for kind, name in acts or ():
-                        tracer.event("autoscale", now,
-                                     resource="autoscaler",
-                                     phase="decode", action=kind,
-                                     replica=name)
-                if metrics.enabled:
-                    self._export_gauges(metrics, now)
-        # drain: fast-forward past the slowest in-flight transfer
-        horizon = max([now] + [t.arrive_t
-                               for t in self.pool.transfer.inflight])
-        self.pool.tick(max(horizon - now, 0.0))
-        now = horizon
-        self._deliver(now, everything=True)
-        while any(not w.session.idle
-                  for w in self.pool.decode_workers):
-            self._advance_ready(now, finish_t)
+                            bytes=tr.n_bytes, dst=dw.name)
+            return True
+
+        def dispatch(req, t: float, *, fresh_root: bool) -> None:
+            """Prefill + hand-off for one request — the original
+            arrival, or a re-prefill after a decode crash lost its
+            generation state (same root span: one request, one trace)."""
+            rid = req.rid
+            g = GenRequest(rid=rid,
+                           prompt=np.asarray(req.payload, np.int32),
+                           max_new=getattr(req, "max_new", 16),
+                           arrival_t=t,
+                           eos_id=(getattr(req, "metadata", None)
+                                   or {}).get("eos_id"))
+            gen[rid] = g
+            meta[rid] = req
+            root = self._roots.get(rid)
+            if tracer.enabled and fresh_root:
+                root = tracer.begin("request", t, rid=rid,
+                                    kind="generate")
+                self._roots[rid] = root
+            pw = pick(req, t, self.pool.prefill,
+                      self.pool.prefill_workers)
+            if pw is None:
+                if budget(rid, t, "no-prefill-worker"):
+                    heapq.heappush(heap, (t + delay(rid), next(seq),
+                                          "redo", req))
+                return
+            pr, pstart, fin = pw.prefill(g, t,
+                                         prompt_len=self.prompt_len)
+            prefill_of[rid] = pw.name
+            if tracer.enabled:
+                tracer.span("prefill", pstart, fin, parent=root,
+                            resource=pw.name, rid=rid,
+                            plen=pr.plen, kv_bytes=pr.kv_bytes)
+            if not send_kv(req, pr, fin, root):
+                if budget(rid, t, "no-decode-worker"):
+                    heapq.heappush(heap, (fin + delay(rid), next(seq),
+                                          "resend", pr))
+
+        def retransmit(pr, t: float) -> None:
+            """Re-ship a prefilled KV whose transfer (or destination)
+            was lost; the prefill itself is NOT redone."""
+            rid = pr.request.rid
+            if rid in finish_t or rid in rejected:
+                return
+            stats["n_retransmits"] += 1
+            root = self._roots.get(rid)
+            if not send_kv(meta[rid], pr, t, root):
+                if budget(rid, t, "no-decode-worker"):
+                    heapq.heappush(heap, (t + delay(rid), next(seq),
+                                          "resend", pr))
+
+        def requeue_orphans(t: float) -> None:
+            orphans, self._orphans = self._orphans, []
+            for tr in orphans:
+                rid = tr.result.request.rid
+                if rid in finish_t or rid in rejected:
+                    continue
+                if budget(rid, t, "decode-worker-lost"):
+                    heapq.heappush(heap, (t + delay(rid), next(seq),
+                                          "resend", tr.result))
+
+        def apply_fault(ev, t: float) -> None:
+            stats["n_failures"] += 1
+            metrics.counter("fleet_failures",
+                            "injected faults, by kind").inc(
+                kind=ev.kind, target=ev.target or "auto")
+            if ev.kind == "link-flap":
+                lost = self.pool.transfer.flap(t, ev.duration_s)
+                tracer.event("fault", t, resource="faults",
+                             kind=ev.kind, n_lost=len(lost),
+                             until=self.pool.transfer.outage_until)
+                out_end = self.pool.transfer.outage_until
+                for tr in lost:
+                    rid = tr.result.request.rid
+                    if budget(rid, t, "link-flap"):
+                        heapq.heappush(heap, (out_end + delay(rid),
+                                              next(seq), "resend",
+                                              tr.result))
+                return
+            w = (self._worker(ev.target) if ev.target else next(
+                (x for x in self.pool.decode_workers
+                 if x.state == ACTIVE), None))
+            if w is None:
+                return
+            if ev.kind == "crash":
+                lost = w.crash(t, ev.duration_s)
+                dropped = self.pool.transfer.drop_to(w.name)
+                tracer.event("fault", t, resource="faults",
+                             kind=ev.kind, replica=w.name,
+                             n_lost=len(lost) + len(dropped))
+                for rid in lost:
+                    if rid in finish_t or rid in rejected:
+                        continue
+                    if budget(rid, t, "decode-crash"):
+                        heapq.heappush(heap, (t + delay(rid),
+                                              next(seq), "redo",
+                                              meta[rid]))
+                for tr in dropped:
+                    rid = tr.result.request.rid
+                    if rid in finish_t or rid in rejected:
+                        continue
+                    if budget(rid, t, "decode-crash"):
+                        heapq.heappush(heap, (t + delay(rid),
+                                              next(seq), "resend",
+                                              tr.result))
+                heapq.heappush(heap, (t + ev.duration_s, next(seq),
+                                      "recover", w.name))
+            elif ev.kind == "degrade":
+                w.degrade(t, ev.magnitude, ev.duration_s)
+                tracer.event("fault", t, resource="faults",
+                             kind=ev.kind, replica=w.name,
+                             factor=ev.magnitude)
+                heapq.heappush(heap, (t + ev.duration_s, next(seq),
+                                      "recover", w.name))
+            elif ev.kind == "kv-spike":
+                w.kv_spike(t, ev.magnitude, ev.duration_s)
+                tracer.event("fault", t, resource="faults",
+                             kind=ev.kind, replica=w.name,
+                             bias_s=ev.magnitude)
+                heapq.heappush(heap, (t + ev.duration_s, next(seq),
+                                      "recover", w.name))
+
+        def observe_scalers(t: float) -> None:
+            for phase, scaler, pool in (
+                    ("prefill", self.prefill_scaler, self.pool.prefill),
+                    ("decode", self.decode_scaler, self.pool.decode)):
+                if not scaler:
+                    continue
+                acts = scaler.observe(t, pool)
+                for kind, name in acts or ():
+                    tracer.event("autoscale", t, resource="autoscaler",
+                                 phase=phase, action=kind,
+                                 replica=name)
+            if metrics.enabled:
+                self._export_gauges(metrics, t)
+
+        while True:
+            while heap:
+                t, _, ekind, payload = heapq.heappop(heap)
+                self.pool.tick(max(t - now, 0.0))
+                now = max(now, t)
+                self._deliver(now)
+                requeue_orphans(now)
+                if ekind == "fault":
+                    apply_fault(payload, now)
+                    continue
+                if ekind == "recover":
+                    w = self._worker(payload)
+                    was_failed = w.health.status == FAILED
+                    w.recover(now, self.recovering_s if was_failed
+                              else 0.0)
+                    tracer.event("recover", now, resource="faults",
+                                 replica=w.name,
+                                 health=w.health.status)
+                    if was_failed and self.recovering_s > 0.0:
+                        heapq.heappush(heap,
+                                       (now + self.recovering_s,
+                                        next(seq), "heal", w.name))
+                    continue
+                if ekind == "heal":
+                    w = self._worker(payload)
+                    if w.health.status == "recovering":
+                        w.health.heal()
+                    continue
+                if ekind == "resend":
+                    retransmit(payload, now)
+                    self._advance_ready(now, finish_t)
+                    continue
+                if ekind == "redo":
+                    req = payload
+                    if req.rid in finish_t or req.rid in rejected:
+                        continue
+                    if now >= request_expiry(req):
+                        reject(req.rid, now, "deadline-expired")
+                        continue
+                    dispatch(req, now, fresh_root=False)
+                    self._advance_ready(now, finish_t)
+                    continue
+                # arrival
+                req = payload
+                meta[req.rid] = req
+                if now >= request_expiry(req):
+                    if tracer.enabled:
+                        self._roots[req.rid] = tracer.begin(
+                            "request", now, rid=req.rid,
+                            kind="generate")
+                    reject(req.rid, now, "deadline-expired")
+                    continue
+                dispatch(req, now, fresh_root=True)
+                self._deliver(now)
+                self._advance_ready(now, finish_t)
+                n_arrivals += 1
+                if n_arrivals % self.scale_every == 0:
+                    observe_scalers(now)
+            # drain: fast-forward past the slowest in-flight transfer
+            # — and past any link outage still in effect
+            horizon = max([now, self.pool.transfer.outage_until]
+                          + [t.arrive_t
+                             for t in self.pool.transfer.inflight])
+            self.pool.tick(max(horizon - now, 0.0))
+            now = horizon
+            self._deliver(now, everything=True)
+            requeue_orphans(now)
+            while any(not w.session.idle
+                      for w in self.pool.decode_workers
+                      if w.health.status != FAILED):
+                self._advance_ready(now, finish_t)
+            if not heap:
+                break
         if tracer.enabled and self._roots:
             # every request must harvest through _advance_ready; a
             # leftover root is a lost request — flag it for the validator
@@ -467,6 +766,20 @@ class DisaggSimulator:
             self._roots.clear()
         responses = []
         for req in reqs:
+            rej = rejected.get(req.rid)
+            if rej is not None:
+                reason, t_rej = rej
+                responses.append({
+                    "rid": req.rid,
+                    "tokens": [],
+                    "arrival_s": float(req.arrival_s),
+                    "t_finish": t_rej,
+                    "latency_s": t_rej - float(req.arrival_s),
+                    "prefill_worker": prefill_of.get(req.rid, ""),
+                    "decode_worker": decode_of.get(req.rid, ""),
+                    "rejected": reason,
+                })
+                continue
             g = gen[req.rid]
             fin, dname = finish_t.get(req.rid, (now, ""))
             responses.append({
@@ -475,10 +788,11 @@ class DisaggSimulator:
                 "arrival_s": float(req.arrival_s),
                 "t_finish": fin,
                 "latency_s": fin - float(req.arrival_s),
-                "prefill_worker": prefill_of[req.rid],
-                "decode_worker": decode_of[req.rid],
+                "prefill_worker": prefill_of.get(req.rid, ""),
+                "decode_worker": decode_of.get(req.rid, ""),
             })
-        lats = np.array([r["latency_s"] for r in responses])
+        served = [r for r in responses if "rejected" not in r]
+        lats = np.array([r["latency_s"] for r in served])
         n_tokens = int(sum(len(r["tokens"]) for r in responses))
         energy = (self.pool.prefill.energy_j()
                   + self.pool.decode.energy_j())
@@ -495,6 +809,11 @@ class DisaggSimulator:
             "span_s": now,
             "prefill_energy_j": self.pool.prefill.energy_j(),
             "decode_energy_j": self.pool.decode.energy_j(),
+            "n_served": len(served),
+            "n_rejected": len(rejected),
+            "n_retries": stats["n_retries"],
+            "n_failures": stats["n_failures"],
+            "n_retransmits": stats["n_retransmits"],
         }
         per_worker = {
             w.name: {"n_served": w.n_served,

@@ -43,11 +43,19 @@ class TransferQueue:
     _inflight: list[Transfer] = field(default_factory=list, init=False)
     total_bytes: int = field(default=0, init=False)
     n_transfers: int = field(default=0, init=False)
+    # fault state (repro.faults): link-flap outage + bandwidth collapse
+    outage_until: float = field(default=0.0, init=False)
+    n_dropped: int = field(default=0, init=False)
+    slow_factor: float = field(default=1.0, init=False)
+    slow_until: float = field(default=0.0, init=False)
 
     def send(self, pr: PrefillResult, now: float,
              dst: str | None = None) -> Transfer:
+        t0 = max(now, self.outage_until)   # nothing moves during outage
         dur = self.base_latency_s + pr.kv_bytes / (self.gbps * 1e9)
-        start, arrive = self._line.reserve(now, dur)
+        if t0 < self.slow_until and self.slow_factor > 1.0:
+            dur *= self.slow_factor        # bandwidth collapse window
+        start, arrive = self._line.reserve(t0, dur)
         t = Transfer(result=pr, send_t=now, arrive_t=arrive,
                      n_bytes=pr.kv_bytes, dst=dst, start_t=start)
         self._inflight.append(t)
@@ -70,6 +78,39 @@ class TransferQueue:
     def inflight(self) -> list[Transfer]:
         return list(self._inflight)
 
+    # -- faults (repro.faults) -----------------------------------------
+    def flap(self, now: float, duration_s: float) -> list[Transfer]:
+        """Link outage: every hand-off still in flight past ``now`` is
+        LOST (the decode side never sees it) and the link is down
+        until ``now + duration_s``.  Returns the dropped transfers so
+        the caller can retransmit or re-prefill them."""
+        lost = [t for t in self._inflight if t.arrive_t > now]
+        self._inflight = [t for t in self._inflight
+                          if t.arrive_t <= now]
+        self.n_dropped += len(lost)
+        self.outage_until = max(self.outage_until, now + duration_s)
+        # the link's horizon restarts after the outage
+        self._line.free_at = max(self._line.free_at, self.outage_until)
+        return lost
+
+    def drop_to(self, dst: str) -> list[Transfer]:
+        """Drop every in-flight hand-off addressed to ``dst`` (its
+        decode worker crashed; the KV has nowhere to land).  Returns
+        the dropped transfers for retransmission elsewhere."""
+        lost = [t for t in self._inflight if t.dst == dst]
+        if lost:
+            self._inflight = [t for t in self._inflight
+                              if t.dst != dst]
+            self.n_dropped += len(lost)
+        return lost
+
+    def collapse(self, now: float, duration_s: float,
+                 factor: float) -> None:
+        """Bandwidth collapse: transfers sent before ``now +
+        duration_s`` take ``factor``x longer (nothing is lost)."""
+        self.slow_factor = max(1.0, float(factor))
+        self.slow_until = max(self.slow_until, now + duration_s)
+
     def pressure(self, now: float) -> float:
         return self._line.backlog(now)
 
@@ -78,9 +119,14 @@ class TransferQueue:
         self._inflight.clear()
         self.total_bytes = 0
         self.n_transfers = 0
+        self.outage_until = 0.0
+        self.n_dropped = 0
+        self.slow_factor = 1.0
+        self.slow_until = 0.0
 
     def stats(self) -> dict:
         return {"n_transfers": self.n_transfers,
                 "total_bytes": self.total_bytes,
+                "n_dropped": self.n_dropped,
                 "gbps": self.gbps,
                 "base_latency_s": self.base_latency_s}

@@ -72,7 +72,7 @@ from repro.fleet.scenarios import (DEFAULT_TENANTS, GENERATE_SCENARIOS,
                                    low_confidence_flood,
                                    make_generate_scenario, make_scenario,
                                    multi_tenant, prompt_burst, steady,
-                                   with_payloads)
+                                   with_deadline, with_payloads)
 
 __all__ = [
     # pool / simulator
@@ -92,5 +92,6 @@ __all__ = [
     "DEFAULT_TENANTS", "GENERATE_SCENARIOS", "SCENARIOS", "Scenario",
     "diurnal", "flash_crowd", "from_trace", "long_decode",
     "low_confidence_flood", "make_generate_scenario", "make_scenario",
-    "multi_tenant", "prompt_burst", "steady", "with_payloads",
+    "multi_tenant", "prompt_burst", "steady", "with_deadline",
+    "with_payloads",
 ]

@@ -62,7 +62,10 @@ class Autoscaler:
         if now - self._last_action_t < self.cooldown_s:
             return actions
 
-        stopped = [r for r in pool.replicas if not r.routable]
+        # only parked capacity may be woken — a FAILED replica is gone
+        # until its own scheduled recovery, not the scaler's to revive
+        stopped = [r for r in pool.replicas
+                   if getattr(r, "revivable", not r.routable)]
         if self._press > self.hi_pressure_s and stopped:
             r = min(stopped, key=lambda r: r.joules_per_request())
             pool.revive(r)

@@ -79,7 +79,13 @@ class ReplicaPool:
         for r in self.replicas:
             if r.name == name:
                 return r
-        raise KeyError(name)
+        import difflib
+        names = [r.name for r in self.replicas]
+        msg = f"unknown replica {name!r}; pool has {names}"
+        close = difflib.get_close_matches(name, names, n=1, cutoff=0.4)
+        if close:
+            msg += f" — did you mean {close[0]!r}?"
+        raise KeyError(msg)
 
     def routable(self) -> list[Replica]:
         return [r for r in self.replicas if r.routable]
@@ -87,8 +93,9 @@ class ReplicaPool:
     def routable_for(self, req) -> list[Replica]:
         """Routable replicas whose workload matches the request:
         generate-kind requests land only on generate nodes, classify
-        requests only on classifier nodes.  A request with no
-        matching node hits the router's clear no-replicas error
+        requests only on classifier nodes.  A request with no matching
+        node is retried/rejected-with-reason by the fleet loop (bare
+        ``Router.route`` still raises its clear no-replicas error)
         rather than decoding garbage on the wrong backend."""
         want_gen = getattr(req, "kind", "classify") == "generate"
         match = [r for r in self.routable()
@@ -292,6 +299,11 @@ class FleetSimulator:
     scale_every: int = 20          # autoscaler cadence, in arrivals
     tracer: object = None          # telemetry.trace recorder; None=off
     metrics: object = None         # telemetry.metrics registry; None=off
+    # -- failure model (repro.faults) ---------------------------------------
+    injector: object = None        # faults.FaultInjector; None = no faults
+    retry_policy: object = None    # faults.RetryPolicy; None = default
+    brownout: object = None        # faults.BrownoutController; None = off
+    recovering_s: float = 0.25     # warm-up interlude after a crash window
 
     def _export_gauges(self, metrics, now: float) -> None:
         """Per-replica gauges each scale tick: pressure, queue depth,
@@ -320,10 +332,40 @@ class FleetSimulator:
                           "fraction admitted").set(admit, **lab)
         metrics.gauge("fleet_energy_j", "fleet modelled joules").set(
             self.pool.energy_j())
+        if self.brownout is not None:
+            metrics.gauge("fleet_brownout_scale",
+                          "τ brownout multiplier (1 = no pressure)").set(
+                self.brownout.scale(now))
+
+    # -- failure-path internals ---------------------------------------------
+    def _mint_reject(self, req, now: float, reason: str):
+        from repro.serving.api import PATH_REJECT, InferResponse
+        return InferResponse(
+            rid=req.rid, output=None, admitted=False, path=PATH_REJECT,
+            arrival_s=float(req.arrival_s), t_start=now, t_finish=now,
+            label=getattr(req, "label", None),
+            telemetry={"reason": reason})
+
+    def _resolve_target(self, target: str):
+        """A fault's target replica; an empty target hits the first
+        active node (deterministic pool order)."""
+        if target:
+            return self.pool.by_name(target)
+        for r in self.pool.replicas:
+            if r.state != STOPPED:
+                return r
+        return None
 
     def run(self, requests) -> FleetReport:
+        import heapq
+        import itertools
+        from dataclasses import replace as dc_replace
+
+        from repro.faults.retry import RetryPolicy
+        from repro.serving.api import request_expiry
         from repro.telemetry.metrics import NULL_METRICS
         from repro.telemetry.trace import NULL_TRACER
+
         requests = sorted(requests, key=lambda r: r.arrival_s)
         tracer = self.tracer if self.tracer is not None else NULL_TRACER
         metrics = (self.metrics if self.metrics is not None
@@ -339,32 +381,207 @@ class FleetSimulator:
             if getattr(self.router, "tracer", "no") is None:
                 self.router.tracer = self.tracer
         self.pool.start()
-        prev = float(requests[0].arrival_s) if requests else 0.0
-        first = prev
+        if self.injector is not None:
+            self.injector.reset()
+        retry = self.retry_policy or RetryPolicy()
+        brown = self.brownout
+        if brown is not None:
+            brown.reset()
 
-        for i, req in enumerate(requests):
-            now = float(req.arrival_s)
+        # one merged virtual-time event heap: arrivals (originals and
+        # retries), scheduled faults, and scheduled recoveries.  The
+        # loop runs until the heap drains, so late retries and
+        # recoveries keep the clock advancing past the last arrival.
+        seq = itertools.count()
+        heap: list = []
+        for req in requests:
+            heapq.heappush(heap, (float(req.arrival_s), next(seq),
+                                  "arrival", req))
+        if self.injector is not None:
+            for ev in self.injector.plan.events:
+                heapq.heappush(heap, (float(ev.t), next(seq),
+                                      "fault", ev))
+
+        first = heap[0][0] if heap else 0.0
+        prev = first
+        n_arrivals = 0
+        attempts: dict[int, int] = {}      # rid -> retries used
+        orig_arrival: dict[int, float] = {}
+        by_rid: dict[int, object] = {}     # rid -> latest request copy
+        fleet_out: list = []               # fleet-minted rejections
+        stats = {"n_retries": 0, "n_failures": 0, "n_expired": 0,
+                 "n_rejected_fleet": 0}
+        link_down_until = -float("inf")
+
+        def pressure_event(weight: float, now: float) -> None:
+            if brown is None:
+                return
+            brown.record(now, weight)
+            s = brown.scale(now)
+            for r in self.pool.replicas:
+                if r.controller is not None:
+                    r.controller.tau_scale = s
+
+        def requeue(req, now: float, reason: str,
+                    not_before: float = 0.0) -> None:
+            """Bounded retry with exponential backoff, else terminate
+            as a rejection-with-reason (never a hang)."""
+            attempt = attempts.get(req.rid, 0) + 1
+            if retry.allows(attempt):
+                attempts[req.rid] = attempt
+                orig_arrival.setdefault(req.rid, float(req.arrival_s))
+                meta = getattr(req, "metadata", None)
+                if (meta is not None and "expires_at" not in meta
+                        and getattr(req, "deadline_s", None) is not None):
+                    # pin the ABSOLUTE deadline before arrival_s moves
+                    meta["expires_at"] = request_expiry(req)
+                t_retry = max(now, not_before) + retry.delay(attempt)
+                copy = dc_replace(req, arrival_s=t_retry)
+                by_rid[req.rid] = copy
+                heapq.heappush(heap, (t_retry, next(seq),
+                                      "arrival", copy))
+                stats["n_retries"] += 1
+                metrics.counter("fleet_retries",
+                                "requeued requests, by reason").inc(
+                    reason=reason)
+                tracer.event("retry", now, resource="faults",
+                             rid=req.rid, attempt=attempt,
+                             reason=reason, at=t_retry)
+                pressure_event(0.25, now)
+            else:
+                reject(req, now, f"retry-budget:{reason}")
+
+        def reject(req, now: float, reason: str) -> None:
+            fleet_out.append(self._mint_reject(req, now, reason))
+            stats["n_rejected_fleet"] += 1
+            if reason == "deadline-expired":
+                stats["n_expired"] += 1
+                metrics.counter("fleet_expired",
+                                "requests shed past deadline").inc()
+                pressure_event(0.25, now)
+            tracer.event("reject", now, resource="faults",
+                         rid=req.rid, reason=reason)
+
+        def apply_fault(ev, now: float) -> None:
+            stats["n_failures"] += 1
+            metrics.counter("fleet_failures",
+                            "injected faults, by kind").inc(
+                kind=ev.kind, target=ev.target or "auto")
+            pressure_event(1.0, now)
+            if ev.kind == "link-flap":
+                # the fleet's ingress link: arrivals during the outage
+                # are lost in transit and retried after it lifts
+                nonlocal link_down_until
+                link_down_until = max(link_down_until,
+                                      now + ev.duration_s)
+                tracer.event("fault", now, resource="faults",
+                             kind=ev.kind, until=link_down_until)
+                return
+            r = self._resolve_target(ev.target)
+            if r is None:
+                return
+            if ev.kind == "crash":
+                report = (r.crash(now, ev.duration_s)
+                          if r.state != STOPPED
+                          else r.health.fail(now, ev.duration_s))
+                tracer.event("fault", now, resource="faults",
+                             kind=ev.kind, replica=r.name,
+                             n_lost=(report.n_lost if report else 0))
+                if report:
+                    metrics.counter(
+                        "fleet_wasted_j",
+                        "joules burned on work lost to crashes").inc(
+                        report.wasted_j, replica=r.name)
+                    stranded = list(report.stranded)
+                    stranded += [by_rid[rid] for rid in report.lost_rids
+                                 if rid in by_rid]
+                    for sr in stranded:
+                        requeue(sr, now, "replica-crash")
+                heapq.heappush(heap, (now + ev.duration_s, next(seq),
+                                      "recover", r.name))
+            elif ev.kind == "degrade":
+                r.degrade(now, ev.magnitude, ev.duration_s)
+                tracer.event("fault", now, resource="faults",
+                             kind=ev.kind, replica=r.name,
+                             factor=ev.magnitude)
+                heapq.heappush(heap, (now + ev.duration_s, next(seq),
+                                      "recover", r.name))
+            elif ev.kind == "kv-spike":
+                r.kv_spike(now, ev.magnitude, ev.duration_s)
+                tracer.event("fault", now, resource="faults",
+                             kind=ev.kind, replica=r.name,
+                             bias_s=ev.magnitude)
+                heapq.heappush(heap, (now + ev.duration_s, next(seq),
+                                      "recover", r.name))
+
+        while heap:
+            now, _, kind, payload = heapq.heappop(heap)
             self.pool.tick(now - prev)
             prev = now
+            if brown is not None:
+                pressure_event(0.0, now)
             for r in self.pool.replicas:
                 if r.state != STOPPED:
                     r.poke(now)
-            if i % self.scale_every == 0:
+                    # queued work past its deadline is shed before it
+                    # burns joules (rejected-with-reason by the server)
+                    r.server.shed_expired(now)
+
+            if kind == "fault":
+                apply_fault(payload, now)
+                continue
+            if kind == "recover":
+                r = self.pool.by_name(payload)
+                was_failed = r.health.status == "failed"
+                r.recover(now, self.recovering_s if was_failed else 0.0)
+                tracer.event("recover", now, resource="faults",
+                             replica=r.name, health=r.health.status)
+                if was_failed and self.recovering_s > 0.0:
+                    heapq.heappush(heap, (now + self.recovering_s,
+                                          next(seq), "heal", r.name))
+                continue
+            if kind == "heal":
+                r = self.pool.by_name(payload)
+                if r.health.status == "recovering":
+                    r.health.heal()
+                continue
+
+            req = payload
+            if n_arrivals % self.scale_every == 0:
                 if self.autoscaler is not None:
                     acts = self.autoscaler.observe(now, self.pool)
-                    for kind, name in acts or ():
+                    for act, name in acts or ():
                         tracer.event("autoscale", now,
                                      resource="autoscaler",
-                                     action=kind, replica=name)
+                                     action=act, replica=name)
                 if metrics.enabled:
                     self._export_gauges(metrics, now)
-            replica = self.router.route(req, self.pool.routable_for(req),
-                                        now)
+            n_arrivals += 1
+
+            if now >= request_expiry(req):
+                reject(req, now, "deadline-expired")
+                continue
+            if now < link_down_until:
+                requeue(req, now, "link-flap",
+                        not_before=link_down_until)
+                continue
+            candidates = self.pool.routable_for(req)
+            if not candidates:
+                requeue(req, now, "no-routable-replica")
+                continue
+            replica = self.router.route(req, candidates, now)
+            by_rid[req.rid] = req
             replica.push(req)
 
-        responses = []
+        responses = list(fleet_out)
         for r in self.pool.replicas:
             responses.extend(r.finish(prev))
+        # retried requests report END-TO-END latency: restore the
+        # original arrival on whatever response their rid ended with
+        for resp in responses:
+            t0 = orig_arrival.get(resp.rid)
+            if t0 is not None:
+                resp.arrival_s = t0
         responses.sort(key=lambda x: x.rid)
         if metrics.enabled:
             self._export_gauges(metrics, prev)
@@ -380,11 +597,13 @@ class FleetSimulator:
                            default=prev)
                 r.active_s += max(tail - prev, 0.0)
 
-        return self._report(responses, first, fleet_finish)
+        return self._report(responses, first, fleet_finish,
+                            stats=stats)
 
     # -- reporting -----------------------------------------------------------
-    def _report(self, responses, first: float,
-                finish: float) -> FleetReport:
+    def _report(self, responses, first: float, finish: float,
+                stats: dict | None = None) -> FleetReport:
+        from repro.serving.api import PATH_REJECT
         n = len(responses)
         span = max(finish - first, 1e-9)
         total_j = self.pool.energy_j()
@@ -393,6 +612,10 @@ class FleetSimulator:
                        or [0.0])
         correct = [int(r.output) == int(r.label) for r in responses
                    if r.label is not None and np.isscalar(r.output)]
+        rejected = [r for r in responses if r.path == PATH_REJECT]
+        n_expired = sum(1 for r in rejected
+                        if r.telemetry.get("reason") == "deadline-expired")
+        stats = stats or {}
         summary = {
             "n": n,
             "n_replicas": len(self.pool),
@@ -410,6 +633,17 @@ class FleetSimulator:
                 [r.admitted for r in responses])), 4)
                 if responses else float("nan")),
             "routed": {r.name: r.n_routed for r in self.pool},
+            # failure model (all zero on a fault-free run)
+            "n_served": n - len(rejected),
+            "n_rejected": len(rejected),
+            "n_expired": n_expired,
+            "n_retries": int(stats.get("n_retries", 0)),
+            "n_failures": int(stats.get("n_failures", 0)),
+            "wasted_j": round(sum(r.wasted_j for r in self.pool), 4),
+            "served_frac": round((n - len(rejected)) / max(n, 1), 4),
+            "brownout_min_scale": (
+                round(self.brownout.min_scale_seen, 4)
+                if self.brownout is not None else 1.0),
         }
         return FleetReport(
             responses=responses,

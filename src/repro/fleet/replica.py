@@ -49,6 +49,7 @@ import numpy as np
 from repro.core.controller import AdmissionController
 from repro.core.energy import EnergyModel
 from repro.core.landscape import LatencyModel
+from repro.faults.health import FAILED, HealthState
 from repro.serving.api import (PATH_CONTINUOUS, PATH_DIRECT,
                                PATH_DYNAMIC_BATCH, PATH_GATED,
                                AdmissionMiddleware, Completion,
@@ -95,6 +96,23 @@ class _SimEngineBase:
 
     def step(self, now, ctx) -> list[Completion]:
         return []
+
+    # -- fault surface (repro.faults) -----------------------------------
+    def cancel_queued(self, pred=None) -> list:
+        """Remove queued (not yet started) requests; engines without a
+        cancellable queue strand nothing."""
+        return []
+
+    def on_crash(self, now: float) -> None:
+        """Forget all committed virtual-time work (the crash clawed the
+        corresponding responses back); a revived node starts cold."""
+        return None
+
+    def set_latency(self, latency: LatencyModel) -> None:
+        """Swap the service model in place — slow-node degradation
+        installs a scaled COPY here (the default models are shared
+        across replicas and must never be mutated)."""
+        self.latency = latency
 
 
 @dataclass
@@ -144,6 +162,13 @@ class SimDirectEngine(_SimEngineBase):
     def drain(self, now, ctx) -> list[Completion]:
         self._now = max(self._now, now)
         return []
+
+    def on_crash(self, now: float) -> None:
+        self._core.reset()
+
+    def set_latency(self, latency: LatencyModel) -> None:
+        self.latency = latency
+        self._core.latency = latency
 
 
 @dataclass
@@ -197,6 +222,16 @@ class SimBatchEngine(_SimEngineBase):
 
     def drain(self, now, ctx) -> list[Completion]:
         return [self._completion(b) for b in self._core.drain(now)]
+
+    def cancel_queued(self, pred=None) -> list:
+        return self._core.cancel(pred)
+
+    def on_crash(self, now: float) -> None:
+        self._core.reset()
+
+    def set_latency(self, latency: LatencyModel) -> None:
+        self.latency = latency
+        self._core.latency = latency
 
 
 @dataclass
@@ -285,6 +320,13 @@ class SimGatedEngine(_SimEngineBase):
                     "c_norm": float(c_norm)},
             per_request=[{"entropy": float(e)} for e in ent])
 
+    def cancel_queued(self, pred=None) -> list:
+        return self._window.cancel(pred)
+
+    def on_crash(self, now: float) -> None:
+        self._window.reset()
+        self._line.reset()
+
 
 @dataclass
 class SimContinuousEngine(_SimEngineBase):
@@ -340,6 +382,9 @@ class SimContinuousEngine(_SimEngineBase):
         self._now = max(self._now, now)
         return []
 
+    def on_crash(self, now: float) -> None:
+        self._slots.reset()
+
 
 # ---------------------------------------------------------------------------
 # the replica
@@ -361,6 +406,11 @@ class Replica:
     state: str = field(default=ACTIVE, init=False)
     n_routed: int = field(default=0, init=False)
     active_s: float = field(default=0.0, init=False)   # powered-on time
+    health: HealthState = field(default_factory=HealthState, init=False)
+    pressure_bias_s: float = field(default=0.0, init=False)  # kv-spike
+    wasted_j: float = field(default=0.0, init=False)   # crash-burned J
+    _base_latency: LatencyModel | None = field(default=None, init=False,
+                                               repr=False)
 
     # -- serving ------------------------------------------------------------
     def start(self) -> "Replica":
@@ -371,6 +421,12 @@ class Replica:
         self.state = ACTIVE
         self.n_routed = 0
         self.active_s = 0.0
+        self.health.reset()
+        self.pressure_bias_s = 0.0
+        self.wasted_j = 0.0
+        if self._base_latency is not None:
+            self._set_engine_latency(self._base_latency)
+            self._base_latency = None
         return self
 
     def push(self, req) -> list:
@@ -401,7 +457,65 @@ class Replica:
 
     @property
     def routable(self) -> bool:
-        return self.state == ACTIVE
+        return self.state == ACTIVE and self.health.routable
+
+    @property
+    def revivable(self) -> bool:
+        """What the autoscaler may wake: parked capacity, not crashed
+        capacity.  A FAILED node only comes back through its scheduled
+        :meth:`recover`."""
+        return self.state == STOPPED and self.health.status != FAILED
+
+    # -- faults (repro.faults) ----------------------------------------------
+    def crash(self, now: float, duration_s: float = 0.5):
+        """The node dies: queued work is stranded, in-flight work lost,
+        partially-burned joules wasted (see ``Server.crash_now``).
+        Returns the :class:`~repro.serving.api.CrashReport`; the fleet
+        loop decides retry vs reject for everything in it."""
+        report = self.server.crash_now(now)
+        self.state = STOPPED
+        self.health.fail(now, duration_s)
+        self.wasted_j += report.wasted_j
+        return report
+
+    def degrade(self, now: float, factor: float,
+                duration_s: float) -> None:
+        """Slow node: service times multiplied by ``factor`` until the
+        episode ends (installed as a scaled COPY of the base latency
+        model — the defaults are shared across replicas)."""
+        self.health.degrade(now, factor, duration_s)
+        base = getattr(self.server.engine, "latency", None)
+        if base is None:
+            return                       # live adapters: no sim model
+        if self._base_latency is None:
+            self._base_latency = base
+        b, s = self._base_latency, self.health.slow_factor
+        self._set_engine_latency(LatencyModel(t_fixed_s=b.t_fixed_s * s,
+                                              t_tok_s=b.t_tok_s * s))
+
+    def kv_spike(self, now: float, bias_s: float,
+                 duration_s: float) -> None:
+        """KV-pool exhaustion: the node looks congested (pressure bias)
+        without being slower per request."""
+        self.health.degrade(now, 1.0, duration_s)
+        self.pressure_bias_s = max(self.pressure_bias_s, float(bias_s))
+
+    def recover(self, now: float, recovering_s: float = 0.0) -> None:
+        """End the current health episode: restore the base service
+        model, clear the pressure bias, re-enter service (through
+        RECOVERING when ``recovering_s > 0``)."""
+        self.health.recover(now, recovering_s)
+        self.pressure_bias_s = 0.0
+        if self._base_latency is not None:
+            self._set_engine_latency(self._base_latency)
+            self._base_latency = None
+        if self.state == STOPPED:
+            self.revive()
+
+    def _set_engine_latency(self, latency: LatencyModel) -> None:
+        set_lat = getattr(self.server.engine, "set_latency", None)
+        if callable(set_lat):
+            set_lat(latency)
 
     # -- signals ------------------------------------------------------------
     def load(self) -> LoadState:
@@ -410,8 +524,9 @@ class Replica:
     def pressure(self, now: float) -> float:
         """Seconds of backlog/queued work at ``now`` — the uniform
         ``EnginePort.pressure`` signal (``LoadState``-derived default
-        for engines that predate the protocol extension)."""
-        return self.server.pressure(now)
+        for engines that predate the protocol extension), plus any
+        KV-spike congestion bias."""
+        return self.server.pressure(now) + self.pressure_bias_s
 
     def joules_per_request(self) -> float:
         """Marginal-energy signal: the controller's EnergyMeter EWMA,
@@ -440,6 +555,9 @@ class Replica:
             "name": self.name,
             "kind": self.kind,
             "state": self.state,
+            "health": self.health.status,
+            "n_crashes": self.health.n_crashes,
+            "wasted_j": round(self.wasted_j, 4),
             "n_routed": self.n_routed,
             "n_served": n,
             "busy_s": round(self.busy_s, 4),

@@ -26,6 +26,14 @@ crossover emerges from the closed-loop signals themselves (see
 
 Ablation baselines: :class:`StaticRouter` (open-loop pin),
 :class:`RoundRobinRouter`, :class:`LeastLoadedRouter`.
+
+Failure handling lives one layer up: routers only ever see the
+ROUTABLE list (``state == ACTIVE`` and health not FAILED — see
+``repro.faults.health``).  When that list is empty the fleet
+simulator does NOT call ``route``; it requeues the request with
+virtual-time backoff and, once the retry budget is spent, rejects it
+with reason ``no-routable-replica`` — ``_require``'s RuntimeError is
+a programming-error guard, not a serving-path outcome.
 """
 from __future__ import annotations
 

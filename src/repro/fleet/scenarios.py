@@ -359,6 +359,24 @@ def with_payloads(scenario: Scenario, payloads,
         slo_s=scenario.slo_s)
 
 
+def with_deadline(scenario: Scenario,
+                  deadline_s: float | None) -> Scenario:
+    """Clone a scenario with a per-request completion deadline
+    (``InferRequest.deadline_s``).  Requests still queued past
+    ``arrival_s + deadline_s`` are shed as rejections-with-reason by
+    the serving/fleet layers (``repro.faults``); ``None`` clears any
+    deadline.  Traffic shape, oracle, and rids are untouched."""
+    requests = [replace(r, deadline_s=deadline_s,
+                        metadata=dict(r.metadata))
+                for r in scenario.requests]
+    return Scenario(
+        name=scenario.name, requests=requests, oracle=scenario.oracle,
+        description=(scenario.description
+                     + (f" (deadline {deadline_s}s)"
+                        if deadline_s is not None else "")),
+        slo_s=scenario.slo_s)
+
+
 # -- generate-kind scenarios (disaggregated serving) ------------------------
 # These carry token payloads and ``kind="generate"`` and live in their
 # OWN registry: SCENARIOS feeds classifier fleets (benchmarks/

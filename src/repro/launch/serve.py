@@ -230,10 +230,13 @@ def serve_fleet(args) -> dict:
     """Run a traffic scenario over a heterogeneous replica fleet —
     oracle-backed virtual-time replicas by default, the LIVE engines
     (real jit'd models, measured walltimes) with ``--fleet-live``."""
+    from repro.faults import (BrownoutController, FaultInjector,
+                              RetryPolicy, make_chaos)
     from repro.fleet import (Autoscaler, FleetSimulator,
                              LIVE_REPLICA_KINDS, REPLICA_KINDS,
                              build_live_fleet, build_sim_fleet,
-                             make_router, make_scenario, with_payloads)
+                             make_router, make_scenario, with_deadline,
+                             with_payloads)
 
     kinds = tuple(k.strip() for k in args.fleet_kinds.split(","))
     valid = LIVE_REPLICA_KINDS if args.fleet_live else REPLICA_KINDS
@@ -242,8 +245,21 @@ def serve_fleet(args) -> dict:
             raise SystemExit(f"unknown replica kind {k!r}; choose from "
                              f"{valid}")
 
-    scenario = make_scenario(args.scenario, args.requests,
-                             qps=args.qps, seed=args.seed)
+    chaos = None
+    deadline = args.deadline
+    if args.chaos:
+        # a named failure story: its traffic trace + fault plan +
+        # default deadline, reproducible per --chaos-seed
+        chaos = make_chaos(args.chaos, args.requests, qps=args.qps,
+                           seed=args.chaos_seed)
+        scenario = chaos.scenario
+        if deadline is None:
+            deadline = chaos.deadline_s
+    else:
+        scenario = make_scenario(args.scenario, args.requests,
+                                 qps=args.qps, seed=args.seed)
+    if deadline is not None:
+        scenario = with_deadline(scenario, deadline)
 
     def controllers(kind, i):
         # each replica gets its OWN closed-loop controller
@@ -270,12 +286,16 @@ def serve_fleet(args) -> dict:
     sim = FleetSimulator(
         pool, make_router(args.policy),
         autoscaler=Autoscaler() if args.autoscale else None,
-        carbon=carbon, tracer=tracer, metrics=metrics)
+        carbon=carbon, tracer=tracer, metrics=metrics,
+        injector=(FaultInjector(chaos.plan) if chaos else None),
+        retry_policy=(RetryPolicy() if chaos else None),
+        brownout=(BrownoutController() if chaos else None))
     report = sim.run(scenario.requests)
 
     tracker = Tracker(root=args.runs)
     mode = "fleet-live" if args.fleet_live else "fleet"
-    run = tracker.start_run(f"{mode}-{scenario.name}-{args.policy}")
+    tag = f"chaos-{chaos.name}" if chaos else scenario.name
+    run = tracker.start_run(f"{mode}-{tag}-{args.policy}")
     drift = finish_observability(
         args, run, tracer, metrics, audit,
         modelled_j=float(report.summary.get("energy_j", 0.0)),
@@ -297,6 +317,9 @@ def serve_fleet(args) -> dict:
            "policy": args.policy,
            "live": bool(args.fleet_live),
            "autoscale": bool(args.autoscale),
+           **({"chaos": chaos.name,
+               "fault_plan": chaos.plan.signature(),
+               "deadline_s": deadline} if chaos else {}),
            **report.summary,
            "per_replica": report.per_replica,
            "autoscaler_actions": len(report.autoscaler_log),
@@ -498,7 +521,27 @@ def main():
                     help="comma-separated replica kinds (>=1)")
     ap.add_argument("--no-autoscale", dest="autoscale",
                     action="store_false", default=True)
+    # failure model (repro.faults)
+    ap.add_argument("--chaos", default=None,
+                    help="named fault-injection story over the fleet "
+                         "(crash-storm, slow-node, kv-pressure, "
+                         "link-flap, crash-and-flap, seeded-storm): "
+                         "scripted/seeded crashes, degradations and "
+                         "link outages with bounded retry + brownout; "
+                         "implies --fleet")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="seed for the chaos traffic trace and any "
+                         "seeded fault schedule (default: --seed)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request completion deadline in seconds; "
+                         "queued work past it is shed as a rejection-"
+                         "with-reason (default: the chaos scenario's "
+                         "deadline, or none)")
     args = ap.parse_args()
+    if args.chaos:
+        args.fleet = True
+    if args.chaos_seed is None:
+        args.chaos_seed = args.seed
     if args.fleet_live:
         args.fleet = True
     if args.qps is None:

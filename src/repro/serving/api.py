@@ -51,6 +51,7 @@ PATH_CONTINUOUS = "continuous-decode"
 PATH_GENERATE = "generate"
 PATH_AUTO = "auto"
 PATH_SKIP = "skip"
+PATH_REJECT = "reject"                   # shed: expired / retry-exhausted
 
 ALL_PATHS = (PATH_DIRECT, PATH_DYNAMIC_BATCH, PATH_GATED,
              PATH_CONTINUOUS, PATH_GENERATE)
@@ -82,6 +83,21 @@ class InferRequest(Request):
     max_new: int = 16                  # generation budget (kind=generate)
     entropy_hint: float | None = None  # L(x) proxy known at enqueue time
     metadata: dict = field(default_factory=dict)
+    deadline_s: float | None = None    # relative deadline; None = none
+
+
+def request_expiry(req) -> float:
+    """Absolute virtual time at which ``req`` expires (``inf`` for no
+    deadline).  ``metadata['expires_at']`` overrides the relative
+    ``deadline_s`` so a retried copy (whose ``arrival_s`` is the retry
+    time) keeps the ORIGINAL absolute deadline."""
+    meta = getattr(req, "metadata", None)
+    if meta and "expires_at" in meta:
+        return float(meta["expires_at"])
+    d = getattr(req, "deadline_s", None)
+    if d is None:
+        return float("inf")
+    return float(req.arrival_s) + float(d)
 
 
 @dataclass
@@ -329,6 +345,25 @@ class TelemetryMiddleware(ServingMiddleware):
 # -- server -----------------------------------------------------------------
 
 @dataclass
+class CrashReport:
+    """What :meth:`Server.crash_now` salvaged from a dying replica.
+
+    ``stranded`` holds queued requests that never started; ``lost_rids``
+    names requests whose optimistically-minted future responses were
+    withdrawn (the virtual-time engines mint completions at submit with
+    a future ``t_finish`` — work past the crash instant never actually
+    happened).  ``wasted_j`` is the modelled joules burned on partial
+    executions that produced nothing."""
+    stranded: list = field(default_factory=list)
+    lost_rids: list = field(default_factory=list)
+    wasted_j: float = 0.0
+
+    @property
+    def n_lost(self) -> int:
+        return len(self.stranded) + len(self.lost_rids)
+
+
+@dataclass
 class ServerConfig:
     """Lifecycle/routing knobs (engine-specific knobs live on the
     adapters)."""
@@ -459,6 +494,12 @@ class Server:
         self._absorb(self.engine.step(now, ctx), ctx, self._decisions,
                      self._out)
 
+        # deadline shedding: an expired request is rejected-with-reason
+        # and NEVER executed — no triage, no queue slot, no joules
+        if now >= request_expiry(req):
+            self._reject(req, now, "deadline-expired")
+            return self._out[n0:]
+
         tracer, root = ctx.tracer, None
         if tracer.enabled:
             # root span: covers triage -> admission -> queue -> execute;
@@ -579,6 +620,100 @@ class Server:
         for mw in self.middleware:
             mw.on_finish(self, ctx)
         return out
+
+    # -- failure surface -----------------------------------------------------
+    def _reject(self, req, now: float, reason: str) -> InferResponse:
+        """Mint a rejection-with-reason response (path='reject'); the
+        request is counted exactly once and never executed."""
+        ctx = self.ctx
+        resp = InferResponse(
+            rid=req.rid, output=None, admitted=False, path=PATH_REJECT,
+            arrival_s=float(req.arrival_s), t_start=now, t_finish=now,
+            label=getattr(req, "label", None),
+            telemetry={"reason": reason})
+        self._out.append(resp)
+        self.log.add(resp)
+        tracer = ctx.tracer
+        if tracer.enabled:
+            root = self._roots.pop(req.rid, None)
+            if root is not None:
+                tracer.end(root, now, path=PATH_REJECT, reason=reason)
+            else:
+                tracer.event("reject", now, rid=req.rid, reason=reason)
+        if ctx.metrics.enabled:
+            self._observe_response(resp, ctx)
+            ctx.metrics.counter(
+                "serving_rejections_total",
+                "requests shed without execution, by reason").inc(
+                reason=reason, engine=self._caps.name)
+        for mw in self.middleware:
+            mw.on_completion(None, [resp], ctx)
+        return resp
+
+    def shed_expired(self, now: float) -> list[InferResponse]:
+        """Drop queued (not yet started) requests whose deadline has
+        passed — the joules they would have burned are saved.  Engines
+        without a cancellable queue shed nothing here (their expired
+        work is caught at push time instead)."""
+        self._ensure_open()
+        n0 = len(self._out)
+        cancel = getattr(self.engine, "cancel_queued", None)
+        if callable(cancel):
+            t = float(now)
+            for r in cancel(lambda q: t >= request_expiry(q)):
+                self._reject(r, t, "deadline-expired")
+        return self._out[n0:]
+
+    def crash_now(self, now: float) -> CrashReport:
+        """The replica dies at ``now``: queued work is stranded,
+        in-flight work is lost, partially-burned joules are wasted.
+
+        The virtual-time engines mint completions at submit time with
+        future ``t_finish``; a crash must claw those back — every
+        response with ``t_finish > now`` is withdrawn from the output
+        and the request log, its unburned busy-time refunded and its
+        burned share booked as ``wasted_j``.  The caller (the fleet
+        loop) decides retry vs reject for everything reported."""
+        self._ensure_open()
+        ctx = self.ctx
+        t = float(now)
+        ctx.now = max(ctx.now, t)
+        report = CrashReport()
+
+        cancel = getattr(self.engine, "cancel_queued", None)
+        if callable(cancel):
+            report.stranded = list(cancel(None))
+
+        p_active = ctx.energy_model.p_active
+        kept: list[InferResponse] = []
+        for r in self._out:
+            if r.t_finish <= t or r.path in (PATH_SKIP, PATH_REJECT):
+                kept.append(r)
+                continue
+            size = max(r.batch_size, 1)
+            burned = max(min(t, r.t_finish) - r.t_start, 0.0) / size
+            refund = (r.t_finish - r.t_start) / size - burned
+            ctx.busy_s -= refund
+            report.wasted_j += p_active * burned
+            report.lost_rids.append(r.rid)
+            self.log.discard(r)
+        self._out[:] = kept
+
+        tracer = ctx.tracer
+        if tracer.enabled:
+            for req in report.stranded:
+                root = self._roots.pop(req.rid, None)
+                if root is not None:
+                    tracer.end(root, t, error="crashed")
+        on_crash = getattr(self.engine, "on_crash", None)
+        if callable(on_crash):
+            on_crash(t)
+        if ctx.metrics.enabled and report.n_lost:
+            ctx.metrics.counter(
+                "serving_crash_lost_total",
+                "requests stranded or withdrawn by a crash").inc(
+                value=float(report.n_lost), engine=self._caps.name)
+        return report
 
     # -- internals ----------------------------------------------------------
     def _route(self, caps: EngineCapabilities, ctx) -> str:

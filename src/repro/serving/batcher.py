@@ -120,6 +120,19 @@ class BatchQueue:
                                   reason="drain"))
         return out
 
+    def cancel(self, pred=None) -> list[Request]:
+        """Remove queued requests matching ``pred`` (all when ``pred``
+        is None) WITHOUT forming batches — the fault path: a crash
+        strands the whole queue, deadline shedding removes only the
+        expired.  Returns the removed requests in arrival order."""
+        if pred is None:
+            removed, self.queue[:] = list(self.queue), []
+            return removed
+        removed = [r for r in self.queue if pred(r)]
+        if removed:
+            self.queue[:] = [r for r in self.queue if not pred(r)]
+        return removed
+
     def reset(self) -> None:
         self.queue.clear()
 
@@ -204,6 +217,11 @@ class DynamicBatcher:
         if self.window.queue:
             b += self.latency.step_time(len(self.window.queue))
         return b
+
+    def cancel(self, pred=None) -> list[Request]:
+        """Remove queued (not yet batched) requests; see
+        :meth:`BatchQueue.cancel`."""
+        return self.window.cancel(pred)
 
     def reset(self) -> None:
         self.window.reset()

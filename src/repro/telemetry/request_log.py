@@ -32,6 +32,15 @@ class RequestLog:
     def add(self, resp) -> None:
         self.responses.append(resp)
 
+    def discard(self, resp) -> None:
+        """Withdraw a previously-added response (a crash clawed back
+        an optimistically-minted future completion).  Missing entries
+        are ignored — discarding twice is not an error."""
+        try:
+            self.responses.remove(resp)
+        except ValueError:
+            pass
+
     # -- derived metrics (SimMetrics-compatible) ------------------------
     @property
     def n(self) -> int:

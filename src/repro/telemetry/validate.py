@@ -3,11 +3,11 @@
 Usage::
 
     python -m repro.telemetry.validate TRACE.json [METRICS.json]
-        [--require-gauge NAME ...]
+        [--require-gauge NAME ...] [--require-counter NAME ...]
 
 Fails (exit 1) on orphan spans, negative durations, per-resource
 overlap, unbalanced async pairs, a malformed metrics snapshot, or a
-missing required gauge.
+missing required gauge/counter.
 """
 from __future__ import annotations
 
@@ -21,7 +21,8 @@ from .trace import validate_chrome
 __all__ = ["validate_metrics_snapshot", "main"]
 
 
-def validate_metrics_snapshot(doc: Dict[str, Any], require_gauges: List[str] = ()) -> List[str]:
+def validate_metrics_snapshot(doc: Dict[str, Any], require_gauges: List[str] = (),
+                              require_counters: List[str] = ()) -> List[str]:
     problems: List[str] = []
     for section in ("counters", "gauges", "histograms"):
         if section not in doc or not isinstance(doc[section], dict):
@@ -31,6 +32,11 @@ def validate_metrics_snapshot(doc: Dict[str, Any], require_gauges: List[str] = (
         series = gauges.get(name)
         if not series:
             problems.append(f"required gauge {name!r} absent or empty")
+    counters = doc.get("counters", {})
+    for name in require_counters:
+        series = counters.get(name)
+        if not series:
+            problems.append(f"required counter {name!r} absent or empty")
     for name, series in (doc.get("counters", {}) or {}).items():
         for s in series:
             if s.get("value", 0.0) < 0.0:
@@ -48,6 +54,12 @@ def main(argv: List[str] = None) -> int:
         default=[],
         help="gauge names that must exist non-empty in the metrics snapshot",
     )
+    ap.add_argument(
+        "--require-counter",
+        nargs="*",
+        default=[],
+        help="counter names that must exist non-empty in the metrics snapshot",
+    )
     args = ap.parse_args(argv)
 
     problems: List[str] = []
@@ -59,7 +71,8 @@ def main(argv: List[str] = None) -> int:
     if args.metrics:
         with open(args.metrics) as f:
             metrics_doc = json.load(f)
-        problems += validate_metrics_snapshot(metrics_doc, args.require_gauge)
+        problems += validate_metrics_snapshot(metrics_doc, args.require_gauge,
+                                              args.require_counter)
 
     if problems:
         for p in problems:

@@ -1,0 +1,433 @@
+"""Failure model (repro.faults): fault plans and injection, the health
+state machine, deadlines, bounded retry/failover, brownout, and the
+chaos recovery invariants — exactly-once, never-hang, deterministic."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import AdmissionController, DecayingThreshold
+from repro.faults import (BrownoutController, FAILED, FAULT_KINDS,
+                          FaultEvent, FaultInjector, FaultPlan, HEALTHY,
+                          HealthState, RECOVERING, RetryPolicy,
+                          CHAOS_SCENARIOS, make_chaos, with_deadlines)
+from repro.fleet import (EnergyAwareRouter, FleetSimulator,
+                         build_sim_fleet, make_scenario,
+                         make_sim_replica, with_deadline)
+from repro.serving.api import PATH_REJECT, InferRequest, request_expiry
+
+KINDS3 = ("direct", "dynamic-batch", "gated-in-graph")
+
+
+def _chaos_fleet(ch, **kw):
+    pool = build_sim_fleet(ch.scenario.oracle, kinds=KINDS3)
+    sim = FleetSimulator(pool, EnergyAwareRouter(),
+                         injector=FaultInjector(ch.plan),
+                         retry_policy=RetryPolicy(),
+                         brownout=BrownoutController(), **kw)
+    return sim, pool
+
+
+# ---------------------------------------------------------------------------
+# fault plans: schedule, seeding, injection
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_scripted_sorts_and_validates():
+    plan = FaultPlan.scripted([
+        FaultEvent(t=2.0, kind="crash", target="b"),
+        FaultEvent(t=1.0, kind="degrade", target="a", magnitude=2.5),
+    ])
+    assert [e.t for e in plan.events] == [1.0, 2.0]
+    with pytest.raises(ValueError):
+        FaultEvent(t=-1.0, kind="crash")
+    with pytest.raises(ValueError):
+        FaultEvent(t=0.0, kind="crash", duration_s=-0.1)
+
+
+def test_unknown_fault_kind_suggests_nearest():
+    with pytest.raises(ValueError, match="did you mean 'crash'"):
+        FaultEvent(t=0.0, kind="crsh")
+    with pytest.raises(ValueError, match="link-flap"):
+        FaultEvent(t=0.0, kind="link-flop")
+
+
+def test_seeded_plan_identical_per_seed():
+    kw = dict(targets=["a", "b", "c"], horizon_s=10.0, n_events=6)
+    p1 = FaultPlan.seeded(42, **kw)
+    p2 = FaultPlan.seeded(42, **kw)
+    # byte-identical schedule and signature
+    assert p1.to_json() == p2.to_json()
+    assert p1.signature() == p2.signature()
+    assert len(p1.events) == 6
+    assert all(e.kind in FAULT_KINDS for e in p1.events)
+    assert all(0.0 <= e.t <= 10.0 for e in p1.events)
+    p3 = FaultPlan.seeded(43, **kw)
+    assert p3.to_json() != p1.to_json()
+
+
+def test_injector_drains_in_order():
+    plan = FaultPlan.scripted([
+        FaultEvent(t=1.0, kind="crash", target="a"),
+        FaultEvent(t=3.0, kind="degrade", target="b"),
+    ])
+    inj = FaultInjector(plan)
+    assert inj.next_t() == 1.0
+    assert [e.t for e in inj.pop_due(2.0)] == [1.0]
+    assert not inj.exhausted
+    assert [e.t for e in inj.pop_due(5.0)] == [3.0]
+    assert inj.exhausted
+    inj.reset()
+    assert inj.next_t() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# health state machine / retry policy / brownout
+# ---------------------------------------------------------------------------
+
+def test_health_state_machine_transitions():
+    h = HealthState()
+    assert h.status == HEALTHY and h.routable
+    h.fail(1.0, 0.5)
+    assert h.status == FAILED and not h.routable
+    assert h.n_crashes == 1
+    # degrading a dead node is a no-op
+    h.degrade(1.1, 3.0, 1.0)
+    assert h.status == FAILED
+    h.recover(1.5, recovering_s=0.25)
+    assert h.status == RECOVERING and h.routable
+    h.heal()
+    assert h.status == HEALTHY and h.slow_factor == 1.0
+    h.degrade(2.0, 2.0, 1.0)
+    h.degrade(2.1, 3.0, 0.5)          # overlapping episodes max-merge
+    assert h.slow_factor == 3.0
+    h.recover(3.0)                    # no warm-up -> straight to healthy
+    assert h.status == HEALTHY
+
+
+def test_retry_policy_backoff_bounded():
+    p = RetryPolicy(max_retries=3, backoff_base_s=0.1,
+                    backoff_mult=2.0, backoff_max_s=0.3)
+    assert [p.allows(a) for a in (1, 2, 3, 4)] == [True, True, True,
+                                                   False]
+    assert p.delay(1) == pytest.approx(0.1)
+    assert p.delay(2) == pytest.approx(0.2)
+    assert p.delay(3) == pytest.approx(0.3)   # capped
+    assert p.delay(9) == pytest.approx(0.3)
+
+
+def test_brownout_pressure_decays_and_recovers():
+    b = BrownoutController(half_life_s=1.0, sensitivity=1.0,
+                           min_scale=0.4)
+    assert b.scale(0.0) == 1.0
+    b.record(0.0, 4.0)
+    s0 = b.scale(0.0)
+    assert 0.4 <= s0 < 1.0
+    assert b.scale(3.0) > s0          # pressure decays with time
+    assert b.scale(30.0) == pytest.approx(1.0, abs=1e-2)
+    assert b.min_scale_seen == s0
+
+
+def test_brownout_tightens_tau_via_scale():
+    ctrl = AdmissionController(
+        threshold=DecayingThreshold(tau0=1.0, tau_inf=0.5, k=0.5))
+    tau_open = ctrl.peek(0.0)[0]
+    ctrl.tau_scale = 0.5
+    assert ctrl.peek(0.0)[0] == pytest.approx(0.5 * tau_open)
+    # a 'ge' rule keeps the same admission basin by dividing
+    ctrl_ge = AdmissionController(
+        threshold=DecayingThreshold(tau0=1.0, tau_inf=0.5, k=0.5),
+        rule="ge")
+    tau_ge = ctrl_ge.peek(0.0)[0]
+    ctrl_ge.tau_scale = 0.5
+    assert ctrl_ge.peek(0.0)[0] == pytest.approx(tau_ge / 0.5)
+
+
+# ---------------------------------------------------------------------------
+# deadlines: counted once, never executed
+# ---------------------------------------------------------------------------
+
+def test_request_expiry_reads_deadline_and_override():
+    r = InferRequest(rid=0, arrival_s=1.0)
+    assert request_expiry(r) == float("inf")
+    r2 = InferRequest(rid=1, arrival_s=1.0, deadline_s=0.5)
+    assert request_expiry(r2) == pytest.approx(1.5)
+    r3 = InferRequest(rid=2, arrival_s=9.0, deadline_s=0.5,
+                      metadata={"expires_at": 1.5})
+    assert request_expiry(r3) == pytest.approx(1.5)
+
+
+def test_with_deadline_clones_trace():
+    sc = make_scenario("steady", 20, seed=0)
+    dl = with_deadline(sc, 0.8)
+    assert all(r.deadline_s == 0.8 for r in dl.requests)
+    assert all(r.deadline_s is None for r in sc.requests)  # untouched
+    assert [r.rid for r in dl.requests] == [r.rid for r in sc.requests]
+    cleared = with_deadline(dl, None)
+    assert all(r.deadline_s is None for r in cleared.requests)
+
+
+def test_expired_request_rejected_once_never_executed():
+    sc = make_scenario("steady", 40, seed=1)
+    dl = with_deadline(sc, 0.0)       # expired on arrival
+    pool = build_sim_fleet(sc.oracle, kinds=KINDS3)
+    rep = FleetSimulator(pool, EnergyAwareRouter()).run(dl.requests)
+    assert len(rep.responses) == 40
+    assert sorted(r.rid for r in rep.responses) == list(range(40))
+    assert all(r.path == PATH_REJECT for r in rep.responses)
+    assert all(r.telemetry["reason"] == "deadline-expired"
+               for r in rep.responses)
+    assert rep.summary["n_expired"] == 40
+    assert rep.summary["n_served"] == 0
+    # the engines never executed anything
+    assert all(r.server.log.n == 0 for r in pool.replicas)
+
+
+def test_queued_request_shed_at_expiry():
+    sc = make_scenario("steady", 10, seed=2)
+    r = make_sim_replica("b-0", "dynamic-batch", sc.oracle,
+                         queue_window_s=10.0)   # park work in the window
+    r.start()
+    req = InferRequest(rid=0, arrival_s=0.0, deadline_s=0.1,
+                       label=int(sc.oracle.labels[0]),
+                       entropy_hint=0.2)
+    r.push(req)
+    shed = r.server.shed_expired(5.0)
+    assert [x.rid for x in shed] == [0]
+    out = r.finish(6.0)
+    mine = [x for x in out if x.rid == 0]
+    assert len(mine) == 1             # exactly once
+    assert mine[0].path == PATH_REJECT
+
+
+# ---------------------------------------------------------------------------
+# failover: crash claw-back, retry budgets, all-stopped pools
+# ---------------------------------------------------------------------------
+
+def test_crash_now_claws_back_inflight_and_wastes_joules():
+    sc = make_scenario("steady", 10, seed=3)
+    r = make_sim_replica("d-0", "direct", sc.oracle)
+    r.start()
+    req = sc.requests[0]
+    done = [x for x in r.push(req) if x.rid == req.rid]
+    assert done and done[0].t_finish > req.arrival_s
+    mid = (req.arrival_s + done[0].t_finish) / 2
+    report = r.crash(mid, duration_s=0.5)
+    assert req.rid in report.lost_rids
+    assert report.wasted_j > 0.0      # partially-burned joules booked
+    assert r.wasted_j == pytest.approx(report.wasted_j)
+    assert r.server.log.n == 0        # clawed out of the request log
+    assert not r.routable and not r.revivable
+    r.recover(mid + 1.0)
+    assert r.routable
+
+
+def test_all_stopped_pool_rejects_with_reason_not_crash():
+    """Satellite regression: zero routable replicas must never raise —
+    every request resolves as a bounded-retry rejection and the clock
+    keeps advancing."""
+    sc = make_scenario("steady", 30, seed=4)
+    plan = FaultPlan.scripted([
+        FaultEvent(t=0.0, kind="crash", target=f"{k}-{i}",
+                   duration_s=1000.0)
+        for i, k in enumerate(KINDS3)])
+    pool = build_sim_fleet(sc.oracle, kinds=KINDS3)
+    sim = FleetSimulator(pool, EnergyAwareRouter(),
+                         injector=FaultInjector(plan),
+                         retry_policy=RetryPolicy(max_retries=2))
+    rep = sim.run(sc.requests)        # must not raise
+    assert len(rep.responses) == 30
+    assert sorted(r.rid for r in rep.responses) == list(range(30))
+    assert all(r.path == PATH_REJECT for r in rep.responses)
+    assert all(r.telemetry["reason"]
+               == "retry-budget:no-routable-replica"
+               for r in rep.responses)
+    assert rep.summary["span_s"] > 0
+
+
+def test_unmatched_kind_rejects_instead_of_hanging():
+    sc = make_scenario("steady", 4, seed=5)
+    gen = [InferRequest(rid=99, arrival_s=0.0, kind="generate",
+                        payload=np.zeros(4, np.int32))]
+    pool = build_sim_fleet(sc.oracle, kinds=KINDS3)
+    rep = FleetSimulator(pool, EnergyAwareRouter(),
+                         retry_policy=RetryPolicy(max_retries=1)).run(
+        sc.requests + gen)
+    mine = [r for r in rep.responses if r.rid == 99]
+    assert len(mine) == 1
+    assert mine[0].path == PATH_REJECT
+    assert mine[0].telemetry["reason"].startswith("retry-budget:")
+    # the classifier traffic still served normally
+    assert rep.summary["n_served"] == 4
+
+
+def test_autoscaler_revives_parked_but_never_failed():
+    sc = make_scenario("steady", 10, seed=6)
+    pool = build_sim_fleet(sc.oracle, kinds=KINDS3).start()
+    drained = pool.replicas[0]
+    drained.drain(0.0)
+    crashed = pool.replicas[1]
+    crashed.crash(0.0, duration_s=10.0)
+    assert drained.revivable
+    assert not crashed.revivable
+    from repro.fleet import Autoscaler
+    sca = Autoscaler(hi_pressure_s=0.0, cooldown_s=0.0)
+    sca._press = 1.0                  # force the revive branch
+    acts = sca.observe(1.0, pool)
+    assert acts == [("revive", drained.name)]
+    assert crashed.state != "active" and not crashed.routable
+
+
+def test_by_name_suggests_nearest_replica():
+    sc = make_scenario("steady", 4, seed=7)
+    pool = build_sim_fleet(sc.oracle, kinds=KINDS3)
+    with pytest.raises(KeyError, match="did you mean 'direct-0'"):
+        pool.by_name("direct0")
+
+
+# ---------------------------------------------------------------------------
+# chaos scenarios: exactly-once under faults, brownout, determinism
+# ---------------------------------------------------------------------------
+
+def test_chaos_registry_and_suggestion():
+    assert set(CHAOS_SCENARIOS) >= {"crash-storm", "link-flap",
+                                    "crash-and-flap", "seeded-storm"}
+    with pytest.raises(ValueError, match="did you mean 'crash-storm'"):
+        make_chaos("crash-strom", 10)
+
+
+def test_crash_and_flap_serves_exactly_once():
+    """The acceptance story: a mid-scenario crash plus a link flap —
+    >= 95% of requests served in-deadline, each rid exactly once,
+    every stranded request retried or rejected-with-reason."""
+    ch = make_chaos("crash-and-flap", 400, seed=0)
+    sim, pool = _chaos_fleet(ch)
+    rep = sim.run(ch.requests())
+    rids = [r.rid for r in rep.responses]
+    assert sorted(rids) == list(range(400))          # nothing hangs
+    assert len(set(rids)) == len(rids)               # exactly once
+    assert rep.summary["served_frac"] >= 0.95
+    assert rep.summary["n_failures"] == 2
+    assert rep.summary["n_retries"] > 0
+    rejected = [r for r in rep.responses if r.path == PATH_REJECT]
+    assert all(r.telemetry.get("reason") for r in rejected)
+    # sustained failure pressure tightened tau(t)
+    assert rep.summary["brownout_min_scale"] < 1.0
+
+
+def test_chaos_run_deterministic_rows():
+    """Satellite (c): identical seeds -> identical BENCH rows."""
+    import benchmarks.chaos_recovery as cr
+    r1 = cr._run_one("crash-and-flap", 150, 0)
+    r2 = cr._run_one("crash-and-flap", 150, 0)
+    assert json.dumps(r1, sort_keys=True) == json.dumps(r2,
+                                                        sort_keys=True)
+    p1 = make_chaos("seeded-storm", 50, seed=7).plan
+    p2 = make_chaos("seeded-storm", 50, seed=7).plan
+    assert p1.to_json() == p2.to_json()
+
+
+def test_with_deadlines_stamps_chaos_trace():
+    ch = make_chaos("crash-storm", 20, seed=0)
+    reqs = ch.requests()
+    assert all(r.deadline_s == ch.deadline_s for r in reqs)
+    again = with_deadlines(ch.scenario, 9.0)
+    assert all(r.deadline_s == 9.0 for r in again.requests)
+
+
+# ---------------------------------------------------------------------------
+# disagg failure model: link flaps, decode crashes, retransmission
+# ---------------------------------------------------------------------------
+
+def test_transfer_flap_drops_inflight_and_stalls_link():
+    from types import SimpleNamespace
+
+    from repro.disagg import TransferQueue
+    tq = TransferQueue(gbps=1.0, base_latency_s=0.1)
+    pr = SimpleNamespace(kv_bytes=1000)
+    t1 = tq.send(pr, 0.0, dst="decode-0")
+    t2 = tq.send(pr, 0.0, dst="decode-1")
+    assert t2.arrive_t > t1.arrive_t          # serialised FIFO link
+    lost = tq.flap(t1.arrive_t, duration_s=2.0)
+    assert [t.dst for t in lost] == ["decode-1"]
+    assert tq.n_dropped == 1
+    assert tq.outage_until == pytest.approx(t1.arrive_t + 2.0)
+    # nothing moves during the outage: the next send starts after it
+    t3 = tq.send(pr, t1.arrive_t, dst="decode-0")
+    assert t3.start_t >= tq.outage_until
+
+
+def test_transfer_drop_to_and_collapse():
+    from types import SimpleNamespace
+
+    from repro.disagg import TransferQueue
+    tq = TransferQueue(gbps=1.0, base_latency_s=0.1)
+    pr = SimpleNamespace(kv_bytes=1000)
+    tq.send(pr, 0.0, dst="decode-0")
+    tq.send(pr, 0.0, dst="decode-1")
+    lost = tq.drop_to("decode-1")
+    assert [t.dst for t in lost] == ["decode-1"]
+    assert tq.deliver(10.0)                   # survivor still lands
+    fast = tq.send(pr, 20.0, dst="decode-0")
+    tq.collapse(30.0, duration_s=5.0, factor=4.0)
+    slow = tq.send(pr, 30.0, dst="decode-0")
+    assert ((slow.arrive_t - slow.start_t)
+            > 2.0 * (fast.arrive_t - fast.start_t))
+
+
+def test_decode_worker_lookup_suggests_nearest():
+    from types import SimpleNamespace
+
+    from repro.disagg import DisaggPool, DisaggSimulator, TransferQueue
+    pool = DisaggPool(
+        prefill_workers=[],
+        decode_workers=[SimpleNamespace(name="decode-0"),
+                        SimpleNamespace(name="decode-1")],
+        transfer=TransferQueue())
+    sim = DisaggSimulator(pool)
+    assert sim._decode_worker("decode-1").name == "decode-1"
+    with pytest.raises(KeyError, match="did you mean 'decode-0'"):
+        sim._decode_worker("decode0")
+
+
+@pytest.mark.slow
+def test_disagg_decode_crash_recovers_exactly_once():
+    """A decode worker dies mid-run: its in-flight generation state is
+    re-prefilled, dropped hand-offs are retransmitted, and every rid
+    still resolves exactly once (served or rejected-with-reason)."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.disagg import (DisaggSimulator, PhaseAwareRouter,
+                              build_disagg_fleet)
+    from repro.fleet import make_generate_scenario
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False)
+    params = tfm.init_lm(cfg, jax.random.PRNGKey(0))
+    sc = make_generate_scenario("prompt-burst", 10, seed=0,
+                                vocab=cfg.vocab, short_prompt=8,
+                                long_prompt=16, max_new=3)
+    pool = build_disagg_fleet(cfg, params, n_prefill=2, n_decode=2,
+                              n_slots=2, max_seq=64)
+    mid = sc.requests[len(sc.requests) // 2].arrival_s
+    plan = FaultPlan.scripted([
+        FaultEvent(t=mid, kind="crash", target="decode-0",
+                   duration_s=0.2),
+        FaultEvent(t=mid, kind="link-flap", duration_s=0.05),
+    ])
+    sim = DisaggSimulator(pool, router=PhaseAwareRouter(),
+                          injector=FaultInjector(plan),
+                          retry_policy=RetryPolicy())
+    rep = sim.run(sc.requests)
+    rids = [r["rid"] for r in rep.responses]
+    assert sorted(rids) == list(range(10))           # none hang
+    assert len(set(rids)) == len(rids)               # exactly once
+    served = [r for r in rep.responses if "rejected" not in r]
+    assert all(len(r["tokens"]) >= 1 for r in served)
+    assert rep.summary["n_served"] + rep.summary["n_rejected"] == 10
+    assert rep.summary["n_failures"] == 2    # crash + link-flap
+    assert rep.summary["n_retries"] + rep.summary["n_retransmits"] > 0
