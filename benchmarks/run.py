@@ -14,8 +14,8 @@ from benchmarks import (chaos_recovery, continuous_perf,
                         controller_dynamics, disagg_boundary,
                         fig3_throughput, fig4_tradeoff, fig5_landscape,
                         fleet_boundary, fleet_live, perf_variants,
-                        roofline, rule_ablation, table2_dual_path,
-                        table3_ablation)
+                        roofline, rule_ablation, spec_decode,
+                        table2_dual_path, table3_ablation)
 
 OUT = os.environ.get("BENCH_OUT", "results/benchmarks")
 
@@ -60,6 +60,11 @@ _BENCHES = [
     ("disagg_boundary", disagg_boundary,
      lambda c: (f"parity={c['token_parity']};"
                 f"wins_at={','.join(c['disagg_wins_at']) or 'none'}")),
+    ("spec_decode", spec_decode,
+     lambda c: (f"parity={c['token_parity_aligned']};"
+                f"accept={c['best_spec_acceptance']};"
+                f"j_saving={c['energy_saving_pct']}%;"
+                f"cold_backoff={c['controller_backed_off_cold']}")),
     ("chaos_recovery", chaos_recovery,
      lambda c: (f"in_deadline={c['crash_and_flap_in_deadline_frac']};"
                 f"once={c['all_served_once']};"

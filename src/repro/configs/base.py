@@ -49,6 +49,22 @@ class ModelConfig:
                                     # time; block 0 is the reserved
                                     # trash block)
 
+    # decode-time sampling defaults (engine-level; per-request
+    # SamplingParams override them).  temperature 0 = greedy — bitwise
+    # identical to the pre-sampling argmax path.  ``sample_top_k`` is
+    # named apart from the MoE router's ``top_k`` field below.
+    temperature: float = 0.0
+    sample_top_k: int = 0           # 0 = no top-k filter
+    sample_top_p: float = 1.0       # 1.0 = no nucleus filter
+    sampling_seed: int = 0          # base PRNG stream (fold rid, pos)
+
+    # self-speculative decoding: the draft model is the FIRST
+    # ``draft_layers`` layers of this same stack (shallow exit through
+    # the shared final norm + unembed).  0 disables drafting; the
+    # serving engine's ``draft_depth`` picks how many tokens the draft
+    # proposes per verify step.
+    draft_layers: int = 0
+
     # per-layer pattern for hybrids: tuple of block kinds, tiled over
     # n_layers.  Empty -> homogeneous (kind inferred from family).
     layer_pattern: Tuple[str, ...] = ()
@@ -110,6 +126,25 @@ class ModelConfig:
                 "paged KV pool only engages when kv_block_size > 0, "
                 "so this config would silently serve the contiguous "
                 "layout; set kv_block_size too")
+        if self.temperature < 0:
+            raise ValueError(
+                f"temperature must be >= 0 (0 = greedy), got "
+                f"{self.temperature}")
+        if self.sample_top_k < 0:
+            raise ValueError(
+                f"sample_top_k must be >= 0 (0 = off), got "
+                f"{self.sample_top_k}")
+        if not 0 < self.sample_top_p <= 1.0:
+            raise ValueError(
+                f"sample_top_p must be in (0, 1], got "
+                f"{self.sample_top_p}")
+        if self.draft_layers < 0 or (self.n_layers and
+                                     self.draft_layers >= self.n_layers):
+            raise ValueError(
+                f"draft_layers must be in [0, n_layers) — the draft is "
+                f"a strict shallow prefix of the stack; got "
+                f"draft_layers={self.draft_layers} with "
+                f"n_layers={self.n_layers}")
 
     # ---- derived ---------------------------------------------------------
     @property

@@ -76,6 +76,12 @@ class AdmissionController:
     # brownout hook (repro.faults): < 1 tightens the admission basin
     # under sustained failure pressure; 1.0 = no effect
     tau_scale: float = 1.0
+    # speculative-decode coupling: the engine mirrors its live draft
+    # depth (normalised to the compiled ceiling) here; gate_delta > 0
+    # folds it into the gate objective as a fourth J(x) term (deep
+    # drafts = cheap marginal tokens = a wider basin under rule 'le')
+    gate_delta: float = 0.0
+    draft_depth_norm: float = 0.0
 
     n_seen: int = field(default=0, init=False)
     n_admitted: int = field(default=0, init=False)
@@ -88,6 +94,14 @@ class AdmissionController:
         C = self.congestion.value()
         self.cost.observe(L, E, C)
         J = float(self.cost.J(L, E, C))
+        if self.gate_delta > 0.0:
+            # fourth objective term: the live speculative depth.  The
+            # engine keeps draft_depth_norm at live/compiled depth —
+            # 1.0 (deep drafts: high acceptance, cheap marginal
+            # tokens) pulls J DOWN via (1 - d_norm), widening the
+            # admission basin exactly when decode is running cheap
+            J = ((J + self.gate_delta * (1.0 - self.draft_depth_norm))
+                 / (1.0 + self.gate_delta))
         tau = self._scaled(float(self.threshold(t)))
         if not self.enabled:
             admit = True
@@ -171,6 +185,60 @@ class AdmissionController:
         API's admission stage); see ``repro.serving.api``."""
         from repro.serving.api import AdmissionMiddleware
         return AdmissionMiddleware(self)
+
+
+@dataclass
+class DraftDepthController:
+    """Energy-aware speculative-depth governor (closed-loop).
+
+    Picks the live draft depth ``d`` for the self-speculative decode
+    window by minimising MODELLED joules per emitted token:
+
+        cost(d)   = 1 + d * draft_cost / tau_scale
+        tokens(d) = 1 + p + p^2 + ... + p^d      (p = acceptance EWMA)
+        d*        = argmin_{1 <= d <= max_depth} cost(d) / tokens(d)
+
+    ``draft_cost`` is the shallow pass's relative price
+    (draft_layers / n_layers, the bandwidth-bound step model);
+    ``tau_scale`` is the brownout coupling the engine mirrors from the
+    admission controller — a shrunken basin (< 1) inflates the
+    perceived draft price, so sustained failure pressure collapses
+    depth toward 1 while a healthy fleet lets high acceptance widen
+    it.  Pure host-side arithmetic: the chosen depth feeds the window
+    as a traced operand, so moving it never recompiles."""
+    max_depth: int = 4
+    draft_cost: float = 0.25
+    alpha: float = 0.25              # acceptance EWMA smoothing
+    tau_scale: float = 1.0
+    acceptance: float = 0.5          # optimistic prior
+    n_proposed: int = field(default=0, init=False)
+    n_accepted: int = field(default=0, init=False)
+    history: list = field(default_factory=list, init=False)
+
+    def observe(self, accepted: int, proposed: int) -> None:
+        """Fold one window's draft outcomes into the acceptance EWMA."""
+        if proposed <= 0:
+            return
+        self.n_proposed += proposed
+        self.n_accepted += accepted
+        rate = accepted / proposed
+        self.acceptance += self.alpha * (rate - self.acceptance)
+        self.history.append((rate, self.acceptance))
+
+    def decide(self) -> int:
+        p = min(max(self.acceptance, 0.01), 0.99)
+        c = self.draft_cost / max(self.tau_scale, 1e-6)
+        best_d, best_j = 1, float("inf")
+        for d in range(1, max(self.max_depth, 1) + 1):
+            tokens = (1.0 - p ** (d + 1)) / (1.0 - p)
+            j = (1.0 + d * c) / tokens
+            if j < best_j:
+                best_d, best_j = d, j
+        return best_d
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.n_accepted / max(self.n_proposed, 1)
 
 
 def gate_batch(L: jnp.ndarray, tau: jnp.ndarray | float, *,

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
+from repro.serving import sampling
 from repro.serving.continuous import (ContinuousBatchingEngine,
                                       DecodeSession, GenRequest, _bucket)
 
@@ -88,10 +89,16 @@ class PrefillEngine:
             return fn
         cfg = self.cfg
 
-        def prefill1(params, tokens):
+        def prefill1(params, tokens, skey, temp, topk, topp):
             rows = tfm.init_cache(cfg, 1, rlen, layout="contiguous")
             logits, rows = tfm.prefill(cfg, params, tokens, rows)
-            first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            # same rule as the pooled prefill jits: the first token
+            # lands at absolute position plen, sampled under the
+            # request's position-folded key (T=0 = argmax, bitwise)
+            keys = sampling.step_keys(
+                skey, jnp.full((1,), plen, jnp.int32))
+            first = sampling.sample_token(keys, logits[:, -1], temp,
+                                          topk, topp)
             return rows, first
 
         fn = jax.jit(prefill1)
@@ -123,15 +130,29 @@ class PrefillEngine:
         self._kv_bytes[plen] = n
         return n
 
+    def default_sampling(self) -> sampling.SamplingParams:
+        return sampling.SamplingParams(
+            temperature=self.cfg.temperature,
+            top_k=self.cfg.sample_top_k,
+            top_p=self.cfg.sample_top_p,
+            seed=self.cfg.sampling_seed)
+
     def prefill(self, r: GenRequest, *,
                 prompt_len: int | None = None) -> PrefillResult:
         plen = self.pad_len(len(r.prompt), prompt_len)
         toks = np.zeros((1, plen), np.int32)
         p = np.asarray(r.prompt[:plen], np.int32)
         toks[0, :len(p)] = p
+        sp = (r.sampling if r.sampling is not None
+              else self.default_sampling())
+        skey = sampling.request_key(sp.seed, r.rid)[None]
         fn = self._prefill1(plen)
         t0 = time.perf_counter()
-        rows, first = fn(self.params, jnp.asarray(toks))
+        rows, first = fn(
+            self.params, jnp.asarray(toks), jnp.asarray(skey),
+            jnp.asarray(np.array([sp.temperature], np.float32)),
+            jnp.asarray(np.array([sp.top_k], np.int32)),
+            jnp.asarray(np.array([sp.top_p], np.float32)))
         first_h = int(np.asarray(jax.block_until_ready(first))[0])
         self.device_s += time.perf_counter() - t0
         self.prefill_calls += 1
@@ -154,10 +175,12 @@ class DisaggEngine:
     @classmethod
     def build(cls, cfg: ModelConfig, params: dict, *,
               n_slots: int = 4, max_seq: int = 64,
-              sync_every: int = 8) -> "DisaggEngine":
+              sync_every: int = 8,
+              draft_depth: int = 0) -> "DisaggEngine":
         decode = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
                                           max_seq=max_seq,
-                                          sync_every=sync_every)
+                                          sync_every=sync_every,
+                                          draft_depth=draft_depth)
         return cls(decode=decode,
                    prefill_engine=PrefillEngine(cfg, params,
                                                 max_seq=max_seq))

@@ -290,18 +290,22 @@ def build_disagg_fleet(cfg, params, *, n_prefill: int = 1,
                        n_decode: int = 1, n_slots: int = 4,
                        max_seq: int = 64, sync_every: int = 8,
                        gbps: float = 16.0,
+                       draft_depth: int = 0,
                        energy_model: EnergyModel | None = None
                        ) -> DisaggPool:
     """N prefill + M decode workers over ONE weight copy each way.
 
     Workers share the phase engines' jit caches (first worker warms
     them, the rest reuse), so fleet size scales device lines and
-    sessions, not compiles or parameter memory."""
+    sessions, not compiles or parameter memory.  ``draft_depth > 0``
+    compiles the decode workers' self-speculative window (needs
+    ``cfg.draft_layers``; contiguous KV only)."""
     em = energy_model or EnergyModel()
     pe = PrefillEngine(cfg, params, max_seq=max_seq)
     de = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
                                   max_seq=max_seq,
-                                  sync_every=sync_every)
+                                  sync_every=sync_every,
+                                  draft_depth=draft_depth)
     prefill = [PrefillWorker(f"prefill-{i}", pe, energy_model=em)
                for i in range(n_prefill)]
     decode = [DecodeWorker(f"decode-{i}", de, energy_model=em)
@@ -398,6 +402,18 @@ class DisaggSimulator:
                     tau, **lab)
                 metrics.gauge("fleet_admission_rate",
                               "fraction admitted").set(admit, **lab)
+                sess = getattr(w, "session", None)
+                if (sess is not None
+                        and getattr(sess.engine, "draft_depth", 0) > 0):
+                    st = sess.stats()
+                    metrics.gauge(
+                        "decode_acceptance_rate",
+                        "speculative draft acceptance rate").set(
+                        float(st.get("acceptance_rate", 0.0)), **lab)
+                    metrics.gauge(
+                        "decode_draft_depth",
+                        "live speculative draft depth").set(
+                        float(st.get("draft_depth_live", 0)), **lab)
         metrics.gauge("fleet_pressure").set(
             self.pool.transfer.pressure(now),
             replica="link", phase="transfer")

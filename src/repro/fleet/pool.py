@@ -330,6 +330,16 @@ class FleetSimulator:
                           "admission threshold τ(t)").set(tau, **lab)
             metrics.gauge("fleet_admission_rate",
                           "fraction admitted").set(admit, **lab)
+            sess = getattr(r.server.engine, "_session", None)
+            if (sess is not None
+                    and getattr(sess.engine, "draft_depth", 0) > 0):
+                st = sess.stats()
+                metrics.gauge("decode_acceptance_rate",
+                              "speculative draft acceptance rate").set(
+                    float(st.get("acceptance_rate", 0.0)), **lab)
+                metrics.gauge("decode_draft_depth",
+                              "live speculative draft depth").set(
+                    float(st.get("draft_depth_live", 0)), **lab)
         metrics.gauge("fleet_energy_j", "fleet modelled joules").set(
             self.pool.energy_j())
         if self.brownout is not None:

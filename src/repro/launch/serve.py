@@ -340,6 +340,7 @@ def serve_disagg(args) -> dict:
         remat=False, attn_impl=args.attn_impl,
         kv_block_size=args.kv_block_size,
         kv_pool_blocks=args.kv_pool_blocks)
+    cfg = _apply_sampling_cfg(cfg, args)
     params = tfm.init_lm(cfg, jax.random.PRNGKey(args.seed))
     scenario = make_generate_scenario(args.scenario, args.requests,
                                       qps=args.qps, seed=args.seed,
@@ -347,7 +348,8 @@ def serve_disagg(args) -> dict:
     pool = build_disagg_fleet(cfg, params,
                               n_prefill=args.prefill_workers,
                               n_decode=args.decode_workers,
-                              n_slots=args.slots, max_seq=64)
+                              n_slots=args.slots, max_seq=64,
+                              draft_depth=args.draft_depth)
     tracer, metrics, audit = make_observability(args)
     sim = DisaggSimulator(
         pool, router=PhaseAwareRouter(),
@@ -382,14 +384,36 @@ def serve_disagg(args) -> dict:
     return out
 
 
+def _sampling_cfg_fields(args) -> dict:
+    """cfg.replace(...) kwargs for the sampling/speculation flags —
+    shared by the pooled and disaggregated generate paths."""
+    draft_layers = args.draft_layers
+    if args.draft_depth > 0 and draft_layers == 0:
+        # auto: the deepest shallow-exit prefix the stack allows
+        draft_layers = -1          # resolved per-arch below
+    return dict(temperature=args.temperature,
+                sample_top_k=args.top_k,
+                sample_top_p=args.top_p,
+                draft_layers=draft_layers)
+
+
+def _apply_sampling_cfg(cfg, args):
+    fields = _sampling_cfg_fields(args)
+    if fields["draft_layers"] == -1:
+        fields["draft_layers"] = max(cfg.n_layers - 1, 1)
+    return cfg.replace(**fields)
+
+
 def serve_generate(args) -> dict:
     cfg = get_smoke_config(args.arch).replace(
         attn_impl=args.attn_impl,
         kv_block_size=args.kv_block_size,
         kv_pool_blocks=args.kv_pool_blocks)
+    cfg = _apply_sampling_cfg(cfg, args)
     params = tfm.init_lm(cfg, jax.random.PRNGKey(args.seed))
     engine = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
-                                     max_seq=128)
+                                     max_seq=128,
+                                     draft_depth=args.draft_depth)
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab,
                            size=(args.requests, 16)).astype(np.int32)
@@ -419,12 +443,18 @@ def serve_generate(args) -> dict:
     for r in reversed(responses):
         if "decode_steps" in r.telemetry:
             decode_stats = {k: r.telemetry[k]
-                            for k in ("decode_steps", "occupancy")}
+                            for k in ("decode_steps", "occupancy",
+                                      "acceptance_rate",
+                                      "accepted_per_step",
+                                      "energy_per_token_model",
+                                      "draft_depth_live")
+                            if k in r.telemetry}
             break
     summary.update(
         arch=args.arch, path="continuous-decode",
         controller=args.controller, attn_impl=args.attn_impl,
         kv_block_size=args.kv_block_size,
+        temperature=args.temperature, draft_depth=args.draft_depth,
         tokens_generated=sum(len(r.output) for r in responses),
         sample=(responses[0].output[:8] if responses else []),
         **decode_stats)
@@ -472,6 +502,24 @@ def main():
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
                     help="generate mode: physical blocks in the paged "
                          "pool (0 = capacity parity with contiguous)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="generate mode: sampling temperature (0 = "
+                         "greedy argmax, byte-identical to the default "
+                         "path)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="generate mode: keep only the k highest "
+                         "logits before sampling (0 = no cap)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="generate mode: nucleus sampling mass "
+                         "(1.0 = no cap)")
+    ap.add_argument("--draft-depth", type=int, default=0,
+                    help="generate mode: self-speculative decode — "
+                         "draft up to this many tokens per step with "
+                         "the shallow prefix, verify in one chunked "
+                         "full pass (0 = off; contiguous KV only)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="layers in the shallow-exit draft prefix "
+                         "(0 = auto n_layers-1 when --draft-depth>0)")
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--window", type=float, default=0.01)
     ap.add_argument("--region", default="world_avg")

@@ -417,6 +417,47 @@ def paged_decode_attend_kernel(q: jax.Array, cache: KVCache,
     return o[:, None]
 
 
+def cache_write_chunk(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                      start: jax.Array) -> KVCache:
+    """Write S tokens per row at per-row absolute ``start`` positions
+    WITHOUT ring wrap-around (the speculative verify write).
+
+    Unlike :func:`cache_write`, rows past the cache extent are CLAMPED
+    onto the last row instead of wrapping modulo C — a draft chunk
+    issued near the ``max_seq`` stop must never overwrite a slot's
+    early prompt rows.  The spill row's ``pos`` entry lands >= C-1,
+    and the engine's emission guard keeps every query position < C-1,
+    so the spill is never attended."""
+    B, C, K, hd = cache.k.shape
+    S = k_new.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    posm = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]  # [B,S]
+    idx = jnp.minimum(posm, C - 1)
+    b = jnp.arange(B, dtype=jnp.int32)[:, None]
+    k = cache.k.at[b, idx].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[b, idx].set(v_new.astype(cache.v.dtype))
+    pos = cache.pos.at[b, idx].set(posm)
+    return KVCache(k=k, v=v, pos=pos, length=jnp.max(posm) + 1)
+
+
+def chunk_attend(q: jax.Array, cache: KVCache, *, qpos: jax.Array,
+                 window: int = 0, scale: float | None = None) -> jax.Array:
+    """Multi-token decode attention (the speculative verify step).
+
+    q: [B, S, H, hd] with per-query absolute positions ``qpos``
+    [B, S]; the validity rule is exactly :func:`decode_attend`'s
+    (k_pos >= 0 and k_pos <= q_pos, windowed if asked), applied per
+    query row — at S == 1 this degenerates to ``decode_attend``."""
+    qpos = jnp.asarray(qpos, jnp.int32)
+    k_pos = cache.pos[:, None, :]            # [B,1,C]
+    valid = (k_pos >= 0) & (k_pos <= qpos[..., None])
+    if window:
+        valid = valid & (qpos[..., None] - k_pos < window)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias[:, None, None]               # [B,1,1,S,C] vs [B,K,G,S,C]
+    return attend(q, cache.k, cache.v, bias, scale)
+
+
 def decode_attend(q: jax.Array, cache: KVCache, *, pos: jax.Array,
                   window: int = 0, scale: float | None = None) -> jax.Array:
     """One-token attention against the cache.

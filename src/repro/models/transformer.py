@@ -309,6 +309,25 @@ def _attn_mix(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
     # decode: x [B,1,D]; pos scalar (lockstep) or [B] (continuous)
     q, k, v = attn.project_qkv(p, x, cfg.n_heads, cfg.n_kv_heads,
                                cfg.head_dim)
+    S = x.shape[1]
+    if S > 1:
+        # chunked decode (speculative verify): S tokens per row, each
+        # row starting at its own absolute position.  Contiguous-only
+        # — the paged pool's one-row-per-step write cannot express a
+        # multi-token scatter, so paged engines serve draft_depth == 0.
+        if block_table is not None:
+            raise ValueError(
+                "chunked decode (speculative verify) supports the "
+                "contiguous KV layout only; run the paged pool with "
+                "draft_depth == 0")
+        starts = jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
+                                  (x.shape[0],))
+        posm = starts[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        q = nn.apply_rope(q, posm, cfg.rope_theta, rotary_dim=rd)
+        k = nn.apply_rope(k, posm, cfg.rope_theta, rotary_dim=rd)
+        kv = attn.cache_write_chunk(lc.kv, k, v, starts)
+        o = attn.chunk_attend(q, kv, qpos=posm, window=window)
+        return attn.out_proj(p, o), LayerCache(kv=kv, rec=lc.rec)
     posv = jnp.asarray(pos, jnp.int32)
     posv = posv[None] if posv.ndim == 0 else posv[:, None]
     q = nn.apply_rope(q, posv, cfg.rope_theta, rotary_dim=rd)
@@ -607,3 +626,57 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
     length = (jnp.max(pos_arr) if pos_arr.ndim else pos_arr) + 1
     return logits, Cache(layers=new_layers, cross=cache.cross,
                          length=length, block_table=cache.block_table)
+
+
+def decode_chunk(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 cache: Cache, pos):
+    """Multi-token decode: the speculative-verify primitive.
+
+    ``tokens`` [B, n] are consumed at per-row absolute positions
+    ``pos[b] .. pos[b]+n-1`` in ONE forward pass with causal intra-chunk
+    attention; returns (logits [B, n, V], new cache).  Row j's logits
+    condition on everything a sequential ``decode_step`` at position
+    ``pos+j`` would see, so sampling from them reproduces the
+    non-speculative stream exactly.  Contiguous homogeneous attention
+    stacks only — paged / MLA / recurrent / enc-dec engines serve
+    ``draft_depth == 0``.
+    """
+    kinds = set(cfg.block_kinds)
+    if not kinds <= {"attn", "local_attn"} or cfg.family == "encdec":
+        raise ValueError(
+            f"decode_chunk needs a pure attention stack (attn / "
+            f"local_attn); got kinds={sorted(kinds)} family={cfg.family}")
+    if cache.block_table is not None:
+        raise ValueError(
+            "decode_chunk supports the contiguous KV layout only; run "
+            "the paged pool with draft_depth == 0")
+    h = embed(cfg, params, tokens)
+    h, new_layers, _ = _run_stack(cfg, params, h, mode="decode",
+                                  cache_layers=cache.layers, pos=pos,
+                                  cross=cache.cross, block_table=None)
+    logits = unembed(cfg, params, h)
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    length = (jnp.max(pos_arr) if pos_arr.ndim else pos_arr) \
+        + tokens.shape[1]
+    return logits, Cache(layers=new_layers, cross=cache.cross,
+                         length=length, block_table=None)
+
+
+def draft_prefix(cfg: ModelConfig, params: dict, n: int) -> dict:
+    """Self-speculative draft params: the FIRST ``n`` layers of a
+    homogeneous stack, sharing embeddings / final norm / unembed with
+    the full model (shallow exit).  ``_run_stack`` takes its scan
+    length from the stacked leaves, so the sliced dict runs under the
+    SAME cfg."""
+    if not cfg.homogeneous:
+        raise ValueError(
+            "self-speculative drafting slices a layer prefix, which "
+            "needs a homogeneous stack")
+    if not 0 < n < cfg.n_layers:
+        raise ValueError(
+            f"draft prefix must satisfy 0 < n < n_layers, got n={n} "
+            f"with n_layers={cfg.n_layers}")
+    out = dict(params)
+    out["layers"] = jax.tree_util.tree_map(lambda x: x[:n],
+                                           params["layers"])
+    return out

@@ -393,7 +393,8 @@ class ContinuousEngineAdapter:
                         entropy_hint=(0.5 if hint is None
                                       else float(hint)),
                         arrival_t=float(req.arrival_s),
-                        eos_id=meta.get("eos_id"))
+                        eos_id=meta.get("eos_id"),
+                        sampling=getattr(req, "sampling", None))
         self._by_rid[req.rid] = req
         self._ensure_session().push(gr)
         return []

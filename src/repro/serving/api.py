@@ -84,6 +84,8 @@ class InferRequest(Request):
     entropy_hint: float | None = None  # L(x) proxy known at enqueue time
     metadata: dict = field(default_factory=dict)
     deadline_s: float | None = None    # relative deadline; None = none
+    sampling: Any = None               # SamplingParams (kind=generate);
+                                       # None = engine default (greedy)
 
 
 def request_expiry(req) -> float:

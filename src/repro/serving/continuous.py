@@ -54,8 +54,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.controller import AdmissionController
+from repro.core.controller import AdmissionController, DraftDepthController
 from repro.models import transformer as tfm
+from repro.serving import sampling
+from repro.serving.sampling import SamplingParams
 
 
 @dataclass
@@ -66,6 +68,7 @@ class GenRequest:
     entropy_hint: float = 0.5        # L(x) proxy at enqueue time
     arrival_t: float | None = None   # admission clock (workload arrival_s)
     eos_id: int | None = None        # stop after emitting this token
+    sampling: SamplingParams | None = None   # None = engine default
 
     generated: list = field(default_factory=list)
     done: bool = False
@@ -313,6 +316,14 @@ class ContinuousBatchingEngine:
     controller: AdmissionController | None = None
     sync_every: int = 8              # fused micro-steps per host sync
     donate: bool = True              # donate pool buffers into the jit
+    # self-speculative decoding: > 0 compiles the window's macro-step
+    # variant — each step drafts ``draft_depth`` tokens through the
+    # first ``cfg.draft_layers`` layers, then ONE full-model chunk pass
+    # verifies them.  The compiled depth is the CEILING; the live depth
+    # (``depth_cap``, a traced operand) is the energy lever the
+    # spec_controller moves with zero retrace.
+    draft_depth: int = 0
+    spec_controller: DraftDepthController | None = None
 
     _decode: Callable = field(init=False, repr=False)
     _prefill1: Callable = field(init=False, repr=False)
@@ -325,6 +336,32 @@ class ContinuousBatchingEngine:
         max_seq = self.max_seq
         k = max(int(self.sync_every), 1)
         self.sync_every = k
+        if self.draft_depth < 0:
+            raise ValueError(
+                f"draft_depth must be >= 0, got {self.draft_depth}")
+        if self.draft_depth > 0:
+            if cfg.paged_kv:
+                raise ValueError(
+                    "self-speculative decoding serves the contiguous "
+                    "KV layout only (the verify chunk is a multi-row "
+                    "scatter the paged pool cannot express); set "
+                    "draft_depth=0 for paged engines")
+            if cfg.draft_layers <= 0:
+                raise ValueError(
+                    "draft_depth > 0 needs cfg.draft_layers in "
+                    "[1, n_layers) — the draft is a shallow prefix of "
+                    "the same stack")
+            kinds = set(cfg.block_kinds)
+            if not kinds <= {"attn", "local_attn"} \
+                    or cfg.family == "encdec":
+                raise ValueError(
+                    f"self-speculative decoding needs a pure attention "
+                    f"stack; got kinds={sorted(kinds)} "
+                    f"family={cfg.family}")
+            if self.spec_controller is None:
+                self.spec_controller = DraftDepthController(
+                    max_depth=self.draft_depth,
+                    draft_cost=cfg.draft_layers / cfg.n_layers)
         # slot-scatter axes serve the CONTIGUOUS layout only (legacy
         # splice + fused slot_write); the paged pool has its own
         # block-granular scatter, so derive them from the contiguous
@@ -348,38 +385,141 @@ class ContinuousBatchingEngine:
         self._decode = decode
         self._prefill1 = prefill1
 
-        # fused k-step window: argmax, emission masks, EOS/max-new
+        # fused k-step window: sampling, emission masks, EOS/max-new
         # done-masks and position bookkeeping all stay on device; ONE
         # host sync per window.  The pool is donated so the KV cache
         # updates in place across the whole window.  ``eos`` [B] is
-        # the per-slot stop token (-1 = none; argmax is >= 0 so it
-        # never matches).
+        # the per-slot stop token (-1 = none; token ids are >= 0 so it
+        # never matches).  The per-slot PRNG key rides the scan carry:
+        # the token written at absolute position q is sampled with
+        # ``fold_in(slot_key, q)``, so the stream depends only on
+        # (seed, rid, position) — never on window boundaries, refill
+        # timing, or (speculative) HOW the engine reached q.
+        # temp/topk/topp are traced VALUES: changing them never
+        # retraces the window.
         self._decode_traces = 0
 
-        def step_k(params, pool, cur_tok, pos, active, remaining, eos):
+        def step_k(params, pool, cur_tok, pos, active, remaining, eos,
+                   skey, temp, topk, topp):
             self._decode_traces += 1         # trace-time side effect:
                                              # counts (re)compiles
             def body(carry, _):
-                pool, tok, pos, act, rem = carry
+                pool, tok, pos, act, rem, keyc = carry
                 logits, pool = tfm.decode_step(cfg, params, tok, pool,
                                                pos)
-                nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+                keys = sampling.step_keys(keyc, pos + 1)
+                nxt = sampling.sample_token(keys, logits[:, 0], temp,
+                                            topk, topp)
                 new_pos = jnp.where(act, pos + 1, pos)
                 new_rem = jnp.where(act, rem - 1, rem)
                 alive = (act & (new_rem > 0) & (new_pos < max_seq - 1)
                          & (nxt != eos))
                 new_tok = jnp.where(act, nxt, tok[:, 0])[:, None]
-                return (pool, new_tok, new_pos, alive, new_rem), (nxt,
-                                                                  act)
+                return (pool, new_tok, new_pos, alive, new_rem,
+                        keyc), (nxt, act)
 
-            carry = (pool, cur_tok, pos, active, remaining)
+            carry = (pool, cur_tok, pos, active, remaining, skey)
             carry, (toks, emitted) = jax.lax.scan(body, carry, None,
                                                   length=k)
-            pool, cur_tok, pos, active, remaining = carry
+            pool, cur_tok, pos, active, remaining, _ = carry
+            return pool, cur_tok, pos, active, remaining, toks, emitted
+
+        # self-speculative macro-step window: each of the k macro-steps
+        # drafts D tokens through the first ``draft_layers`` layers
+        # (scratch-sliced cache, discarded), then ONE full-model chunk
+        # pass verifies [tok, t_1..t_D] and emits the longest accepted
+        # prefix PLUS the full model's own next token — every emitted
+        # token is the FULL model's sample under the same
+        # position-folded key, so the stream byte-matches the
+        # non-speculative path by construction.  ``depth_cap`` (traced)
+        # caps accepted drafts per macro-step: the controller collapses
+        # or widens the live depth with zero retrace.
+        D = self.draft_depth
+        dl = cfg.draft_layers
+
+        def step_k_spec(params, pool, cur_tok, pos, active, remaining,
+                        eos, skey, temp, topk, topp, depth_cap):
+            self._decode_traces += 1
+            dparams = dict(params)
+            dparams["layers"] = jax.tree_util.tree_map(
+                lambda x: x[:dl], params["layers"])
+            n = D + 1
+
+            def body(carry, _):
+                pool, tok, pos, act, rem, keyc = carry
+                B = tok.shape[0]
+                # draft: D shallow steps on a sliced scratch cache.
+                # The slice is a functional copy — verify rewrites the
+                # REAL pool's rows (all layers) for every fed position.
+                dcache = tfm.Cache(
+                    layers=jax.tree_util.tree_map(lambda x: x[:dl],
+                                                  pool.layers),
+                    cross=pool.cross, length=pool.length,
+                    block_table=None)
+
+                def draft_body(dc, _):
+                    dcache, dtok, dpos = dc
+                    lg, dcache = tfm.decode_step(cfg, dparams, dtok,
+                                                 dcache, dpos)
+                    keys = sampling.step_keys(keyc, dpos + 1)
+                    t = sampling.sample_token(keys, lg[:, 0], temp,
+                                              topk, topp)
+                    return (dcache, t[:, None], dpos + 1), t
+
+                _, drafts = jax.lax.scan(
+                    draft_body, (dcache, tok, pos), None, length=D)
+                # drafts [D, B]: proposals for positions pos+1..pos+D
+                chunk = jnp.concatenate([tok, drafts.T], axis=1)
+                logits, pool = tfm.decode_chunk(cfg, params, chunk,
+                                                pool, pos)
+                # full-model samples at positions pos+1..pos+D+1 — the
+                # SAME keys sequential decode would fold, flattened to
+                # one [B*(D+1)] sample_token call (row-independent)
+                posm = (pos[:, None] + 1
+                        + jnp.arange(n, dtype=jnp.int32)[None])
+                keys = sampling.step_keys(
+                    jnp.repeat(keyc, n, axis=0), posm.reshape(-1))
+                full = sampling.sample_token(
+                    keys, logits.reshape(B * n, -1),
+                    jnp.repeat(temp, n), jnp.repeat(topk, n),
+                    jnp.repeat(topp, n)).reshape(B, n)
+                # fold acceptance into the done-mask machinery:
+                # emission j is live while every draft before it
+                # matched the full model (and j <= depth_cap); retire
+                # flags (EOS / budget / seq-end) cut the chain exactly
+                # as the per-step window would
+                tokc, posc, remc, actc = tok[:, 0], pos, rem, act
+                ok = jnp.ones_like(act)
+                toks_j, emit_j = [], []
+                for j in range(n):
+                    cand = full[:, j]
+                    if j:
+                        ok = (ok & (drafts[j - 1] == full[:, j - 1])
+                              & (j <= depth_cap))
+                    emit = actc & ok
+                    new_pos = jnp.where(emit, posc + 1, posc)
+                    new_rem = jnp.where(emit, remc - 1, remc)
+                    retire = emit & ((new_rem <= 0)
+                                     | (new_pos >= max_seq - 1)
+                                     | (cand == eos))
+                    tokc = jnp.where(emit, cand, tokc)
+                    posc, remc = new_pos, new_rem
+                    actc = actc & ~retire
+                    toks_j.append(cand)
+                    emit_j.append(emit)
+                return (pool, tokc[:, None], posc, actc, remc,
+                        keyc), (jnp.stack(toks_j), jnp.stack(emit_j))
+
+            carry = (pool, cur_tok, pos, active, remaining, skey)
+            carry, (toks, emitted) = jax.lax.scan(body, carry, None,
+                                                  length=k)
+            pool, cur_tok, pos, active, remaining, _ = carry
+            # toks/emitted [k, D+1, B] — chronological when flattened
             return pool, cur_tok, pos, active, remaining, toks, emitted
 
         self._step_k = jax.jit(
-            step_k, donate_argnums=(1,) if self.donate else ())
+            step_k_spec if D > 0 else step_k,
+            donate_argnums=(1,) if self.donate else ())
 
     # -- jit caches ---------------------------------------------------------
     @property
@@ -389,6 +529,34 @@ class ContinuousBatchingEngine:
         Counted by a trace-time side effect in the window body, so it
         needs no private JAX API."""
         return self._decode_traces
+
+    # -- sampling / speculation ---------------------------------------------
+    @property
+    def default_sampling(self) -> SamplingParams:
+        """Engine-level sampling defaults (from the model config);
+        a request's own ``SamplingParams`` override them."""
+        return SamplingParams(temperature=self.cfg.temperature,
+                              top_k=self.cfg.sample_top_k,
+                              top_p=self.cfg.sample_top_p,
+                              seed=self.cfg.sampling_seed)
+
+    def current_depth(self) -> int:
+        """Live speculative depth for the next window: the
+        spec_controller's energy-aware choice, clamped into
+        [1, draft_depth] (the compiled ceiling)."""
+        if self.draft_depth <= 0:
+            return 0
+        if self.spec_controller is None:
+            return self.draft_depth
+        if self.controller is not None:
+            # brownout / admission pressure couples in: a shrunken
+            # admission basin inflates the perceived draft cost
+            self.spec_controller.tau_scale = self.controller.tau_scale
+        d = self.spec_controller.decide()
+        d = max(1, min(int(d), self.draft_depth))
+        if self.controller is not None:
+            self.controller.draft_depth_norm = d / self.draft_depth
+        return d
 
     def _prefill_bucket(self, nb: int, plen: int) -> Callable:
         """Batched prefill for bucket size ``nb`` at prompt length
@@ -402,10 +570,16 @@ class ContinuousBatchingEngine:
         cfg, max_seq, axes = self.cfg, self.max_seq, self._axes
 
         def prefill_b(params, tokens, pool, slot_idx, cur_tok, pos,
-                      active, remaining, rem_new, eos, eos_new):
+                      active, remaining, rem_new, eos, eos_new,
+                      skey_new, temp_new, topk_new, topp_new):
             rows = tfm.init_cache(cfg, nb, max_seq)
             logits, rows = tfm.prefill(cfg, params, tokens, rows)
-            first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            # the first token lands at absolute position plen — the
+            # same (request key, position) fold decode will continue
+            keys = sampling.step_keys(
+                skey_new, jnp.full((nb,), plen, jnp.int32))
+            first = sampling.sample_token(keys, logits[:, -1],
+                                          temp_new, topk_new, topp_new)
             pool = slot_write(pool, rows, slot_idx, axes)
             cur_tok = cur_tok.at[slot_idx, 0].set(first, mode="drop")
             pos = pos.at[slot_idx].set(
@@ -441,11 +615,14 @@ class ContinuousBatchingEngine:
 
         def prefill_p(params, tokens, pool, slot_idx, table_rows,
                       cur_tok, pos, active, remaining, rem_new, eos,
-                      eos_new):
+                      eos_new, skey_new, temp_new, topk_new, topp_new):
             rows = tfm.init_cache(cfg, nb, row_len,
                                   layout="contiguous")
             logits, rows = tfm.prefill(cfg, params, tokens, rows)
-            first = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            keys = sampling.step_keys(
+                skey_new, jnp.full((nb,), plen, jnp.int32))
+            first = sampling.sample_token(keys, logits[:, -1],
+                                          temp_new, topk_new, topp_new)
             pool = paged_slot_write(pool, rows, slot_idx, table_rows,
                                     block_size=cfg_bs,
                                     n_pref_blocks=npb)
@@ -605,10 +782,18 @@ class ContinuousBatchingEngine:
         pos = np.zeros(B, np.int32)
         cur_tok = np.zeros((B, 1), np.int32)
         active = np.zeros(B, bool)
+        skey_h = np.zeros((B, 2), np.uint32)
+        temp_h = np.zeros(B, np.float32)
+        topk_h = np.zeros(B, np.int32)
+        topp_h = np.ones(B, np.float32)
         steps = 0
         occupied_slot_steps = 0
         prefills = 0
         device_s = 0.0
+
+        def sampling_of(r):
+            return (r.sampling if r.sampling is not None
+                    else self.default_sampling)
 
         def refill():
             nonlocal pool, prefills, device_s
@@ -633,7 +818,22 @@ class ContinuousBatchingEngine:
                 # pool
                 pool = (row_cache if B == 1
                         else _splice(pool, row_cache, s))
-                first = int(jnp.argmax(logits[0, -1]))
+                sp = sampling_of(r)
+                rkey = sampling.request_key(sp.seed, r.rid)
+                first = int(np.asarray(sampling.sample_token(
+                    sampling.step_keys(
+                        jnp.asarray(rkey[None]),
+                        jnp.asarray(np.array([plen], np.int32))),
+                    logits[:, -1],
+                    jnp.asarray(np.array([sp.temperature],
+                                         np.float32)),
+                    jnp.asarray(np.array([sp.top_k], np.int32)),
+                    jnp.asarray(np.array([sp.top_p],
+                                         np.float32))))[0])
+                skey_h[s] = rkey
+                temp_h[s] = sp.temperature
+                topk_h[s] = sp.top_k
+                topp_h[s] = sp.top_p
                 r.generated.append(first)
                 if r.eos_id is not None and first == r.eos_id:
                     r.done = True        # EOS at prefill: slot stays
@@ -654,8 +854,11 @@ class ContinuousBatchingEngine:
                 self._decode(self.params, jnp.asarray(cur_tok), pool,
                              jnp.asarray(pos)))
             device_s += time.perf_counter() - t0
-            nxt = np.asarray(jnp.argmax(logits[:, 0], -1),
-                             np.int32)
+            nxt = np.asarray(sampling.sample_token(
+                sampling.step_keys(jnp.asarray(skey_h),
+                                   jnp.asarray(pos) + 1),
+                logits[:, 0], jnp.asarray(temp_h),
+                jnp.asarray(topk_h), jnp.asarray(topp_h)), np.int32)
             for s in range(B):
                 if not active[s]:
                     continue
@@ -711,6 +914,14 @@ class DecodeSession:
         self._active = jnp.zeros((B,), bool)
         self._remaining = jnp.zeros((B,), jnp.int32)
         self._eos = jnp.full((B,), -1, jnp.int32)
+        # per-slot sampling state (host mirror; device sees it as
+        # traced operands each window).  Keys derive from the REQUEST
+        # id at seat time — never the slot index — so a reused slot
+        # can never replay its previous occupant's stream.
+        self._skey_h = np.zeros((B, 2), np.uint32)
+        self._temp_h = np.zeros(B, np.float32)
+        self._topk_h = np.zeros(B, np.int32)
+        self._topp_h = np.ones(B, np.float32)
         self._active_host = np.zeros(B, bool)
         self._prefill_done: list[GenRequest] = []
         # disaggregated hand-off: externally prefilled rows waiting
@@ -735,6 +946,11 @@ class DecodeSession:
         self.blocks_allocated = 0
         self.blocks_freed = 0
         self.peak_blocks_in_use = 0
+        # speculative decode telemetry
+        self.spec_proposed = 0       # drafted tokens offered to verify
+        self.spec_accepted = 0       # drafts the full model confirmed
+        self.spec_draft_slot_steps = 0   # shallow passes (energy model)
+        self.last_depth = engine.draft_depth
 
     # -- state --------------------------------------------------------------
     @property
@@ -752,6 +968,35 @@ class DecodeSession:
 
     def push(self, r: GenRequest) -> None:
         self.queue.append(r)
+
+    # -- sampling -----------------------------------------------------------
+    def _sampling_of(self, r: GenRequest) -> SamplingParams:
+        return (r.sampling if r.sampling is not None
+                else self.engine.default_sampling)
+
+    def _seat_sampling(self, s: int, r: GenRequest) -> None:
+        """Mirror one request's sampling state into its slot row."""
+        sp = self._sampling_of(r)
+        self._skey_h[s] = sampling.request_key(sp.seed, r.rid)
+        self._temp_h[s] = sp.temperature
+        self._topk_h[s] = sp.top_k
+        self._topp_h[s] = sp.top_p
+
+    def _sampling_rows(self, reqs, nb: int):
+        """Per-row sampling operands for one prefill wave (pad rows
+        beyond ``len(reqs)`` stay greedy/zero-key — their slot index is
+        OOB so every write is dropped anyway)."""
+        skey = np.zeros((nb, 2), np.uint32)
+        temp = np.zeros(nb, np.float32)
+        topk = np.zeros(nb, np.int32)
+        topp = np.ones(nb, np.float32)
+        for j, r in enumerate(reqs):
+            sp = self._sampling_of(r)
+            skey[j] = sampling.request_key(sp.seed, r.rid)
+            temp[j] = sp.temperature
+            topk[j] = sp.top_k
+            topp[j] = sp.top_p
+        return skey, temp, topk, topp
 
     # -- disaggregated insert -----------------------------------------------
     def insert_prefilled(self, r: GenRequest, rows, first: int,
@@ -843,6 +1088,7 @@ class DecodeSession:
             self.insert_calls += 1
             r.generated.append(int(first))
             r.slot = s
+            self._seat_sampling(s, r)
             self.slots[s] = r
             self._active_host[s] = True
 
@@ -871,6 +1117,8 @@ class DecodeSession:
         slot_idx = np.full((nb,), B, np.int32)   # OOB pad rows: dropped
         rem_new = np.ones((nb,), np.int32)
         eos_new = np.full((nb,), -1, np.int32)
+        skey_new, temp_new, topk_new, topp_new = \
+            self._sampling_rows(reqs, nb)
         for j, r in enumerate(reqs):
             p = np.asarray(r.prompt[:plen], np.int32)
             toks[j, :len(p)] = p
@@ -885,7 +1133,9 @@ class DecodeSession:
             eng.params, jnp.asarray(toks), self._pool,
             jnp.asarray(slot_idx), self._cur_tok, self._pos,
             self._active, self._remaining, jnp.asarray(rem_new),
-            self._eos, jnp.asarray(eos_new))
+            self._eos, jnp.asarray(eos_new), jnp.asarray(skey_new),
+            jnp.asarray(temp_new), jnp.asarray(topk_new),
+            jnp.asarray(topp_new))
         first_h = np.asarray(jax.block_until_ready(first))
         self.device_s += time.perf_counter() - t0
         self.prefill_calls += 1
@@ -907,6 +1157,7 @@ class DecodeSession:
                     on_prefill_eos(s)
                 continue
             r.slot = s
+            self._seat_sampling(s, r)
             self.slots[s] = r
             self._active_host[s] = True
 
@@ -982,6 +1233,8 @@ class DecodeSession:
         table_rows = np.full((nb, mb), eng.pool_blocks, np.int32)
         rem_new = np.ones((nb,), np.int32)
         eos_new = np.full((nb,), -1, np.int32)
+        skey_new, temp_new, topk_new, topp_new = \
+            self._sampling_rows(reqs, nb)
         for j, r in enumerate(reqs):
             p = np.asarray(r.prompt[:plen], np.int32)
             toks[j, :len(p)] = p
@@ -1003,7 +1256,9 @@ class DecodeSession:
             eng.params, jnp.asarray(toks), self._pool,
             jnp.asarray(slot_idx), jnp.asarray(table_rows),
             self._cur_tok, self._pos, self._active, self._remaining,
-            jnp.asarray(rem_new), self._eos, jnp.asarray(eos_new))
+            jnp.asarray(rem_new), self._eos, jnp.asarray(eos_new),
+            jnp.asarray(skey_new), jnp.asarray(temp_new),
+            jnp.asarray(topk_new), jnp.asarray(topp_new))
         first_h = np.asarray(jax.block_until_ready(first))
         self.device_s += time.perf_counter() - t0
         self.prefill_calls += 1
@@ -1031,20 +1286,46 @@ class DecodeSession:
             self._pool = self._pool._replace(
                 block_table=jnp.asarray(self._table_h))
             self._table_dirty = False
+        sargs = (jnp.asarray(self._skey_h), jnp.asarray(self._temp_h),
+                 jnp.asarray(self._topk_h), jnp.asarray(self._topp_h))
+        spec = eng.draft_depth > 0
+        if spec:
+            depth = eng.current_depth()
+            self.last_depth = depth
+            sargs = sargs + (jnp.asarray(depth, jnp.int32),)
         t0 = time.perf_counter()
         (self._pool, self._cur_tok, self._pos, self._active,
          self._remaining, toks, emitted) = eng._step_k(
             eng.params, self._pool, self._cur_tok, self._pos,
-            self._active, self._remaining, self._eos)
+            self._active, self._remaining, self._eos, *sargs)
         jax.block_until_ready(toks)
         self.device_s += time.perf_counter() - t0
-        # ONE host sync per window: [k,B] token/emission pulls
+        # ONE host sync per window: token/emission pulls — [k,B], or
+        # [k,D+1,B] for the speculative macro-step window
         toks_h = np.asarray(toks)
         emit_h = np.asarray(emitted)
         active_h = np.array(self._active)        # writable host copy
         self.host_syncs += 1
-        self.decode_steps += int(emit_h.any(axis=1).sum())
-        self.occupied_slot_steps += int(emit_h.sum())
+        if spec:
+            # macro-slot accounting: emission row 0 marks the slots
+            # that were live for the macro-step (one FULL verify pass
+            # each); rows 1.. are accepted drafts
+            macro_live = emit_h[:, 0, :]                     # [k, B]
+            self.decode_steps += int(macro_live.any(axis=1).sum())
+            self.occupied_slot_steps += int(macro_live.sum())
+            self.spec_accepted += int(emit_h[:, 1:, :].sum())
+            self.spec_proposed += int(macro_live.sum()) * depth
+            self.spec_draft_slot_steps += int(macro_live.sum()) * depth
+            if eng.spec_controller is not None:
+                eng.spec_controller.observe(
+                    accepted=int(emit_h[:, 1:, :].sum()),
+                    proposed=int(macro_live.sum()) * depth)
+            k_, n_, B_ = toks_h.shape
+            toks_h = toks_h.reshape(k_ * n_, B_)   # chronological
+            emit_h = emit_h.reshape(k_ * n_, B_)
+        else:
+            self.decode_steps += int(emit_h.any(axis=1).sum())
+            self.occupied_slot_steps += int(emit_h.sum())
         completed: list[GenRequest] = list(done_at_prefill)
         for s in range(B):
             r = self.slots[s]
@@ -1085,4 +1366,25 @@ class DecodeSession:
                 blocks_freed=self.blocks_freed,
                 peak_blocks_in_use=self.peak_blocks_in_use,
                 free_blocks=len(self._free_blocks))
+        if eng.draft_depth > 0:
+            emitted = self.occupied_slot_steps + self.spec_accepted
+            # modelled energy (bandwidth-bound step cost): one unit
+            # per full-stack slot pass, draft_layers/n_layers per
+            # shallow draft pass, over tokens actually emitted —
+            # greedy decode is exactly 1.0 on this scale
+            c = eng.cfg.draft_layers / eng.cfg.n_layers
+            cost = (self.occupied_slot_steps
+                    + self.spec_draft_slot_steps * c)
+            out.update(
+                mode="spec",
+                draft_depth=eng.draft_depth,
+                draft_depth_live=self.last_depth,
+                draft_layers=eng.cfg.draft_layers,
+                spec_proposed=self.spec_proposed,
+                spec_accepted=self.spec_accepted,
+                acceptance_rate=(self.spec_accepted
+                                 / max(self.spec_proposed, 1)),
+                accepted_per_step=(emitted
+                                   / max(self.occupied_slot_steps, 1)),
+                energy_per_token_model=(cost / max(emitted, 1)))
         return out

@@ -36,16 +36,24 @@ class GateParams:
     rule: str = "le"
 
 
-def gate_objective(L_norm, e_norm, c_norm, gate: GateParams = GateParams()):
-    """The gate's cost ``J(x) = (αL + βE + γC) / (α+β+γ)``.
+def gate_objective(L_norm, e_norm, c_norm, gate: GateParams = GateParams(),
+                   *, d_norm=1.0, delta: float = 0.0):
+    """The gate's cost ``J(x) = (αL + βE + γC + δ(1−D)) / (α+β+γ+δ)``.
 
     Array-agnostic on purpose — the in-graph jit step evaluates it on
     ``jnp`` arrays while the fleet's virtual-time gated engine
     evaluates the SAME expression on ``np`` arrays, so the sim and the
-    live gate can never drift apart."""
-    den = gate.alpha + gate.beta + gate.gamma
+    live gate can never drift apart.
+
+    ``d_norm``/``delta`` are the speculative-decode coupling: D is the
+    live draft depth over the compiled ceiling (1.0 = fully widened —
+    acceptance is high and marginal tokens are cheap, so ``(1 − D)``
+    vanishes and the basin widens; a collapsed draft raises J).
+    ``delta=0`` (default) reduces to the classic three-term objective
+    exactly."""
+    den = gate.alpha + gate.beta + gate.gamma + delta
     return (gate.alpha * L_norm + gate.beta * e_norm
-            + gate.gamma * c_norm) / den
+            + gate.gamma * c_norm + delta * (1.0 - d_norm)) / den
 
 
 def gate_admit(J, tau, rule: str = "le"):

@@ -1,0 +1,160 @@
+"""On-device sampling primitives for the fused decode window.
+
+Every emission site in the serving stack (the fused ``lax.scan``
+window, the bucketed prefill jits, the disaggregated prefill engine
+and the legacy per-step loop) routes through :func:`sample_token`, so
+there is exactly ONE sampling rule to prove things about:
+
+- **T = 0 is argmax, bitwise.**  ``temperature <= 0`` selects
+  ``jnp.argmax`` over the RAW logits — the same op, on the same
+  array, the greedy path has always used — so the greedy parity
+  oracles (fused vs legacy, paged vs contiguous, disagg vs pooled)
+  hold unchanged under the sampling-enabled graph.
+- **Keys are request-derived, position-folded.**  The token written at
+  absolute sequence position ``q`` of request ``rid`` is sampled with
+  ``fold_in(fold_in(PRNGKey(seed), rid), q)``.  Deriving from the
+  request id (never the slot index) means a slot reused across refill
+  waves can never replay its previous occupant's random stream, and
+  folding by absolute position makes the stream independent of HOW the
+  engine reached that position — one step at a time or via an accepted
+  speculative prefix — which is what makes self-speculative decoding
+  lossless by construction.
+- **Shape-stable masking.**  ``top_k`` / ``top_p`` are VALUES (traced
+  operands), not shapes: top-k keeps the k highest logits via a rank
+  mask (argsort-of-argsort), top-p keeps the minimal sorted prefix
+  whose probability mass covers p.  Changing either never retraces the
+  decode window.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = float("-inf")
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request (or engine-default) sampling configuration.
+
+    ``temperature=0`` is greedy decoding — bitwise identical to the
+    pre-sampling argmax path.  ``top_k=0`` and ``top_p=1.0`` disable
+    their filters.  ``seed`` selects the base PRNG stream; per-request
+    keys are derived by folding in the request id."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got "
+                             f"{self.top_k}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got "
+                             f"{self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+# ---------------------------------------------------------------------------
+# key derivation — request-id first, absolute position second
+# ---------------------------------------------------------------------------
+
+def request_key(seed: int, rid: int) -> np.ndarray:
+    """Base key for one request: ``fold_in(PRNGKey(seed), rid)``.
+
+    Host-side (numpy uint32[2]) — the session stores one per seated
+    slot.  Keys are a function of (seed, rid) ONLY: the slot index
+    never enters, so slot reuse across refill waves starts a fresh
+    stream (the seeding-gap regression)."""
+    k = jax.random.fold_in(jax.random.PRNGKey(int(seed)), int(rid))
+    return np.asarray(k, np.uint32)
+
+
+def step_keys(keys: jax.Array, pos: jax.Array) -> jax.Array:
+    """Per-row emission keys: fold each slot's request key by the
+    absolute position being written.  keys [B, 2] uint32, pos [B]."""
+    return jax.vmap(jax.random.fold_in)(keys, pos)
+
+
+# ---------------------------------------------------------------------------
+# masking primitives (value-dependent, shape-stable)
+# ---------------------------------------------------------------------------
+
+def top_k_mask(logits: jax.Array, k: jax.Array) -> jax.Array:
+    """Keep exactly the k highest logits per row; the rest -> -inf.
+
+    ``k`` [B] int32 is a traced VALUE (0 = keep all): ranks come from
+    argsort-of-argsort so the kept count is exactly ``k`` regardless
+    of ties, and no shape depends on it."""
+    V = logits.shape[-1]
+    k = jnp.asarray(k, jnp.int32)
+    k_eff = jnp.where(k > 0, k, V)
+    order = jnp.argsort(logits, axis=-1)[..., ::-1]      # descending
+    ranks = jnp.argsort(order, axis=-1)                  # rank of each id
+    keep = ranks < k_eff[..., None]
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def top_p_mask(logits: jax.Array, p: jax.Array) -> jax.Array:
+    """Nucleus filter: keep the MINIMAL descending-probability prefix
+    whose mass covers ``p``; the rest -> -inf.  ``p`` [B] float is a
+    traced value (>= 1 disables).  The top-1 token always survives."""
+    p = jnp.asarray(p, jnp.float32)
+    order = jnp.argsort(logits, axis=-1)[..., ::-1]
+    sorted_logits = jnp.take_along_axis(logits, order, -1)
+    probs = jax.nn.softmax(sorted_logits.astype(jnp.float32), -1)
+    csum = jnp.cumsum(probs, -1)
+    # sorted index i survives iff the mass BEFORE it is < p: that is
+    # exactly the minimal prefix whose cumulative mass reaches p
+    keep_sorted = (csum - probs) < p[..., None]
+    keep_sorted = keep_sorted.at[..., 0].set(True)
+    ranks = jnp.argsort(order, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, ranks, -1)
+    keep = keep | (p >= 1.0)[..., None]
+    return jnp.where(keep, logits, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# the one sampling rule
+# ---------------------------------------------------------------------------
+
+def sample_token(keys: jax.Array, logits: jax.Array,
+                 temperature: jax.Array, top_k: jax.Array,
+                 top_p: jax.Array) -> jax.Array:
+    """Sample one token per row.  keys [B,2] uint32; logits [B,V];
+    temperature/top_k/top_p [B] traced per-row values.
+
+    Rows with ``temperature <= 0`` take ``jnp.argmax`` over the RAW
+    logits (bitwise the pre-sampling greedy path); others sample the
+    temperature-scaled, top-k/top-p-masked distribution via the Gumbel
+    trick.  When the whole batch is greedy a ``lax.cond`` skips the
+    sort/gumbel work at runtime entirely."""
+    temperature = jnp.asarray(temperature, jnp.float32)
+    greedy_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    def sampled(_):
+        V = logits.shape[-1]
+        t = jnp.maximum(temperature, 1e-6)[..., None]
+        scaled = logits.astype(jnp.float32) / t
+        masked = top_k_mask(scaled, top_k)
+        masked = top_p_mask(masked, top_p)
+        g = jax.vmap(
+            lambda kk: jax.random.gumbel(kk, (V,), jnp.float32))(keys)
+        tok = jnp.argmax(masked + g, -1).astype(jnp.int32)
+        return jnp.where(temperature > 0.0, tok, greedy_tok)
+
+    return jax.lax.cond(jnp.any(temperature > 0.0), sampled,
+                        lambda _: greedy_tok, operand=None)

@@ -131,6 +131,43 @@ def _case(name, classifier, lm):
                              kind="generate", max_new=3)
                 for i in range(N_REQ)]
         return eng, reqs, "generate"
+    if name == "live-continuous-sampled":
+        # nonzero temperature through the SAME conformance battery:
+        # sampling must not change lifecycle conservation, drain-to-
+        # zero, or pressure side-effect-freedom
+        from repro.serving.continuous import ContinuousBatchingEngine
+        cfg, params = lm
+        scfg = cfg.replace(temperature=0.8, sample_top_k=16,
+                           sample_top_p=0.95, sampling_seed=11)
+        eng = ContinuousEngineAdapter(
+            ContinuousBatchingEngine(scfg, params, n_slots=2,
+                                     max_seq=32),
+            prompt_len=8)
+        rng = np.random.default_rng(1)
+        reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
+                             payload=rng.integers(
+                                 0, cfg.vocab, 8).astype(np.int32),
+                             kind="generate", max_new=3)
+                for i in range(N_REQ)]
+        return eng, reqs, "continuous-decode"
+    if name == "live-continuous-spec":
+        # sampled AND self-speculative: draft/verify acceptance masks
+        # must fold into the same lifecycle guarantees
+        from repro.serving.continuous import ContinuousBatchingEngine
+        cfg, params = lm
+        scfg = cfg.replace(temperature=0.8, sampling_seed=11,
+                           draft_layers=max(cfg.n_layers - 1, 1))
+        eng = ContinuousEngineAdapter(
+            ContinuousBatchingEngine(scfg, params, n_slots=2,
+                                     max_seq=32, draft_depth=2),
+            prompt_len=8)
+        rng = np.random.default_rng(1)
+        reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
+                             payload=rng.integers(
+                                 0, cfg.vocab, 8).astype(np.int32),
+                             kind="generate", max_new=3)
+                for i in range(N_REQ)]
+        return eng, reqs, "continuous-decode"
     if name == "callable":
         fn = jax.jit(lambda x: x)
         reqs = [InferRequest(rid=i, arrival_s=0.01 * i,
@@ -142,7 +179,8 @@ def _case(name, classifier, lm):
 
 ENGINES = ("oracle", "sim-direct", "sim-batch", "sim-gated",
            "sim-continuous", "live-classifier", "live-gated",
-           "live-continuous", "disagg", "callable")
+           "live-continuous", "live-continuous-sampled",
+           "live-continuous-spec", "disagg", "callable")
 
 
 @pytest.mark.parametrize("name", ENGINES)
@@ -193,3 +231,50 @@ def test_engine_port_conformance(name, classifier, lm):
     # engine's LAST OBSERVED clock, not at an arbitrary future time)
     horizon = max(r.t_finish for r in out) + 100.0
     assert engine.pressure(horizon) == pytest.approx(0.0)
+
+
+def test_sampling_value_changes_do_not_recompile(lm):
+    """SamplingParams are traced VALUES on the fused decode window:
+    streaming waves whose requests carry DIFFERENT temperatures /
+    top-k / top-p / seeds must not retrigger an ``xla.compile`` span
+    after the first window is traced."""
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.sampling import SamplingParams
+    from repro.telemetry.trace import Tracer
+
+    cfg, params = lm
+    engine = ContinuousBatchingEngine(cfg, params, n_slots=2,
+                                      max_seq=32)
+    adapter = ContinuousEngineAdapter(engine, prompt_len=8)
+    tracer = Tracer()
+    rng = np.random.default_rng(2)
+    waves = [None,
+             SamplingParams(temperature=1.2, top_k=8, seed=1),
+             SamplingParams(temperature=0.4, top_p=0.7, seed=9),
+             SamplingParams(temperature=0.0)]
+    compiles_after_first = 0
+    first_done = False
+    for w, sp in enumerate(waves):
+        server = Server(adapter,
+                        ServerConfig(path="continuous-decode"),
+                        tracer=tracer)
+        reqs = [InferRequest(rid=100 * w + i, arrival_s=0.01 * i,
+                             payload=rng.integers(
+                                 0, cfg.vocab, 8).astype(np.int32),
+                             kind="generate", max_new=3,
+                             sampling=sp)
+                for i in range(4)]
+        out = server.serve(reqs)
+        assert sorted(r.rid for r in out) == sorted(r.rid for r in reqs)
+        if first_done:
+            compiles_after_first += sum(
+                s.attrs.get("count", 0)
+                for s in tracer.find("xla.compile"))
+            tracer.reset()
+        else:
+            # wave 0 traces the window (prefill buckets may add more)
+            assert engine.decode_compile_count == 1
+            tracer.reset()
+            first_done = True
+    assert compiles_after_first == 0
+    assert engine.decode_compile_count == 1

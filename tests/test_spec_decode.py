@@ -1,0 +1,280 @@
+"""Self-speculative decoding: the draft/verify window must be LOSSLESS.
+
+Emitted tokens are always the FULL model's samples under the same
+(rid, position)-folded keys — the draft only decides how many of them
+land per device step — so the speculative engine must byte-match the
+non-speculative engine at every temperature, and the accepted-token
+distribution IS the full-model sampling distribution.  These tests pin
+that invariant, the acceptance/energy accounting around it, the
+compile-once guarantee (depth and sampling params are traced VALUES),
+and the constructor's refusal of layouts the verify chunk cannot
+serve.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tfm
+from repro.serving import sampling
+from repro.serving.continuous import ContinuousBatchingEngine, GenRequest
+from repro.serving.sampling import SamplingParams
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False, **kw)
+    return cfg
+
+
+def _spec_cfg(**kw):
+    cfg = _cfg(**kw)
+    return cfg.replace(draft_layers=max(cfg.n_layers - 1, 1))
+
+
+def _params(cfg):
+    return tfm.init_lm(cfg, KEY)
+
+
+def _reqs(cfg, n=6, plen=8, seed=0, sp=None):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, plen) for _ in range(n)]
+    return [GenRequest(rid=i, prompt=prompts[i], max_new=4 + (i % 4),
+                       sampling=sp)
+            for i in range(n)]
+
+
+def _serve(cfg, params, reqs, **kw):
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=4, max_seq=64,
+                                   sync_every=2, **kw)
+    stats = eng.serve(reqs, prompt_len=8)
+    return eng, stats
+
+
+SP = SamplingParams(temperature=0.9, top_k=20, top_p=0.95, seed=7)
+
+
+# ---------------------------------------------------------------------------
+# losslessness: byte parity with the non-speculative path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_spec_byte_matches_nonspec_greedy(depth):
+    cfg = _spec_cfg()
+    params = _params(cfg)
+    rb = _reqs(cfg)
+    _serve(cfg.replace(draft_layers=0), params, rb)
+    rs = _reqs(cfg)
+    _, stats = _serve(cfg, params, rs, draft_depth=depth)
+    assert [r.generated for r in rs] == [r.generated for r in rb]
+    assert all(r.done for r in rs)
+    assert stats["mode"] == "spec"
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_spec_byte_matches_nonspec_sampled(depth):
+    """T>0: accepted prefixes are the full model's samples under the
+    same keys, so the WHOLE stream (not just prefixes) byte-matches."""
+    cfg = _spec_cfg()
+    params = _params(cfg)
+    rb = _reqs(cfg, sp=SP)
+    _serve(cfg.replace(draft_layers=0), params, rb)
+    rs = _reqs(cfg, sp=SP)
+    _serve(cfg, params, rs, draft_depth=depth)
+    assert [r.generated for r in rs] == [r.generated for r in rb]
+
+
+# ---------------------------------------------------------------------------
+# acceptance + modelled energy
+# ---------------------------------------------------------------------------
+
+def _aligned_params(cfg):
+    """Zero the LAST layer's params: the residual block becomes the
+    identity, so the (n_layers-1)-deep draft agrees with the full
+    model almost everywhere -> high acceptance."""
+    params = _params(cfg)
+    pz = dict(params)
+    pz["layers"] = jax.tree_util.tree_map(lambda x: x.at[-1].set(0.0),
+                                          params["layers"])
+    return pz
+
+
+def test_aligned_draft_accepts_and_saves_energy():
+    """When the draft agrees with the full model, acceptance is high
+    (budget/EOS truncation keeps it below 1.0) and the modelled
+    J/token drops below the greedy baseline's 1.0."""
+    cfg = _spec_cfg()
+    pz = _aligned_params(cfg)
+    rs = _reqs(cfg)
+    _, stats = _serve(cfg, pz, rs, draft_depth=3)
+    assert stats["acceptance_rate"] > 0.5
+    assert stats["accepted_per_step"] > 1.0
+    assert stats["energy_per_token_model"] < 1.0
+    # and still byte-identical to the non-speculative engine
+    rb = _reqs(cfg)
+    _serve(cfg.replace(draft_layers=0), pz, rb)
+    assert [r.generated for r in rs] == [r.generated for r in rb]
+
+
+def test_misaligned_draft_costs_energy_not_correctness():
+    """Random weights: the 1-layer draft rarely matches the full
+    model, so acceptance collapses and modelled J/token EXCEEDS 1.0 —
+    but the stream still byte-matches (losslessness is unconditional).
+    The depth controller reacts by collapsing the live depth."""
+    cfg = _spec_cfg()
+    params = _params(cfg)
+    rs = _reqs(cfg)
+    eng, stats = _serve(cfg, params, rs, draft_depth=3)
+    rb = _reqs(cfg)
+    _serve(cfg.replace(draft_layers=0), params, rb)
+    assert [r.generated for r in rs] == [r.generated for r in rb]
+    assert stats["acceptance_rate"] < 0.5
+    assert stats["energy_per_token_model"] > 1.0
+    assert stats["draft_depth_live"] < 3          # controller backed off
+    assert eng.spec_controller.acceptance_rate < 0.5
+
+
+def test_spec_stats_accounting():
+    cfg = _spec_cfg()
+    _, stats = _serve(cfg, _aligned_params(cfg), _reqs(cfg),
+                      draft_depth=2)
+    assert stats["spec_proposed"] >= stats["spec_accepted"] >= 0
+    assert 0.0 <= stats["acceptance_rate"] <= 1.0
+    assert stats["draft_depth"] == 2
+    assert 1 <= stats["draft_depth_live"] <= 2
+    assert stats["draft_layers"] == cfg.draft_layers
+    # every macro step emits at least its mandatory full-model token
+    assert stats["accepted_per_step"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# distribution-level correctness
+# ---------------------------------------------------------------------------
+
+def test_sampler_matches_softmax_distribution():
+    """The Gumbel-trick sampler draws from softmax(masked logits/T):
+    empirical frequencies over many keys match the closed form."""
+    v, temp, n = 12, 0.8, 4000
+    logits = jax.random.normal(jax.random.PRNGKey(1), (1, v)) * 2.0
+    masked = sampling.top_p_mask(
+        sampling.top_k_mask(logits / temp, jnp.array([8])),
+        jnp.array([0.97]))
+    probs = np.asarray(jax.nn.softmax(masked, -1), np.float64)[0]
+
+    base = jnp.asarray(
+        np.stack([sampling.request_key(0, i) for i in range(n)]))
+    keys = sampling.step_keys(base, jnp.zeros(n, jnp.int32))
+    toks = np.asarray(sampling.sample_token(
+        keys, jnp.broadcast_to(logits, (n, v)),
+        jnp.full(n, temp, jnp.float32), jnp.full(n, 8, jnp.int32),
+        jnp.full(n, 0.97, jnp.float32)))
+    freq = np.bincount(toks, minlength=v) / n
+    # total variation distance; ~1/sqrt(n) scale
+    assert 0.5 * np.abs(freq - probs).sum() < 0.05
+
+
+def test_spec_token_frequencies_match_nonspec():
+    """Distribution-level spec correctness: pooled across seeds, the
+    draft-verify engine's emitted-token frequencies match the
+    full-model sampling path's.  (Byte parity implies TV distance 0 —
+    this pins the distributional claim independently of ordering.)"""
+    cfg = _spec_cfg()
+    params = _params(cfg)
+    pools = {True: [], False: []}
+    for seed in range(3):
+        sp = SamplingParams(temperature=1.0, top_k=30, seed=seed)
+        for spec in (False, True):
+            reqs = _reqs(cfg, n=4, seed=seed, sp=sp)
+            if spec:
+                _serve(cfg, params, reqs, draft_depth=2)
+            else:
+                _serve(cfg.replace(draft_layers=0), params, reqs)
+            pools[spec].extend(t for r in reqs for t in r.generated)
+    a = np.bincount(pools[True], minlength=cfg.vocab).astype(float)
+    b = np.bincount(pools[False], minlength=cfg.vocab).astype(float)
+    a, b = a / a.sum(), b / b.sum()
+    assert 0.5 * np.abs(a - b).sum() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# constructor validation + compile-once
+# ---------------------------------------------------------------------------
+
+def test_paged_pool_refuses_draft_depth():
+    cfg = _spec_cfg(kv_block_size=8)
+    with pytest.raises(ValueError, match="contiguous"):
+        ContinuousBatchingEngine(cfg, _params(cfg), n_slots=2,
+                                 max_seq=64, draft_depth=2)
+
+
+def test_draft_depth_needs_draft_layers():
+    cfg = _cfg()                                   # draft_layers == 0
+    with pytest.raises(ValueError, match="draft_layers"):
+        ContinuousBatchingEngine(cfg, _params(cfg), n_slots=2,
+                                 max_seq=64, draft_depth=2)
+
+
+def test_draft_layers_must_be_shallow():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="draft_layers"):
+        cfg.replace(draft_layers=cfg.n_layers)
+    with pytest.raises(ValueError):
+        cfg.replace(draft_layers=-1)
+
+
+def test_spec_window_compiles_once_across_values():
+    """Depth and sampling params are traced VALUES: serving waves with
+    different SamplingParams, then again after the controller moves the
+    live depth, must never retrace the fused window."""
+    cfg = _spec_cfg()
+    pz = _aligned_params(cfg)
+    eng = ContinuousBatchingEngine(cfg, pz, n_slots=4, max_seq=64,
+                                   sync_every=2, draft_depth=3)
+    eng.serve(_reqs(cfg), prompt_len=8)
+    c0 = eng.decode_compile_count
+    assert c0 == 1
+    # different sampling values, same engine
+    eng.serve(_reqs(cfg, sp=SP), prompt_len=8)
+    # drive the controller's acceptance EWMA to each extreme so the
+    # live depth actually moves, serving a wave at each depth
+    for _ in range(12):
+        eng.spec_controller.observe(accepted=0, proposed=400)
+    d_low = eng.current_depth()
+    eng.serve(_reqs(cfg, seed=1), prompt_len=8)
+    for _ in range(12):
+        eng.spec_controller.observe(accepted=400, proposed=400)
+    d_high = eng.current_depth()
+    eng.serve(_reqs(cfg, seed=2), prompt_len=8)
+    assert d_low < d_high                       # the lever actually moves
+    assert eng.decode_compile_count == c0 == 1
+
+
+def test_spec_across_refill_waves_and_eos():
+    """More requests than slots + an EOS id: retirement inside the
+    verify chunk must fold into the done-mask machinery — streams stay
+    byte-identical to the non-speculative engine across refill waves."""
+    cfg = _spec_cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    eos = 5
+
+    def mk():
+        return [GenRequest(rid=i,
+                           prompt=rng_prompts[i],
+                           max_new=6, eos_id=eos)
+                for i in range(7)]
+
+    rng_prompts = [rng.integers(0, cfg.vocab, 8) for _ in range(7)]
+    rb = mk()
+    eng_b = ContinuousBatchingEngine(cfg.replace(draft_layers=0),
+                                     params, n_slots=3, max_seq=64,
+                                     sync_every=2)
+    eng_b.serve(rb, prompt_len=8)
+    rs = mk()
+    eng_s = ContinuousBatchingEngine(cfg, params, n_slots=3, max_seq=64,
+                                     sync_every=2, draft_depth=3)
+    eng_s.serve(rs, prompt_len=8)
+    assert [r.generated for r in rs] == [r.generated for r in rb]
+    assert eng_s.decode_compile_count == 1
