@@ -23,6 +23,22 @@ SAME params:
     fewer refill waves and fewer modelled joules/token at a fixed HBM
     budget.
 
+Two kernel-level rows compare the paged flash-decode paths on one
+pool (CPU CI runs them in interpret mode, so the numbers are a parity
+/ no-regression gate rather than TPU truth):
+
+  - ``paged_native_k8``  — the table-native kernel: block table
+    scalar-prefetched, HBM→VMEM DMA redirected through it, pool
+    consumed in place.
+  - ``paged_shim_k8``    — the materialised-gather shim at matched
+    chunking (``k_blk == block size``); byte-identical by
+    construction, one extra pass over the cache bytes.
+
+And two launcher rows measure cold-start hardening: ``compile_cold``
+vs ``compile_warm`` run the smoke model's first forward in a fresh
+subprocess against an empty vs pre-warmed persistent JAX compilation
+cache (``repro.launch.compile_cache``).
+
 Reported per variant: steps/s, host-sync fraction, slot occupancy,
 modelled joules/token (EnergyModel active power over the wall), KV HBM
 bytes (``pool_hbm_bytes`` — the K/V rows paging shrinks, metadata
@@ -85,6 +101,115 @@ def _paged_geometry(cfg, n: int, n_slots: int):
     # per-request budgets; the packed pool must fit INSIDE the budget
     packed_slots = (contig_kv - per_block) // (bpr * per_block)
     return bpr, per_block, packed_slots
+
+
+def _kernel_rows(reps: int = 5, seed: int = 0) -> list[dict]:
+    """Kernel-level paged flash-decode comparison on one shared pool:
+    the table-native kernel vs the gather shim at matched chunking.
+    Per-call wall time (median of ``reps``) plus the byte-parity bit
+    the smoke gate asserts."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import decode_attention as dak
+
+    B, H, K, hd = 4, 8, 2, 64
+    bs, mb = KV_BLOCK, MAX_SEQ // KV_BLOCK
+    C = mb * bs
+    NB = 1 + B * mb                       # block 0 = trash
+    rng = np.random.default_rng(seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k_pool = jax.random.normal(ks[1], (NB, bs, K, hd))
+    v_pool = jax.random.normal(ks[2], (NB, bs, K, hd))
+    perm = 1 + rng.permutation(NB - 1)
+    table = jnp.asarray(perm[:B * mb].reshape(B, mb).astype(np.int32))
+    lens = rng.integers(C // 2, C + 1, size=B)
+    pos = np.full((B, C), -1, np.int32)
+    for b in range(B):
+        pos[b, :lens[b]] = np.arange(lens[b])
+    pos = jnp.asarray(pos)
+    cur = jnp.asarray(lens - 1, dtype=jnp.int32)
+
+    def native():
+        return dak.paged_decode_attention(q, k_pool, v_pool, table,
+                                          pos, cur)
+
+    def shim():
+        return dak.paged_decode_attention_shim(q, k_pool, v_pool, table,
+                                               pos, cur, k_blk=bs)
+
+    rows = []
+    outs = {}
+    for name, fn in (("paged_native_k8", native), ("paged_shim_k8", shim)):
+        outs[name] = fn().block_until_ready()      # warm the jit cache
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn().block_until_ready()
+            times.append(time.perf_counter() - t0)
+        rows.append({
+            "variant": name,
+            "layout": "paged-kernel",
+            "shape": f"B{B}xH{H}xK{K}xhd{hd} C{C} bs{bs}",
+            "us_per_call": round(float(np.median(times)) * 1e6, 1),
+            "reps": reps,
+        })
+    identical = bool(jnp.all(outs["paged_native_k8"]
+                             == outs["paged_shim_k8"]))
+    for r in rows:
+        r["byte_identical_to_shim"] = identical
+    return rows
+
+
+def _compile_rows() -> list[dict]:
+    """Cold vs warm start of the smoke model's first forward in a
+    fresh subprocess: an empty persistent-compilation-cache dir, then
+    the same dir again.  The delta is what the cache buys a replica
+    restart."""
+    import subprocess
+    import tempfile
+
+    child = (
+        "import json, time\n"
+        "from repro.launch.compile_cache import enable_compilation_cache\n"
+        "enable_compilation_cache()\n"
+        "import jax, jax.numpy as jnp\n"
+        "from repro.configs import get_smoke_config\n"
+        "from repro.models import transformer as tfm\n"
+        f"cfg = get_smoke_config({ARCH!r}).replace(remat=False)\n"
+        "params = tfm.init_lm(cfg, jax.random.PRNGKey(0))\n"
+        "toks = jnp.zeros((2, 8), jnp.int32)\n"
+        "t0 = time.perf_counter()\n"
+        "out, _ = tfm.forward(cfg, params, toks)\n"
+        "out.block_until_ready()\n"
+        "print(json.dumps({'first_forward_s':"
+        " time.perf_counter() - t0}))\n"
+    )
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="jaxcache-") as cache:
+        for name in ("compile_cold", "compile_warm"):
+            env = dict(os.environ,
+                       JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS",
+                                                    "cpu"),
+                       JAX_COMPILATION_CACHE_DIR=cache,
+                       PYTHONPATH=os.path.join(_REPO_ROOT, "src"))
+            t0 = time.perf_counter()
+            out = subprocess.run(
+                [sys.executable, "-c", child], env=env, cwd=_REPO_ROOT,
+                capture_output=True, text=True, timeout=600)
+            wall = time.perf_counter() - t0
+            if out.returncode != 0:      # surface the child's stderr
+                raise RuntimeError(f"{name} probe failed:\n{out.stderr}")
+            payload = json.loads(out.stdout.strip().splitlines()[-1])
+            rows.append({
+                "variant": name,
+                "layout": "launcher",
+                "first_forward_s": round(payload["first_forward_s"], 3),
+                "process_wall_s": round(wall, 3),
+                "cache_entries": len(os.listdir(cache)),
+            })
+    return rows
 
 
 def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
@@ -169,6 +294,8 @@ def run(n: int = N_REQUESTS, n_slots: int = N_SLOTS,
             "decode_compiles": eng.decode_compile_count,
             "generated": [list(r.generated) for r in reqs],
         })
+    rows += _kernel_rows(seed=seed)
+    rows += _compile_rows()
     return rows
 
 
@@ -214,6 +341,30 @@ def check(rows) -> dict:
             100.0 * (1 - packed["joules_per_token"]
                      / max(k8["joules_per_token"], 1e-9)), 2),
     }
+    # kernel-level: table-native vs gather shim (interpret mode on CPU
+    # CI — a parity + no-regression gate, not TPU truth)
+    native, shim = by["paged_native_k8"], by["paged_shim_k8"]
+    out.update({
+        "paged_native_matches_shim": native["byte_identical_to_shim"],
+        "paged_native_us_per_call": native["us_per_call"],
+        "paged_shim_us_per_call": shim["us_per_call"],
+        "paged_native_speedup_x": round(
+            shim["us_per_call"] / max(native["us_per_call"], 1e-9), 3),
+        # the native kernel drops the shim's extra gather pass; allow
+        # 30% timer noise headroom before calling it a regression
+        "paged_native_not_slower": (
+            native["us_per_call"] <= 1.3 * shim["us_per_call"]),
+    })
+    # launcher: persistent-compilation-cache cold vs warm start
+    cold, warm = by["compile_cold"], by["compile_warm"]
+    out.update({
+        "cold_start_first_forward_s": cold["first_forward_s"],
+        "warm_start_first_forward_s": warm["first_forward_s"],
+        "warm_start_speedup_x": round(
+            cold["first_forward_s"]
+            / max(warm["first_forward_s"], 1e-9), 2),
+        "compile_cache_populated": cold["cache_entries"] > 0,
+    })
     slim = [{k: v for k, v in r.items() if k != "generated"}
             for r in rows]
     with open(os.path.join(_REPO_ROOT, "BENCH_continuous.json"),
@@ -239,7 +390,10 @@ def main(argv) -> int:
                                 "decode_compiled_once",
                                 "paged_fits_contig_budget",
                                 "paged_slots_ge_contiguous",
-                                "paged_slots_gain_ge_2x")
+                                "paged_slots_gain_ge_2x",
+                                "paged_native_matches_shim",
+                                "paged_native_not_slower",
+                                "compile_cache_populated")
                     if not chk[k]]
         if failures:
             print(f"SMOKE FAIL: {failures}", file=sys.stderr)

@@ -32,10 +32,14 @@ class ModelConfig:
     rope_pct: float = 1.0           # partial rotary (stablelm: 0.25)
     qkv_bias: bool = False
     prefix_lm: bool = False         # bidirectional prefix (paligemma)
-    attn_impl: str = "xla"          # xla | auto | ref | pallas — route
+    attn_impl: str = "auto"         # auto | xla | ref | pallas — route
                                     # attn/local_attn layers through the
                                     # repro.kernels dispatch ("auto":
-                                    # Pallas on TPU, jnp oracle on CPU)
+                                    # Pallas on TPU; elsewhere the
+                                    # model's own einsum path, bitwise-
+                                    # identical to "xla" — the
+                                    # production default; "xla"
+                                    # bypasses the dispatch entirely)
 
     # paged KV pool (vLLM-style) for continuous decode.  0 = the
     # contiguous per-slot layout (the parity oracle).  >0 = one shared

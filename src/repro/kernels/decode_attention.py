@@ -1,4 +1,4 @@
-"""Flash-decode Pallas kernel — one new token vs a long KV cache.
+"""Flash-decode Pallas kernels — one new token vs a long KV cache.
 
 The dominant op of the decode_32k / long_500k shapes: q [B, H, hd]
 against k/v [B, K, S, hd] with per-slot absolute positions (supports
@@ -6,6 +6,26 @@ ring-buffered sliding-window caches).  Grid (B, H, kv_blocks), KV
 innermost, online softmax in VMEM scratch.  The cache never leaves HBM
 except for the [k_blk, hd] tile streamed through VMEM — this kernel is
 purely HBM-bandwidth bound, which is exactly what the roofline says.
+
+Two paged entry points serve the vLLM-style shared block pool:
+
+  - :func:`paged_decode_attention` — the TABLE-NATIVE kernel.  The
+    slot's ``block_table`` row is scalar-prefetched
+    (``pltpu.PrefetchScalarGridSpec``) and every grid step's HBM→VMEM
+    DMA is redirected through it by the BlockSpec index_map, so the
+    kernel streams ``[block_size, hd]`` tiles straight out of the
+    shared pool.  No gather, no contiguous copy — the pool's K/V bytes
+    cross HBM exactly once per decode step.
+  - :func:`paged_decode_attention_shim` — the materialised-gather
+    shim kept as the parity oracle: one XLA gather rebuilds the
+    contiguous [B, K, S, hd] view, then the contiguous kernel runs on
+    it.  At matched chunking (``k_blk == block_size``) both paths
+    execute the identical online-softmax schedule, so their outputs
+    are BYTE-identical — enforced in tests and the CI smoke gate.
+
+Validity is carried entirely by ``kv_pos`` on both paths: unmapped
+table entries point at trash block 0, whose rows are never attended
+because their logical positions were never written (stay -1).
 """
 from __future__ import annotations
 
@@ -16,6 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
 
 _NEG = -1e30
 
@@ -63,8 +85,12 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      kv_pos: jax.Array, cur_pos: jax.Array, *,
                      window: int = 0, k_blk: int = 512,
-                     interpret: bool = True) -> jax.Array:
-    """q [B,H,hd]; k/v [B,K,S,hd]; kv_pos [B,S]; cur_pos [B] -> [B,H,hd]."""
+                     interpret: bool | None = None) -> jax.Array:
+    """q [B,H,hd]; k/v [B,K,S,hd]; kv_pos [B,S]; cur_pos [B] -> [B,H,hd].
+
+    ``interpret=None`` resolves to compiled-on-TPU / interpreted
+    elsewhere (``repro.kernels.runtime.default_interpret``)."""
+    interpret = resolve_interpret(interpret)
     B, H, hd = q.shape
     K, S = k.shape[1], k.shape[2]
     G = H // K
@@ -108,41 +134,176 @@ def gather_block_views(k_pool: jax.Array, v_pool: jax.Array,
     view: pool [NB, bs, K, hd] + table [B, MB] -> k/v
     [B, n_ctx, K, hd] (BSHD, the gather's natural layout — the decode
     kernels transpose to their BHSD at the call site).  The ONE
-    implementation of the block-table gather — the Pallas shim below,
+    implementation of the block-table gather — the Pallas shim,
     the jnp ops dispatch AND the model layer's ``attn.paged_gather``
     all go through it, so table semantics can never diverge between
     paths."""
     B = block_table.shape[0]
     bs = k_pool.shape[1]
-    tb = block_table[:, :n_ctx // bs]                   # [B, MB]
+    if n_ctx % bs != 0:
+        raise ValueError(
+            f"paged gather: logical extent n_ctx={n_ctx} is not a "
+            f"multiple of the pool block size bs={bs} (pool "
+            f"{tuple(k_pool.shape)}, table {tuple(block_table.shape)}) "
+            f"— the trailing n_ctx % bs = {n_ctx % bs} rows would be "
+            f"silently truncated")
+    n_blocks = n_ctx // bs
+    if n_blocks > block_table.shape[1]:
+        raise ValueError(
+            f"paged gather: n_ctx={n_ctx} needs {n_blocks} blocks of "
+            f"bs={bs} rows but the block table maps only "
+            f"{block_table.shape[1]} per slot (table "
+            f"{tuple(block_table.shape)})")
+    tb = block_table[:, :n_blocks]                      # [B, MB]
     k = k_pool[tb].reshape(B, n_ctx, *k_pool.shape[2:])
     v = v_pool[tb].reshape(B, n_ctx, *v_pool.shape[2:])
     return k, v
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("window", "k_blk", "interpret"))
+# ---------------------------------------------------------------------------
+# paged flash-decode — TABLE-NATIVE kernel (scalar-prefetched DMA)
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, window: int):
+    """One grid step = one mapped pool block of the slot.
+
+    ``tbl_ref`` is the scalar-prefetched block table — the kernel body
+    never touches it; the BlockSpec index_maps already used it to
+    redirect this step's HBM→VMEM DMA, so ``k_ref``/``v_ref`` hold the
+    [bs, hd] tile of pool block ``tbl[b, ki]``.  The math is the exact
+    online-softmax schedule of ``_decode_kernel`` at k_blk == bs (no
+    pad column mask needed: the paged pos array is block-aligned by
+    construction), which is what makes the shim byte-identical."""
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[:] = jnp.full(m_ref.shape, _NEG, jnp.float32)
+        l_ref[:] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[:, :] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # [1, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)                # [bs, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    kv_pos = pos_ref[0]                                   # [bs]
+    cur = cur_ref[0]                                      # scalar int32
+
+    s = (q @ k.T)[0]                                      # [bs]
+    ok = (kv_pos >= 0) & (kv_pos <= cur)
+    if window:
+        ok = ok & (cur - kv_pos < window)
+    s = jnp.where(ok, s, _NEG)
+
+    m_old = m_ref[0]
+    m_new = jnp.maximum(m_old, jnp.max(s))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[0] = l_ref[0] * corr + jnp.sum(p)
+    acc_ref[0, :] = acc_ref[0, :] * corr + p @ v
+    m_ref[0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, 0] = (acc_ref[0, :] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_table: jax.Array,
                            kv_pos: jax.Array, cur_pos: jax.Array, *,
-                           window: int = 0, k_blk: int = 512,
-                           interpret: bool = True) -> jax.Array:
-    """Flash-decode over a paged block pool — block-table SHIM.
+                           window: int = 0,
+                           interpret: bool | None = None) -> jax.Array:
+    """Flash-decode over a paged block pool — TABLE-NATIVE.
 
     q [B,H,hd]; k_pool/v_pool [NB, bs, K, hd] (one physical pool);
     block_table [B, MB] maps each slot's logical block to a pool
     block; kv_pos [B, MB*bs] per-slot absolute positions (-1 = empty);
     cur_pos [B] -> [B,H,hd].
 
-    The shim gathers each slot's mapped blocks into the contiguous
-    [B, K, S, hd] layout with one XLA gather, then runs the existing
-    flash-decode kernel — validity still comes from ``kv_pos``, so
-    trash-block rows are never attended.  A table-NATIVE kernel would
-    instead scalar-prefetch the table row (PrefetchScalarGridSpec) and
-    redirect each grid step's HBM->VMEM DMA through it, skipping the
-    materialised gather; the call signature here is already that
-    kernel's, so swapping it in is a drop-in.
-    """
+    The block table rides in as a scalar-prefetch operand
+    (``pltpu.PrefetchScalarGridSpec``): it is resident in SMEM before
+    the first grid step, and the k/v BlockSpec index_maps read
+    ``tbl[b, ki]`` to aim each step's HBM→VMEM DMA at the slot's
+    ki-th mapped pool block.  The shared pool is therefore consumed
+    IN PLACE — no materialised gather, no contiguous copy, no second
+    pass over the cache bytes.  The grid's KV chunk is the pool block
+    size (DMAs must land on pool-block boundaries; a k_blk knob would
+    either re-introduce the copy or be a lie).
+
+    ``kv_pos`` validity masking is unchanged from the contiguous
+    kernel, so trash-block rows (unmapped table entries point at
+    block 0) are never attended."""
+    interpret = resolve_interpret(interpret)
+    B, H, hd = q.shape
+    bs, K = k_pool.shape[1], k_pool.shape[2]
+    G = H // K
+    C = kv_pos.shape[1]
+    if C % bs != 0:
+        raise ValueError(
+            f"paged decode: kv_pos extent C={C} is not a multiple of "
+            f"the pool block size bs={bs} — the paged layout is "
+            f"block-aligned by construction, so this is a caller bug")
+    nk = C // bs
+    if nk > block_table.shape[1]:
+        raise ValueError(
+            f"paged decode: kv_pos extent C={C} needs {nk} blocks of "
+            f"bs={bs} rows but the block table maps only "
+            f"{block_table.shape[1]} per slot")
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, h, ki, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, ki, tbl, G=G:
+                         (tbl[b, ki], 0, h // G, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, ki, tbl, G=G:
+                         (tbl[b, ki], 0, h // G, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, ki, tbl: (b, ki)),
+            pl.BlockSpec((1,), lambda b, h, ki, tbl: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda b, h, ki, tbl: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((1, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), q[:, :, None, :], k_pool, v_pool,
+      kv_pos, cur_pos.astype(jnp.int32))
+    return out[:, :, 0, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "k_blk", "interpret"))
+def paged_decode_attention_shim(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, block_table: jax.Array,
+                                kv_pos: jax.Array, cur_pos: jax.Array, *,
+                                window: int = 0, k_blk: int = 512,
+                                interpret: bool | None = None
+                                ) -> jax.Array:
+    """Flash-decode over a paged block pool — block-table gather SHIM.
+
+    The parity oracle for :func:`paged_decode_attention`: gathers each
+    slot's mapped blocks into the contiguous [B, K, S, hd] layout with
+    one materialised XLA gather, then runs the contiguous flash-decode
+    kernel.  At ``k_blk == block_size`` the online-softmax schedule is
+    the native kernel's exactly, so outputs are byte-identical — the
+    property the tests and the CI smoke gate pin.  Costs one full
+    extra pass over the cache bytes per micro-step, which is why it is
+    no longer the serving path."""
     k, v = gather_block_views(k_pool, v_pool, block_table,
                               kv_pos.shape[1])
     return decode_attention(q, k.transpose(0, 2, 1, 3),

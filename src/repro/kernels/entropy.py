@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 _NEG = -1e30
 
 
@@ -62,8 +64,11 @@ def _entropy_kernel(x_ref, h_ref, maxp_ref, amax_ref,
 
 @functools.partial(jax.jit, static_argnames=("b_blk", "v_blk", "interpret"))
 def entropy_stats(logits: jax.Array, *, b_blk: int = 8, v_blk: int = 2048,
-                  interpret: bool = True):
-    """logits [B, V] -> (entropy [B], max_prob [B], argmax [B] int32)."""
+                  interpret: bool | None = None):
+    """logits [B, V] -> (entropy [B], max_prob [B], argmax [B] int32).
+
+    ``interpret=None`` -> compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     B, V = logits.shape
     nb = -(-B // b_blk)
     nv = -(-V // v_blk)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 _NEG = -1e30
 
 
@@ -68,8 +70,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0, q_offset: int = 0,
                     q_blk: int = 128, k_blk: int = 512,
-                    interpret: bool = True) -> jax.Array:
-    """q [B,H,Sq,hd], k/v [B,K,Skv,hd] (GQA) -> [B,H,Sq,hd]."""
+                    interpret: bool | None = None) -> jax.Array:
+    """q [B,H,Sq,hd], k/v [B,K,Skv,hd] (GQA) -> [B,H,Sq,hd].
+
+    ``interpret=None`` -> compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     B, H, Sq, hd = q.shape
     K, Skv = k.shape[1], k.shape[2]
     G = H // K

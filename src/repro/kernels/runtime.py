@@ -1,0 +1,31 @@
+"""Backend probes shared by the raw kernels and the ``ops`` dispatch.
+
+The ONE definition of "are we on real TPU hardware" — both the
+``kops`` dispatch layer and every raw kernel's ``interpret`` default
+resolve through here, so a direct kernel call on TPU can never land in
+interpret mode by accident (the old ``interpret: bool = True`` default
+silently served the Python-evaluated kernel body on TPU unless every
+call site remembered to flip it).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["on_tpu", "default_interpret", "resolve_interpret"]
+
+
+def on_tpu() -> bool:
+    """True when the default JAX backend is a real TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for raw kernel entry points: compiled
+    Mosaic on TPU, the Python interpreter everywhere else (where a
+    compiled Pallas kernel cannot run at all)."""
+    return not on_tpu()
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> the backend default; an explicit bool wins."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
                 chunk: int, seq: int):
@@ -70,12 +72,15 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
                    static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
              Cm: jax.Array, *, chunk: int = 128,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool | None = None) -> jax.Array:
     """x [B,S,H,hd], dt [B,S,H], A [H], Bm/Cm [B,S,N] -> y [B,S,H,hd].
+
+    ``interpret=None`` -> compiled on TPU, interpreted elsewhere.
 
     Zero initial state (prefill); the single-step decode path stays in
     plain jnp (it is O(1) and memory-trivial).
     """
+    interpret = resolve_interpret(interpret)
     B_, S, H, hd = x.shape
     N = Bm.shape[-1]
     Q = min(chunk, S)

@@ -61,10 +61,12 @@ from repro.serving import (AdmissionMiddleware, ClassifierEngine,
                            ServerConfig, TelemetryMiddleware,
                            bursty_arrivals, canonical_path,
                            poisson_arrivals)
+from repro.launch.compile_cache import enable_compilation_cache
 from repro.telemetry import (NULL_METRICS, NULL_TRACER, CarbonTracker,
-                             EnergyDriftAudit, MetricsRegistry, Tracer,
-                             Tracker, export_observability,
-                             make_measured_source, validate_trace)
+                             CompileWatcher, EnergyDriftAudit,
+                             MetricsRegistry, Tracer, Tracker,
+                             export_observability, make_measured_source,
+                             validate_trace)
 from repro.training import ClassificationData, train_classifier
 
 
@@ -80,6 +82,9 @@ def make_observability(args):
         return NULL_TRACER, NULL_METRICS, None
     audit = EnergyDriftAudit(
         source=make_measured_source(args.energy_source)).start()
+    # compile-time visibility: xla.compile spans + the compile_seconds
+    # gauge (0.0 on a warm start) — how cache hits show up in metrics
+    args._compile_watch = CompileWatcher().install()
     return Tracer(), MetricsRegistry(), audit
 
 
@@ -98,6 +103,9 @@ def finish_observability(args, run, tracer, metrics, audit, *,
     report = audit.stop()
     if metrics.enabled:
         audit.export(metrics)
+    watcher = getattr(args, "_compile_watch", None)
+    if watcher is not None:
+        watcher.export(tracer, metrics)
     if run is not None:
         export_observability(run, tracer=tracer, metrics=metrics,
                             audit=audit)
@@ -488,14 +496,15 @@ def main():
                              "gated", "gated-in-graph", "auto"],
                     default="auto")
     ap.add_argument("--attn-impl",
-                    choices=["xla", "auto", "ref", "pallas"],
-                    default="xla",
+                    choices=["auto", "xla", "ref", "pallas"],
+                    default="auto",
                     help="attention dispatch for --mode generate: "
-                         "'auto' routes attn layers through the "
-                         "repro.kernels flash/flash-decode kernels "
-                         "(Pallas on TPU, jnp oracle elsewhere); "
-                         "'xla' is the chunked-jnp default until the "
-                         "kernels are timed on real TPU")
+                         "'auto' (default) routes attn layers through "
+                         "the repro.kernels flash/flash-decode kernels "
+                         "— compiled Pallas on TPU, the model's einsum "
+                         "path (bitwise = 'xla') elsewhere; 'xla' "
+                         "forces the chunked-jnp path everywhere "
+                         "(parity oracle)")
     ap.add_argument("--kv-block-size", type=int, default=0,
                     help="generate mode: paged KV pool block size in "
                          "rows (0 = contiguous per-slot cache)")
@@ -538,6 +547,12 @@ def main():
                     help="measured-energy reader for the drift audit "
                          "(modelled vs measured joules); the default "
                          "process-time proxy works everywhere")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent JAX compilation-cache directory "
+                         "(cold-start hardening: compiles after the "
+                         "first run become disk reads); default is "
+                         "$JAX_COMPILATION_CACHE_DIR, unset = off, "
+                         "'' = force off")
     ap.add_argument("--runs", default="runs")
     ap.add_argument("--seed", type=int, default=0)
     # fleet mode
@@ -586,6 +601,9 @@ def main():
                          "with-reason (default: the chaos scenario's "
                          "deadline, or none)")
     args = ap.parse_args()
+    cache_dir = enable_compilation_cache(args.compile_cache)
+    if cache_dir:
+        print(f"compilation cache: {cache_dir}")
     if args.chaos:
         args.fleet = True
     if args.chaos_seed is None:

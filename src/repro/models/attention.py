@@ -378,8 +378,9 @@ def paged_gather(cache: KVCache, block_table: jax.Array) -> KVCache:
     """Materialise each slot's logical [B, C, K, hd] view of the pool
     (gather over the block table).  The result is a CONTIGUOUS-layout
     KVCache, so every downstream consumer (``decode_attend``, the
-    flash-decode kernel shim) runs unchanged on it.  The table
-    indexing itself is single-sourced in
+    gather-shim flash-decode path) runs unchanged on it.  The serving
+    hot path no longer needs this — the table-native kernel reads the
+    pool in place — but the table indexing stays single-sourced in
     ``repro.kernels.decode_attention.gather_block_views``."""
     from repro.kernels.decode_attention import gather_block_views
     C = cache.pos.shape[1]
@@ -405,8 +406,10 @@ def paged_decode_attend_kernel(q: jax.Array, cache: KVCache,
                                pos: jax.Array, window: int = 0,
                                impl: str = "auto") -> jax.Array:
     """One-token paged attention through the block-table-aware
-    ``kops.paged_decode_attention`` shim (flash-decode kernel on TPU,
-    jnp oracle elsewhere)."""
+    ``kops.paged_decode_attention`` dispatch: the TABLE-NATIVE
+    flash-decode kernel on TPU (block table scalar-prefetched, pool
+    read in place), the jnp oracle elsewhere; ``impl="shim"`` keeps
+    the materialised-gather parity oracle reachable."""
     from repro.kernels import ops as kops
     B = q.shape[0]
     pos = jnp.asarray(pos, jnp.int32)

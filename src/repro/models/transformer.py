@@ -28,6 +28,7 @@ from repro.models import moe as moe_mod
 from repro.models import nn
 from repro.models import rglru as rglru_mod
 from repro.models import ssd as ssd_mod
+from repro.kernels.runtime import on_tpu
 
 
 # ---------------------------------------------------------------------------
@@ -280,12 +281,19 @@ def _attn_mix(cfg: ModelConfig, kind: str, p: dict, x: jax.Array, *,
     slot's block-table row."""
     window = cfg.window if kind == "local_attn" else 0
     rd = int(cfg.head_dim * cfg.rope_pct)
-    # kernel dispatch (cfg.attn_impl != "xla"): the fused flash /
-    # flash-decode kernels — Pallas on TPU, jnp oracle on CPU.  The
+    # kernel dispatch: ``attn_impl="auto"`` resolves HERE, not inside
+    # kops — on TPU it routes through the fused flash / flash-decode
+    # kernels; elsewhere the model keeps its own einsum path, bitwise-
+    # identical to ``attn_impl="xla"``.  That invariant is load-bearing:
+    # the speculative verify chunk (S > 1) has no kernel form, so
+    # spec/non-spec byte parity needs step decode and chunk verify to
+    # share numerics exactly.  Explicit "ref"/"pallas" always take the
+    # kops route (oracle / forced kernel — validation paths).  The
     # prefix-LM mask is jnp-only, so prefix batches stay on the
     # chunked path regardless of the flag.
     use_kernel = (cfg.attn_impl != "xla"
-                  and isinstance(prefix_len, int) and prefix_len == 0)
+                  and isinstance(prefix_len, int) and prefix_len == 0
+                  and (cfg.attn_impl != "auto" or on_tpu()))
     if mode in ("full", "prefill"):
         B, S, _ = x.shape
         positions = jnp.arange(S)

@@ -1,5 +1,6 @@
 from repro.telemetry.carbon import (CarbonTracker,
                                     GRID_INTENSITY_KG_PER_KWH)
+from repro.telemetry.compile_watch import CompileWatcher
 from repro.telemetry.drift import (EnergyDriftAudit, MeasuredSource,
                                    NvmlSource, ProcessTimeSource, TpuSource,
                                    make_measured_source)
@@ -12,6 +13,7 @@ from repro.telemetry.trace import (NULL_TRACER, NullTracer, Span, Tracer,
 from repro.telemetry.tracker import Run, Tracker
 
 __all__ = ["CarbonTracker", "GRID_INTENSITY_KG_PER_KWH", "RequestLog",
+           "CompileWatcher",
            "Run", "Tracker",
            "Span", "Tracer", "NullTracer", "NULL_TRACER",
            "WallClock", "VirtualClock",

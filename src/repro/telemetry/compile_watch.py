@@ -1,0 +1,146 @@
+"""XLA compile-time observability: spans + gauges from jax.monitoring.
+
+Cold starts are paid in XLA compiles; with the persistent compilation
+cache (``repro.launch.compile_cache``) most of them become disk reads.
+This watcher makes that visible: it subscribes to JAX's monitoring
+events and exports
+
+  - ``xla.compile`` spans on the ``xla.compile`` resource track (one
+    per backend compile, serialized so the per-resource overlap
+    validator holds — compiles of a single process are effectively
+    serial anyway),
+  - a ``compile_seconds`` gauge (total backend-compile wall seconds —
+    ALWAYS set, 0.0 on a fully warm start, so CI can require it),
+  - ``compile_events`` / ``compile_cache_hits`` counters and a
+    ``compile_saved_seconds`` gauge (time the persistent cache
+    avoided), so a cold vs warm replica is one glance in metrics.json.
+
+jax.monitoring listeners cannot be unregistered, so registration is
+process-global and one-shot; watchers hand themselves the ACTIVE role
+for their lifetime (``install()`` … ``export()``).  Events arriving
+with no active watcher are dropped — exactly the untraced fast path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_CACHE_HIT_EVENT = "/jax/compilation_cache/cache_retrieval_time_sec"
+_SAVED_EVENT = "/jax/compilation_cache/compile_time_saved_sec"
+
+_LOCK = threading.Lock()
+_REGISTERED = False
+_ACTIVE: Optional["CompileWatcher"] = None
+
+
+def _listener(event: str, duration: float, **kwargs: Any) -> None:
+    w = _ACTIVE
+    if w is not None:
+        w._record(event, duration)
+
+
+def _ensure_registered() -> None:
+    global _REGISTERED
+    with _LOCK:
+        if _REGISTERED:
+            return
+        import jax.monitoring
+        jax.monitoring.register_event_duration_secs_listener(_listener)
+        _REGISTERED = True
+
+
+class CompileWatcher:
+    """Collects compile events for one observed run.
+
+    ``install()`` makes this the process's active watcher; ``export``
+    writes spans/gauges and releases the role.  Uses wall-clock time —
+    compile events are real host work even under virtual-clock sims,
+    so they get their own resource track rather than riding a sim
+    clock they never ran on."""
+
+    def __init__(self) -> None:
+        # (end_wall_time, duration, event) tuples
+        self._events: List[Tuple[float, float, str]] = []
+        self._installed = False
+
+    def install(self) -> "CompileWatcher":
+        global _ACTIVE
+        _ensure_registered()
+        with _LOCK:
+            _ACTIVE = self
+        self._installed = True
+        return self
+
+    def _record(self, event: str, duration: float) -> None:
+        if event in (_COMPILE_EVENT, _CACHE_HIT_EVENT, _SAVED_EVENT):
+            with _LOCK:
+                self._events.append((time.time(), float(duration), event))
+
+    # -- accessors ---------------------------------------------------------
+
+    def _of(self, kind: str) -> List[Tuple[float, float]]:
+        with _LOCK:
+            return [(t, d) for (t, d, e) in self._events if e == kind]
+
+    @property
+    def compile_seconds(self) -> float:
+        return sum(d for _, d in self._of(_COMPILE_EVENT))
+
+    @property
+    def compile_count(self) -> int:
+        return len(self._of(_COMPILE_EVENT))
+
+    @property
+    def cache_hits(self) -> int:
+        return len(self._of(_CACHE_HIT_EVENT))
+
+    @property
+    def saved_seconds(self) -> float:
+        return sum(d for _, d in self._of(_SAVED_EVENT))
+
+    # -- export ------------------------------------------------------------
+
+    def export(self, tracer: Any = None, metrics: Any = None) -> dict:
+        """Emit spans + gauges and release the active-watcher role.
+
+        The gauges are set unconditionally (0.0 on a warm start) so a
+        required-gauge CI check can pin ``compile_seconds`` across all
+        launch modes."""
+        global _ACTIVE
+        if tracer is not None and getattr(tracer, "enabled", True):
+            # serialize on the resource track: a listener reports
+            # (end_time, duration); overlapping reconstructions are
+            # clamped forward so the per-resource overlap check holds
+            last_end = 0.0
+            for end, dur in sorted(self._of(_COMPILE_EVENT)):
+                start = max(end - dur, last_end)
+                end = max(end, start)
+                tracer.span("xla.compile", start, end,
+                            resource="xla.compile", seconds=dur)
+                last_end = end
+        if metrics is not None and getattr(metrics, "enabled", True):
+            metrics.gauge("compile_seconds",
+                          "total XLA backend-compile wall seconds "
+                          "this run (0 = fully warm start)"
+                          ).set(self.compile_seconds)
+            metrics.gauge("compile_saved_seconds",
+                          "compile seconds avoided by the persistent "
+                          "compilation cache").set(self.saved_seconds)
+            c = metrics.counter("compile_events",
+                                "XLA backend compiles this run")
+            if self.compile_count:
+                c.inc(self.compile_count)
+            h = metrics.counter("compile_cache_hits",
+                                "persistent-compilation-cache hits")
+            if self.cache_hits:
+                h.inc(self.cache_hits)
+        with _LOCK:
+            if _ACTIVE is self:
+                _ACTIVE = None
+        self._installed = False
+        return {"compile_seconds": self.compile_seconds,
+                "compile_count": self.compile_count,
+                "cache_hits": self.cache_hits,
+                "saved_seconds": self.saved_seconds}

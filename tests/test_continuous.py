@@ -333,6 +333,26 @@ def test_paged_parity_with_contiguous_across_refills():
     assert stats["prefill_calls"] >= 3           # several refill waves
 
 
+def test_paged_native_kernel_token_parity_end_to_end():
+    """The table-native paged flash-decode kernel (attn_impl="pallas",
+    interpret mode on CPU) must produce byte-identical greedy tokens
+    to the default dispatch through a full DecodeSession serve —
+    refills, block tables, trash-block masking and all."""
+    cfg = _paged(_smoke_cfg())
+    params = tfm.init_lm(cfg, KEY)
+    mk = _seeded_workload(cfg, n=4)
+    r_ref = mk()
+    ContinuousBatchingEngine(cfg, params, n_slots=2, max_seq=32,
+                             sync_every=2).serve(r_ref, prompt_len=8)
+    r_nat = mk()
+    stats = ContinuousBatchingEngine(
+        cfg.replace(attn_impl="pallas"), params, n_slots=2, max_seq=32,
+        sync_every=2).serve(r_nat, prompt_len=8)
+    assert [r.generated for r in r_nat] == [r.generated for r in r_ref]
+    assert all(r.done for r in r_nat)
+    assert stats["mode"] == "paged"
+
+
 def test_paged_parity_with_eos_waves():
     """EOS early-stops — mid-decode and straight out of prefill — must
     free blocks and keep token parity with the contiguous oracle."""

@@ -153,26 +153,19 @@ def test_decode_attention_ring_buffer():
                                rtol=3e-5, atol=3e-5)
 
 
-def test_paged_decode_attention_shim_matches_contiguous():
-    """The block-table shim must reproduce the contiguous kernel
-    bit-for-bit in math terms: scatter a contiguous cache into
-    shuffled pool blocks and compare both the Pallas shim and the ops
-    ref dispatch against the contiguous reference."""
-    B, H, K, hd, bs, mb = 2, 4, 2, 16, 8, 4
-    C = mb * bs
+def _scatter_to_pool(k, v, bs, mb, seed=0, trash_fill=0.0):
+    """Scatter a contiguous [B, K, C, hd] cache into shuffled pool
+    blocks.  Returns (k_pool, v_pool, table) with pool block 0 kept as
+    the trash block (filled with ``trash_fill`` so any accidental
+    attend to it is loud, not silently zero)."""
+    B, K, C, hd = k.shape
+    assert C == mb * bs
     NB = 1 + B * mb                      # block 0 = trash
-    ks = jax.random.split(jax.random.PRNGKey(7), 3)
-    q = jax.random.normal(ks[0], (B, H, hd))
-    k = jax.random.normal(ks[1], (B, K, C, hd))
-    v = jax.random.normal(ks[2], (B, K, C, hd))
-    kv_pos = jnp.broadcast_to(jnp.arange(C), (B, C))
-    kv_pos = kv_pos.at[:, C - 6:].set(-1)          # unwritten tail
-    cur = jnp.full((B,), C - 1)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     perm = rng.permutation(np.arange(1, NB))
     table = np.zeros((B, mb), np.int32)
-    k_pool = np.zeros((NB, bs, K, hd), np.float32)
-    v_pool = np.zeros((NB, bs, K, hd), np.float32)
+    k_pool = np.full((NB, bs, K, hd), trash_fill, np.float32)
+    v_pool = np.full((NB, bs, K, hd), trash_fill, np.float32)
     for b in range(B):
         for j in range(mb):
             blk = int(perm[b * mb + j])
@@ -180,17 +173,151 @@ def test_paged_decode_attention_shim_matches_contiguous():
             sl = np.s_[b, :, j * bs:(j + 1) * bs]
             k_pool[blk] = np.asarray(k[sl]).transpose(1, 0, 2)
             v_pool[blk] = np.asarray(v[sl]).transpose(1, 0, 2)
+    return jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(table)
+
+
+def _paged_case(B=2, H=4, K=2, hd=16, bs=8, mb=4, tail_empty=6, seed=7):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    C = mb * bs
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, K, C, hd))
+    v = jax.random.normal(ks[2], (B, K, C, hd))
+    kv_pos = jnp.broadcast_to(jnp.arange(C), (B, C))
+    if tail_empty:
+        kv_pos = kv_pos.at[:, C - tail_empty:].set(-1)   # unwritten tail
+    cur = jnp.full((B,), C - tail_empty - 1)
+    kp, vp, table = _scatter_to_pool(k, v, bs, mb, seed=seed,
+                                     trash_fill=1e3)
+    return q, k, v, kp, vp, table, kv_pos, cur
+
+
+def test_paged_decode_attention_shim_matches_contiguous():
+    """The block-table gather shim must reproduce the contiguous
+    kernel bit-for-bit in math terms: scatter a contiguous cache into
+    shuffled pool blocks and compare both the Pallas shim and the ops
+    ref dispatch against the contiguous reference.  k_blk=16 != bs=8
+    deliberately exercises the shim's re-chunking (and the contiguous
+    kernel's S % k_blk padding when the extent is ragged)."""
+    q, k, v, kp, vp, table, kv_pos, cur = _paged_case()
     orf = ref.decode_attention(q, k, v, kv_pos, cur)
-    o_shim = dak.paged_decode_attention(
-        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
-        jnp.asarray(table), kv_pos, cur, k_blk=16)
+    o_shim = dak.paged_decode_attention_shim(
+        q, kp, vp, table, kv_pos, cur, k_blk=16)
     o_ops = ops.paged_decode_attention(
-        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
-        jnp.asarray(table), kv_pos, cur, impl="ref")
+        q, kp, vp, table, kv_pos, cur, impl="ref")
     np.testing.assert_allclose(np.array(o_shim), np.array(orf),
                                rtol=3e-5, atol=3e-5)
     np.testing.assert_allclose(np.array(o_ops), np.array(orf),
                                rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("win", [0, 11])
+def test_paged_native_byte_identical_to_shim(win):
+    """The table-native kernel must be BYTE-identical to the gather
+    shim at matched chunking (k_blk == block size): same online-
+    softmax schedule, same float accumulation order.  This is the
+    property the CI smoke gate pins; trash block 0 is filled with 1e3
+    so an index_map bug shows up as a huge error, not a rounding
+    blip."""
+    q, k, v, kp, vp, table, kv_pos, cur = _paged_case()
+    bs = kp.shape[1]
+    o_nat = dak.paged_decode_attention(q, kp, vp, table, kv_pos, cur,
+                                       window=win)
+    o_shim = dak.paged_decode_attention_shim(
+        q, kp, vp, table, kv_pos, cur, window=win, k_blk=bs)
+    assert bool(jnp.all(o_nat == o_shim))
+    # and close to the contiguous oracle (different chunking — not
+    # byte-identical, but tight in f32)
+    orf = ref.decode_attention(q, k, v, kv_pos, cur, window=win)
+    np.testing.assert_allclose(np.array(o_nat), np.array(orf),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_native_ragged_partial_table():
+    """Ragged slots: each slot maps a different number of blocks; the
+    unmapped table entries stay 0 (trash) and their rows must never be
+    attended — validity rides entirely on kv_pos."""
+    q, k, v, kp, vp, table, kv_pos, cur = _paged_case(tail_empty=0)
+    B, C = kv_pos.shape
+    bs = kp.shape[1]
+    lens = np.array([5, 27])              # slot 0 uses 1 block, slot 1 all 4
+    kv_pos = np.full((B, C), -1, np.int32)
+    for b in range(B):
+        kv_pos[b, :lens[b]] = np.arange(lens[b])
+    kv_pos = jnp.asarray(kv_pos)
+    cur = jnp.asarray(lens - 1, dtype=jnp.int32)
+    # point slot 0's unused table entries at the trash block, as the
+    # pool allocator does for never-reserved blocks
+    table = np.asarray(table).copy()
+    table[0, 1:] = 0
+    table = jnp.asarray(table)
+    o_nat = dak.paged_decode_attention(q, kp, vp, table, kv_pos, cur)
+    o_shim = dak.paged_decode_attention_shim(
+        q, kp, vp, table, kv_pos, cur, k_blk=bs)
+    assert bool(jnp.all(o_nat == o_shim))
+    assert bool(jnp.all(jnp.isfinite(o_nat)))
+    # oracle on the contiguous view with the same masking
+    orf = ref.decode_attention(q, k, v, kv_pos, cur)
+    np.testing.assert_allclose(np.array(o_nat), np.array(orf),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 3), g=st.integers(1, 2), k=st.integers(1, 2),
+       mb=st.integers(1, 4), win=st.sampled_from([0, 7]),
+       seed=st.integers(0, 99))
+def test_paged_native_property(b, g, k, mb, win, seed):
+    """Native == shim byte-identically, and both track the oracle,
+    for random pool geometries, ragged lengths, and windows."""
+    H = g * k
+    q, kc, vc, kp, vp, table, kv_pos, cur = _paged_case(
+        B=b, H=H, K=k, hd=8, bs=4, mb=mb, tail_empty=0, seed=seed)
+    C = kv_pos.shape[1]
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(1, C + 1, size=b)
+    pos = np.full((b, C), -1, np.int32)
+    for i in range(b):
+        pos[i, :lens[i]] = np.arange(lens[i])
+    pos = jnp.asarray(pos)
+    cur = jnp.asarray(lens - 1, dtype=jnp.int32)
+    o_nat = dak.paged_decode_attention(q, kp, vp, table, pos, cur,
+                                       window=win)
+    o_shim = dak.paged_decode_attention_shim(
+        q, kp, vp, table, pos, cur, window=win, k_blk=int(kp.shape[1]))
+    assert bool(jnp.all(o_nat == o_shim))
+    orf = ref.decode_attention(q, kc, vc, pos, cur, window=win)
+    np.testing.assert_allclose(np.array(o_nat), np.array(orf),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_gather_block_views_rejects_ragged_extent():
+    """Regression: n_ctx % bs != 0 used to silently truncate the tail
+    rows; it must raise with the offending shapes instead."""
+    kp = jnp.zeros((5, 8, 2, 4))
+    vp = jnp.zeros((5, 8, 2, 4))
+    table = jnp.zeros((2, 2), jnp.int32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        dak.gather_block_views(kp, vp, table, 12)
+    with pytest.raises(ValueError, match="maps only"):
+        dak.gather_block_views(kp, vp, table, 24)
+    q = jnp.zeros((2, 4, 4))
+    with pytest.raises(ValueError, match="not a multiple"):
+        dak.paged_decode_attention(q, kp, vp, table,
+                                   jnp.zeros((2, 12), jnp.int32),
+                                   jnp.zeros((2,), jnp.int32))
+
+
+def test_interpret_default_tracks_backend():
+    """interpret=None resolves through the shared runtime helper:
+    interpreted off-TPU, compiled on TPU — a direct kernel call can
+    never land in interpret mode on real hardware."""
+    from repro.kernels import runtime
+    assert runtime.resolve_interpret(None) == (not runtime.on_tpu())
+    assert runtime.resolve_interpret(True) is True
+    assert runtime.resolve_interpret(False) is False
+    # and the kernels accept the None default end-to-end
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 64))
+    h, _, _ = entk.entropy_stats(x, v_blk=32)
+    assert h.shape == (2,)
 
 
 # ---------------------------------------------------------------------------

@@ -103,10 +103,13 @@ def test_multi_step_decode_consistency():
 def test_attn_impl_kernel_dispatch_matches_xla():
     """cfg.attn_impl routes attention through the repro.kernels
     dispatch (flash / flash-decode); in f32 the kernel oracle must
-    match the chunked XLA path tightly across all three modes."""
+    match the chunked XLA path tightly across all three modes.
+    ("ref" forces the kops oracle route — "auto" off-TPU short-
+    circuits to the xla path and would not exercise the dispatch.)"""
     cfg = get_smoke_config("stablelm-3b").replace(remat=False,
-                                                  dtype="float32")
-    cfg_k = cfg.replace(attn_impl="auto")
+                                                  dtype="float32",
+                                                  attn_impl="xla")
+    cfg_k = cfg.replace(attn_impl="ref")
     params = tfm.init_lm(cfg, KEY)
     toks = jax.random.randint(jax.random.PRNGKey(7), (2, 9), 0,
                               cfg.vocab)
@@ -129,13 +132,41 @@ def test_attn_impl_kernel_dispatch_windowed():
     """Sliding-window masking must agree between the kernel path and
     the blocked local-attention path."""
     cfg = get_smoke_config("stablelm-3b").replace(
-        remat=False, dtype="float32", window=4)
+        remat=False, dtype="float32", window=4, attn_impl="xla")
     params = tfm.init_lm(cfg, KEY)
     toks = jax.random.randint(jax.random.PRNGKey(8), (2, 12), 0,
                               cfg.vocab)
     f1, _ = tfm.forward(cfg, params, toks)
-    f2, _ = tfm.forward(cfg.replace(attn_impl="auto"), params, toks)
+    f2, _ = tfm.forward(cfg.replace(attn_impl="ref"), params, toks)
     assert _err(f1, f2) < 2e-4
+
+
+def test_attn_impl_auto_is_bitwise_xla_off_tpu():
+    """Off-TPU, "auto" resolves at the model layer to the einsum path
+    — BITWISE equal to "xla".  Load-bearing for speculative decoding:
+    the verify chunk has no kernel form, so spec/non-spec byte parity
+    requires step decode and chunk verify to share numerics exactly."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("off-TPU invariant")
+    cfg = get_smoke_config("stablelm-3b").replace(remat=False,
+                                                  attn_impl="xla")
+    cfg_a = cfg.replace(attn_impl="auto")
+    params = tfm.init_lm(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 9), 0,
+                              cfg.vocab)
+    f1, _ = tfm.forward(cfg, params, toks)
+    f2, _ = tfm.forward(cfg_a, params, toks)
+    assert jnp.all(f1 == f2)
+    c1 = tfm.init_cache(cfg, 2, 32, dtype=jnp.float32)
+    c2 = tfm.init_cache(cfg_a, 2, 32, dtype=jnp.float32)
+    p1, c1 = tfm.prefill(cfg, params, toks[:, :8], c1)
+    p2, c2 = tfm.prefill(cfg_a, params, toks[:, :8], c2)
+    assert jnp.all(p1 == p2)
+    d1, _ = tfm.decode_step(cfg, params, toks[:, 8:9], c1,
+                            jnp.array([8, 8]))
+    d2, _ = tfm.decode_step(cfg_a, params, toks[:, 8:9], c2,
+                            jnp.array([8, 8]))
+    assert jnp.all(d1 == d2)
 
 
 def test_local_attention_equals_windowed_full():

@@ -317,3 +317,49 @@ def test_export_observability_lands_artifacts(tmp_path):
         rep = json.load(f)
     assert rep["source"] == "process-time"
     assert math.isfinite(rep["modelled_j"])
+
+
+# ---------------------------------------------------------------------------
+# compile watcher (xla.compile spans + compile_seconds gauge)
+# ---------------------------------------------------------------------------
+
+def test_compile_watcher_exports_spans_and_gauges():
+    """A real jit compile inside the watch window must land as a
+    serialized xla.compile span and the compile_seconds gauge; the
+    gauge is ALWAYS set (0.0 on a warm start) so CI can require it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.telemetry import CompileWatcher
+
+    w = CompileWatcher().install()
+    # a fresh shape forces one backend compile under this watcher
+    jax.jit(lambda x: (x * 2 + 1).sum())(jnp.ones((17, 23))).block_until_ready()
+    tracer, metrics = Tracer(), MetricsRegistry()
+    report = w.export(tracer, metrics)
+    assert report["compile_count"] >= 1
+    spans = tracer.find("xla.compile")
+    assert len(spans) == report["compile_count"]
+    assert validate_trace(tracer.spans) == []        # serialized, no overlap
+    snap = metrics.snapshot()
+    assert snap["gauges"]["compile_seconds"][0]["value"] > 0.0
+
+    # warm start: nothing compiles, gauge still present at 0.0
+    w2 = CompileWatcher().install()
+    m2 = MetricsRegistry()
+    w2.export(None, m2)
+    snap2 = m2.snapshot()
+    assert snap2["gauges"]["compile_seconds"][0]["value"] == 0.0
+
+
+def test_compile_watcher_events_dropped_when_inactive():
+    """Compile events with no active watcher are dropped — the
+    untraced fast path records nothing."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.telemetry import CompileWatcher
+
+    w = CompileWatcher()                    # NOT installed
+    jax.jit(lambda x: x - 3.5)(jnp.ones((5, 31))).block_until_ready()
+    assert w.compile_count == 0 and w.compile_seconds == 0.0
